@@ -1,0 +1,51 @@
+"""Kernel-level microbench: CPU wall time of the jnp reference paths (the
+Pallas kernels are TPU-target; interpret mode is correctness-only) plus the
+analytic FLOPs each kernel's tile schedule would execute.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.graph import chung_lu_powerlaw, to_ell
+from repro.kernels import ops
+
+
+def main():
+    rows = []
+    g = chung_lu_powerlaw(n=16_384, avg_out_deg=12, seed=0)
+    ell = to_ell(g, K=16)
+    x = jnp.ones((ell.n_rows,), jnp.float32)
+    spmv = jax.jit(lambda v: ops.spmv(ell, v, impl="ref"))
+    us = timeit(lambda: spmv(x))
+    rows.append(("kernel/spmv_ref_n16k", us,
+                 f"nnz={g.nnz} spill={ell.spill_nnz}"))
+
+    dest = jnp.asarray(np.random.default_rng(0).integers(0, 4096, 100_000),
+                       dtype=jnp.int32)
+    fc = jax.jit(lambda d: ops.frog_count(d, 4096, impl="ref"))
+    rows.append(("kernel/frog_count_ref_100k", timeit(lambda: fc(dest)),
+                 "bins=4096"))
+
+    B, Hq, Hkv, S, D = 1, 8, 2, 2048, 64
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((B, Hq, S, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), jnp.float32)
+    att = jax.jit(lambda a, b, c: ops.attention(a, b, c, causal=True,
+                                                impl="jnp_flash"))
+    us = timeit(lambda: att(q, k, v), repeats=1)
+    flops = 4 * B * Hq * S * S * D / 2
+    rows.append(("kernel/flash_jnp_2k", us, f"flops={flops:.2e}"))
+    att_w = jax.jit(lambda a, b, c: ops.attention(
+        a, b, c, causal=True, window=256, impl="jnp_flash"))
+    us_w = timeit(lambda: att_w(q, k, v), repeats=1)
+    rows.append(("kernel/flash_jnp_2k_window256", us_w,
+                 f"banded_speedup={us / max(us_w, 1):.2f}x"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

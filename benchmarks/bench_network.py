@@ -1,0 +1,33 @@
+"""Paper Figure 8 — network bytes vs number of initial walkers (linear) and
+vs p_s (proportional): the cost-model view validated against the engine's
+measured counters in tests/test_multidevice.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.engine.netcost import frogwild_bytes_model, pagerank_bytes_model
+
+
+def main():
+    rows = []
+    S, t = 20, 4
+    byN = {}
+    for N in (100_000, 200_000, 400_000, 800_000):
+        b = frogwild_bytes_model(N, t, 0.15, 0.7, S).total
+        byN[N] = b
+        rows.append((f"fig8/bytes_N{N}", b / 1e6, "unit=MB ps=0.7"))
+    # linearity check: doubling N doubles bytes
+    ratio = byN[800_000] / byN[400_000]
+    rows.append(("fig8/linearity_800k_over_400k", 0.0, f"ratio={ratio:.3f}"))
+    for ps in (1.0, 0.7, 0.4, 0.1):
+        b = frogwild_bytes_model(800_000, t, 0.15, ps, S).total
+        rows.append((f"fig8/bytes_ps{ps}", b / 1e6, "unit=MB N=800k"))
+    pr = pagerank_bytes_model(65_536, 2, S).total
+    rows.append(("fig8/bytes_graphlab_2iter", pr / 1e6, "unit=MB"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

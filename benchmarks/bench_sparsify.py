@@ -1,0 +1,39 @@
+"""Paper Figure 5 — uniform sparsification baseline vs FrogWild.
+
+Keep each edge w.p. q, run 2 PR iterations; FrogWild should win on time at
+comparable accuracy (paper: "significantly worse running time, comparable
+accuracy").
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import bench_graph, bench_pi, emit, timeit
+from repro.core import (FrogWildConfig, frogwild, frogwild_run,
+                        normalized_mass_captured, power_iteration,
+                        sparsify_uniform)
+
+
+def main():
+    g = bench_graph()
+    pi = bench_pi()
+    rows = []
+    for q in (0.5, 0.3, 0.1):
+        gs = sparsify_uniform(g, keep_prob=q, seed=1)
+        us = timeit(jax.jit(lambda: power_iteration(gs, num_iters=2)),
+                    repeats=1)
+        est = power_iteration(gs, num_iters=2)
+        m = float(normalized_mass_captured(est, pi, 100))
+        rows.append((f"fig5/sparsify_q{q}_2iter", us, f"mass100={m:.4f}"))
+    cfg = FrogWildConfig(num_frogs=800_000, num_steps=4, p_s=0.7,
+                         erasure="channel", num_shards=20)
+    fn = jax.jit(lambda k: frogwild_run(g, cfg, k).counts)
+    us = timeit(lambda: fn(jax.random.PRNGKey(0)), repeats=1)
+    res = frogwild(g, cfg, seed=0)
+    m = float(normalized_mass_captured(res.pi_hat, pi, 100))
+    rows.append(("fig5/frogwild_ps0.7", us, f"mass100={m:.4f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

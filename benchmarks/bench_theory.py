@@ -1,0 +1,40 @@
+"""Theorem 1 validation — empirical captured-mass error vs the analytic ε.
+
+For each (N, p_s): ε_emp = μ_k(π) − μ_k(π̂) must lie below the bound (4)
+with p_∩ from Theorem 2. (The bound is loose — what matters is it HOLDS.)
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import bench_graph, bench_pi, emit
+from repro.core import FrogWildConfig, frogwild, theory
+from repro.core.metrics import mass_captured
+
+
+def main():
+    g = bench_graph()
+    pi = bench_pi()
+    k, t, delta = 50, 8, 0.1
+    pi_inf = float(pi.max())
+    _, idx = jax.lax.top_k(pi, k)
+    mu_opt = float(pi[idx].sum())
+    rows = []
+    for N in (100_000, 800_000):
+        for p_s in (1.0, 0.4):
+            cfg = FrogWildConfig(num_frogs=N, num_steps=t, p_s=p_s,
+                                 erasure="channel", num_shards=20)
+            res = frogwild(g, cfg, seed=0)
+            mu_hat = float(mass_captured(res.pi_hat, pi, k))
+            eps_emp = mu_opt - mu_hat
+            p_cap = theory.p_cap_bound(g.n, t, pi_inf, 0.15)
+            eps_bound = theory.epsilon_bound(0.15, t, k, delta, N, p_s, p_cap)
+            holds = eps_emp <= eps_bound
+            rows.append((f"thm1/N{N}_ps{p_s}", 0.0,
+                         f"eps_emp={eps_emp:.4f} eps_bound={eps_bound:.4f} "
+                         f"holds={holds}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

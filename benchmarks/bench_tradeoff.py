@@ -1,0 +1,34 @@
+"""Paper Figures 3/4 — accuracy vs running time vs network bytes.
+
+Sweeps iterations t and p_s at fixed N=800k, reporting (time, bytes,
+mass@100) triples — the tradeoff frontier the paper plots as circles.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import bench_graph, bench_pi, emit, timeit
+from repro.core import FrogWildConfig, frogwild, frogwild_run, normalized_mass_captured
+from repro.engine.netcost import frogwild_bytes_model
+
+
+def main():
+    g = bench_graph()
+    pi = bench_pi()
+    rows = []
+    for t in (2, 4, 8):
+        for p_s in (1.0, 0.4):
+            cfg = FrogWildConfig(num_frogs=800_000, num_steps=t, p_s=p_s,
+                                 erasure="channel", num_shards=20)
+            fn = jax.jit(lambda k, c=cfg: frogwild_run(g, c, k).counts)
+            us = timeit(lambda: fn(jax.random.PRNGKey(0)), repeats=1)
+            res = frogwild(g, cfg, seed=0)
+            m = float(normalized_mass_captured(res.pi_hat, pi, 100))
+            by = frogwild_bytes_model(800_000, t, 0.15, p_s, 20).total
+            rows.append((f"fig3/t{t}_ps{p_s}", us,
+                         f"mass100={m:.4f} bytes_MB={by/1e6:.2f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Paper Figure 6 — accuracy & time vs number of walkers N and iterations t.
+
+Paper finding: 800K frogs / 4 iterations is the sweet spot on BOTH
+LiveJournal and Twitter (slow N growth with graph size — Remark 6).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import bench_graph, bench_pi, emit, timeit
+from repro.core import (FrogWildConfig, frogwild, frogwild_run,
+                        normalized_mass_captured)
+
+
+def main():
+    g = bench_graph()
+    pi = bench_pi()
+    rows = []
+    for N in (50_000, 200_000, 800_000):
+        cfg = FrogWildConfig(num_frogs=N, num_steps=4, p_s=1.0)
+        res = frogwild(g, cfg, seed=0)
+        m = float(normalized_mass_captured(res.pi_hat, pi, 100))
+        fn = jax.jit(lambda k, c=cfg: frogwild_run(g, c, k).counts)
+        us = timeit(lambda: fn(jax.random.PRNGKey(0)), repeats=1)
+        rows.append((f"fig6/N{N}_t4", us, f"mass100={m:.4f}"))
+    for t in (1, 2, 4, 8):
+        cfg = FrogWildConfig(num_frogs=800_000, num_steps=t, p_s=1.0)
+        res = frogwild(g, cfg, seed=0)
+        m = float(normalized_mass_captured(res.pi_hat, pi, 100))
+        rows.append((f"fig6/N800000_t{t}", 0.0, f"mass100={m:.4f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

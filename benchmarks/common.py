@@ -1,0 +1,49 @@
+"""Shared benchmark utilities: cached graphs, timing, CSV rows.
+
+Every bench emits ``name,us_per_call,derived`` rows (run.py prints them).
+Graph scale is CPU-sized (LiveJournal stand-in: 65k vertices / ~1M edges);
+the full-scale numbers live in the dry-run/roofline tables.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+from repro.configs.frogwild_graphs import LIVEJOURNAL_BENCH
+from repro.core import power_iteration
+from repro.graph import chung_lu_powerlaw
+
+Row = Tuple[str, float, str]
+
+
+@functools.lru_cache(maxsize=2)
+def bench_graph(n: int = LIVEJOURNAL_BENCH.n):
+    return chung_lu_powerlaw(
+        n=n, avg_out_deg=LIVEJOURNAL_BENCH.avg_out_deg,
+        theta=LIVEJOURNAL_BENCH.theta, seed=LIVEJOURNAL_BENCH.seed)
+
+
+@functools.lru_cache(maxsize=2)
+def bench_pi(n: int = LIVEJOURNAL_BENCH.n):
+    return power_iteration(bench_graph(n), num_iters=60)
+
+
+def timeit(fn: Callable, repeats: int = 3) -> float:
+    """Median wall time (µs) of ``fn()`` with ready-blocking."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(rows: List[Row]) -> List[Row]:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows

@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Run:
+  PYTHONPATH=src python -m benchmarks.run [--only fig2]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    bench_accuracy_topk,
+    bench_iteration_cost,
+    bench_kernels,
+    bench_network,
+    bench_sparsify,
+    bench_theory,
+    bench_tradeoff,
+    bench_walkers,
+)
+
+ALL = {
+    "fig1_iteration_cost": bench_iteration_cost,
+    "fig2_accuracy_topk": bench_accuracy_topk,
+    "fig3_tradeoff": bench_tradeoff,
+    "fig5_sparsify": bench_sparsify,
+    "fig6_walkers": bench_walkers,
+    "fig8_network": bench_network,
+    "thm1_theory": bench_theory,
+    "kernels": bench_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on bench name")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, mod in ALL.items():
+        if args.only and args.only not in name:
+            continue
+        print(f"# --- {name} ---", file=sys.stderr)
+        mod.main()
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

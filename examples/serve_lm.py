@@ -1,0 +1,22 @@
+"""Serve a small LM with batched requests through the fixed-slot scheduler.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch gemma3-4b
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--requests", type=int, default=6)
+    args = ap.parse_args()
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--arch", args.arch, "--smoke",
+           "--requests", str(args.requests)]
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

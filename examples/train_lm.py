@@ -1,0 +1,26 @@
+"""Train a small LM (any assigned architecture, reduced config) on the
+synthetic stream with checkpoint/restart — kill it mid-run and relaunch to
+see crash recovery.
+
+  PYTHONPATH=src python examples/train_lm.py --arch llama3.2-1b --steps 60
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--partial-sync", type=float, default=1.0)
+    args = ap.parse_args()
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", args.arch, "--smoke", "--steps", str(args.steps),
+           "--ckpt-dir", f"/tmp/repro_ckpt_{args.arch}",
+           "--partial-sync", str(args.partial_sync)]
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

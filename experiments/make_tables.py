@@ -1,0 +1,91 @@
+"""Builds the EXPERIMENTS.md §Dry-run / §Roofline tables from the per-cell
+JSONs in experiments/dryrun/."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ORDER_ARCHS = [
+    "h2o-danube-3-4b", "starcoder2-7b", "gemma3-4b", "llama3.2-1b",
+    "llava-next-mistral-7b", "olmoe-1b-7b", "phi3.5-moe-42b-a6.6b",
+    "whisper-medium", "rwkv6-3b", "zamba2-1.2b",
+]
+
+
+def load(d="experiments/dryrun"):
+    cells = {}
+    for f in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(f))
+        cells[(r["arch"], r["shape"], r["mesh"])] = r
+    return cells
+
+
+def fmt_bytes(b):
+    return f"{b / 1e9:.2f}"
+
+
+def roofline_table(cells, mesh="single"):
+    """The single-pod roofline table (per brief) — 40 rows."""
+    lines = [
+        "| arch | shape | live GB/chip | fits | compute ms | memory ms | "
+        "collective ms | dominant | useful | MFU* |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ORDER_ARCHS:
+        for s in ORDER_SHAPES:
+            r = cells.get((a, s, mesh))
+            if r is None:
+                continue
+            if "skipped" in r:
+                lines.append(f"| {a} | {s} | — | — | — | — | — | SKIP | — | — |")
+                continue
+            ro = r["roofline"]
+            m = r["memory"]
+            lines.append(
+                f"| {a} | {s} | {fmt_bytes(m['live_bytes_per_device'])} | "
+                f"{'✓' if m['fits_hbm'] else '✗'} | "
+                f"{ro['compute_s'] * 1e3:.1f} | {ro['memory_s'] * 1e3:.1f} | "
+                f"{ro['collective_s'] * 1e3:.1f} | {ro['dominant']} | "
+                f"{ro['useful_flops_ratio']:.2f} | {ro['hw_util']:.3f} |")
+    return "\n".join(lines)
+
+
+def multipod_table(cells):
+    lines = [
+        "| arch | shape | single live GB | multi live GB | multi compiles |",
+        "|---|---|---|---|---|",
+    ]
+    for a in ORDER_ARCHS:
+        for s in ORDER_SHAPES:
+            r1 = cells.get((a, s, "single"))
+            r2 = cells.get((a, s, "multi"))
+            if r1 is None or r2 is None:
+                continue
+            if "skipped" in r1:
+                lines.append(f"| {a} | {s} | SKIP | SKIP | — |")
+                continue
+            ok = "✓" if r2.get("ok") else "✗"
+            g1 = fmt_bytes(r1["memory"]["live_bytes_per_device"])
+            g2 = (fmt_bytes(r2["memory"]["live_bytes_per_device"])
+                  if r2.get("ok") else "—")
+            lines.append(f"| {a} | {s} | {g1} | {g2} | {ok} |")
+    return "\n".join(lines)
+
+
+def summary(cells):
+    ok = sum(1 for r in cells.values() if r.get("ok"))
+    skip = sum(1 for r in cells.values() if "skipped" in r)
+    fail = len(cells) - ok - skip
+    return f"{ok} lowered+compiled OK, {skip} skipped (justified), {fail} failed"
+
+
+if __name__ == "__main__":
+    cells = load(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")
+    print("## summary\n", summary(cells), "\n")
+    print("## roofline (single-pod, 256 chips)\n")
+    print(roofline_table(cells))
+    print("\n## multi-pod (512 chips)\n")
+    print(multipod_table(cells))

@@ -1,0 +1,140 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb harness — lowers baseline + named variants of the three
+chosen cells through the identical dry-run path and records roofline deltas.
+
+  PYTHONPATH=src python experiments/perf_hillclimb.py [--cell rwkv|starcoder|engine]
+"""
+import argparse
+import json
+import time
+
+from repro.launch.dryrun import run_cell  # noqa: E402  (sets XLA_FLAGS first)
+
+OUT = "experiments/perf"
+
+
+def show(r, base=None):
+    if not r.get("ok"):
+        print("   FAILED:", r.get("error", "")[:200])
+        return
+    ro = r["roofline"]
+    line = (f"   compute={ro['compute_s']*1e3:10.1f}ms "
+            f"memory={ro['memory_s']*1e3:12.1f}ms "
+            f"collective={ro['collective_s']*1e3:10.1f}ms "
+            f"dominant={ro['dominant']:10s} "
+            f"live={r['memory']['live_bytes_per_device']/1e9:6.2f}GB")
+    if base and base.get("ok"):
+        b = base["roofline"]
+        dom = b["dominant"]
+        key = {"compute": "compute_s", "memory": "memory_s",
+               "collective": "collective_s"}[dom]
+        line += f"  Δ(dominant {dom}): {b[key] / max(ro[key], 1e-12):.2f}×"
+    print(line)
+
+
+def cell_rwkv():
+    print("== rwkv6-3b × train_4k (worst roofline fraction: XLA-lowered "
+          "recurrence is HBM-catastrophic) ==")
+    print(" baseline (paper-faithful scan recurrence):")
+    base = run_cell("rwkv6-3b", "train_4k", "single", OUT, tag="baseline")
+    show(base)
+    print(" V1: shard recurrence state value-dim over model axis "
+          "(hypothesis: state read+write dominates HBM → ~10× on memory "
+          "term; communication-free since per-step ops contract key dim):")
+    v1 = run_cell("rwkv6-3b", "train_4k", "single", OUT,
+                  overrides={"ssm_state_sharding": True}, tag="v1_state_tp")
+    show(v1, base)
+    return base, v1
+
+
+def cell_starcoder():
+    print("== starcoder2-7b × prefill_32k (36 heads don't divide TP=16 → "
+          "baseline replicates attention over the model axis) ==")
+    print(" baseline:")
+    base = run_cell("starcoder2-7b", "prefill_32k", "single", OUT,
+                    tag="baseline")
+    show(base)
+    print(" V1: context-parallel attention over KV (ring-lite, shard_map) "
+          "(hypothesis: attention logits dominate HBO traffic; sharding KV "
+          "1/16 cuts both memory and compute terms several-fold):")
+    v1 = run_cell("starcoder2-7b", "prefill_32k", "single", OUT,
+                  overrides={"attn_impl": "cp_kv"}, tag="v1_cp_kv")
+    show(v1, base)
+    print(" V2: + bf16 softmax probs (halve the p·V read traffic):")
+    v2 = run_cell("starcoder2-7b", "prefill_32k", "single", OUT,
+                  overrides={"attn_impl": "cp_kv", "attn_bf16_probs": True},
+                  tag="v2_bf16_probs")
+    show(v2, base)
+    return base, v1, v2
+
+
+def cell_engine():
+    """The paper-representative cell: FrogWild on the Twitter-scale spec."""
+    from repro.configs.frogwild_graphs import TWITTER_FULL
+    from repro.engine.gas import (DistributedGraph, EngineConfig,
+                                  channel_capacity, frogwild_dryrun_lowered)
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.mesh import make_vertex_mesh
+
+    print("== engine frogwild × twitter-full (the paper's own workload) ==")
+    mesh = make_vertex_mesh(multi_pod=False)
+    S = mesh.devices.size
+    n = TWITTER_FULL.n
+    sz = ((-(-n // S) + 7) // 8) * 8
+    nnz = ((int(TWITTER_FULL.avg_out_deg * sz * 2) + 7) // 8) * 8
+    dg = DistributedGraph(num_shards=S, shard_size=sz, n=n, nnz_max=nnz)
+
+    results = {}
+    for tag, ecfg in (
+        ("baseline_ps0.7_cap4", EngineConfig(num_frogs=800_000, num_steps=4,
+                                             p_s=0.7, capacity_factor=4.0)),
+        ("v1_cap2", EngineConfig(num_frogs=800_000, num_steps=4, p_s=0.7,
+                                 capacity_factor=2.0)),
+        ("ps1.0_cap4", EngineConfig(num_frogs=800_000, num_steps=4, p_s=1.0,
+                                    capacity_factor=4.0)),
+        ("ps0.4_cap4", EngineConfig(num_frogs=800_000, num_steps=4, p_s=0.4,
+                                    capacity_factor=4.0)),
+    ):
+        t0 = time.time()
+        lowered = frogwild_dryrun_lowered(dg, ecfg, mesh)
+        compiled = lowered.compile()
+        cost = analyze_hlo(compiled.as_text())
+        mem = compiled.memory_analysis()
+        live = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+        cap = channel_capacity(ecfg, S)
+        res = {
+            "tag": tag, "chips": S, "ok": True,
+            "capacity_per_channel": cap,
+            "collective_bytes_per_device": cost.collective_bytes,
+            "collective_breakdown": cost.collective_breakdown,
+            "live_bytes_per_device": live,
+            "compile_s": round(time.time() - t0, 1),
+        }
+        os.makedirs(OUT, exist_ok=True)
+        with open(os.path.join(OUT, f"engine_{tag}.json"), "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"  {tag:22s} cap/channel={cap:5d} "
+              f"a2a_bytes={cost.collective_bytes/1e6:8.2f}MB/dev "
+              f"live={live/1e9:.3f}GB")
+        results[tag] = res
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all",
+                    choices=["all", "rwkv", "starcoder", "engine"])
+    args = ap.parse_args()
+    if args.cell in ("all", "rwkv"):
+        cell_rwkv()
+    if args.cell in ("all", "starcoder"):
+        cell_starcoder()
+    if args.cell in ("all", "engine"):
+        cell_engine()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Fault-tolerance substrate: atomic async checkpoints + elastic restore."""
+from repro.checkpoint.checkpointer import (
+    Checkpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "Checkpointer",
+    "latest_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

@@ -1,0 +1,19 @@
+"""Assigned-architecture configs (exact shapes from the public sources in the
+brief) + input-shape registry + reduced smoke configs."""
+from repro.configs.registry import (
+    ARCHS,
+    SHAPES,
+    get_config,
+    input_specs,
+    reduced_config,
+    shape_applicable,
+)
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "get_config",
+    "input_specs",
+    "reduced_config",
+    "shape_applicable",
+]

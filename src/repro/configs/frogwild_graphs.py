@@ -1,0 +1,21 @@
+"""Graph workload configs for the paper's own experiments (the datasets are
+offline-synthesized at the paper's scales; see graph/generators.py)."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphConfig:
+    name: str
+    n: int                       # vertices
+    avg_out_deg: float
+    theta: float = 2.2           # PageRank power-law exponent (paper §2.3)
+    seed: int = 0
+
+
+# Benchmark-scale stand-ins (CPU-runnable) for the paper's datasets.
+LIVEJOURNAL_BENCH = GraphConfig("livejournal-bench", n=65_536, avg_out_deg=14.4)
+TWITTER_BENCH = GraphConfig("twitter-bench", n=262_144, avg_out_deg=16.0)
+
+# Full-scale specs used ONLY for dry-run lowering (no data materialized).
+LIVEJOURNAL_FULL = GraphConfig("livejournal", n=4_847_571, avg_out_deg=14.2)
+TWITTER_FULL = GraphConfig("twitter", n=41_652_230, avg_out_deg=35.3)

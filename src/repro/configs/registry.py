@@ -1,0 +1,175 @@
+"""Architecture & input-shape registry.
+
+``input_specs(arch, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every model input of the (architecture × shape) cell — the
+dry-run lowers from these without allocating anything.
+
+Shape semantics (assignment brief):
+  * train_4k     — train_step   (tokens+labels, seq 4096, global batch 256)
+  * prefill_32k  — serve prefill (forward, seq 32768, batch 32)
+  * decode_32k   — serve_step    (ONE new token, KV cache of 32768, batch 128)
+  * long_500k    — serve_step    (one token, 524288 cache, batch 1) —
+                   sub-quadratic archs only (``ModelConfig.subquadratic``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+_ARCH_MODULES = {
+    "h2o-danube-3-4b": "repro.configs.h2o_danube3_4b",
+    "starcoder2-7b": "repro.configs.starcoder2_7b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "llama3.2-1b": "repro.configs.llama32_1b",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "zamba2-1.2b": "repro.configs.zamba2_1b",
+}
+ARCHS = tuple(_ARCH_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """(applicable?, reason-if-not). DESIGN.md §4 records the skips."""
+    spec = SHAPES[shape]
+    if spec.name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention arch — 500k decode needs "
+                       "sub-quadratic attention (skip per brief)")
+    if cfg.family == "encdec" and spec.name == "long_500k":
+        return False, "enc-dec ASR: 30s audio yields no 500k decode context"
+    return True, ""
+
+
+def _token_specs(cfg: ModelConfig, B: int, S: int, with_labels: bool
+                 ) -> Dict[str, jax.ShapeDtypeStruct]:
+    i32 = jnp.int32
+    S_text = S - cfg.num_prefix_embeddings if cfg.family == "vlm" else S
+    out: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((B, S_text), i32)
+    }
+    if with_labels:
+        out["labels"] = jax.ShapeDtypeStruct((B, S_text), i32)
+    if cfg.family == "vlm":
+        out["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_prefix_embeddings, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        out["encoder_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return out
+
+
+def input_specs(
+    arch_or_cfg, shape: str
+) -> Tuple[str, Dict[str, Any]]:
+    """Returns (kind, specs). ``specs`` for train/prefill is the batch dict;
+    for decode it is {"tokens": [B] i32, "state": DecodeState-shaped specs,
+    "params": param specs} (the cache is an input to serve_step)."""
+    cfg = (arch_or_cfg if isinstance(arch_or_cfg, ModelConfig)
+           else get_config(arch_or_cfg))
+    spec = SHAPES[shape]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} × {shape} not applicable: {why}")
+    B, S = spec.global_batch, spec.seq_len
+
+    if spec.kind in ("train", "prefill"):
+        return spec.kind, _token_specs(cfg, B, S, with_labels=spec.kind == "train")
+
+    # decode: one token in, cache of length S as carried state.
+    from repro.models.transformer import init_decode_state, init_params
+
+    params_specs = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    enc = (jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+           if cfg.family == "encdec" else None)
+    state_specs = jax.eval_shape(
+        lambda p, e: init_decode_state(p, cfg, B, S, encoder_frames=e),
+        params_specs, enc,
+    )
+    return "decode", {
+        "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "state": state_specs,
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    from repro.models.transformer import init_params
+
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ----------------------------------------------------------------------------
+# reduced configs for CPU smoke tests
+# ----------------------------------------------------------------------------
+
+def reduced_config(cfg: ModelConfig) -> ModelConfig:
+    """Same family/wiring, toy width: one forward/train step runs on CPU."""
+    kw: Dict[str, Any] = dict(
+        name=cfg.name + "-smoke",
+        family=cfg.family,
+        num_layers=min(cfg.num_layers, 4),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=max(1, min(cfg.num_kv_heads, 4) // max(1, cfg.num_heads // 4)),
+        d_ff=256,
+        vocab_size=512,
+        head_dim=32,
+        rope_theta=cfg.rope_theta,
+        tie_embeddings=cfg.tie_embeddings,
+        dtype="float32",
+    )
+    # keep the kv:q ratio flavour
+    if cfg.num_kv_heads == cfg.num_heads:
+        kw["num_kv_heads"] = 4
+    else:
+        kw["num_kv_heads"] = 2
+    if cfg.sliding_window is not None:
+        kw["sliding_window"] = 8
+    if cfg.global_every is not None:
+        kw["global_every"] = 2
+        kw["num_layers"] = 4
+    if cfg.family == "moe":
+        kw.update(num_experts=8, num_experts_per_tok=min(
+            cfg.num_experts_per_tok, 2), d_ff=64, moe_capacity_factor=2.0)
+    if cfg.family in ("ssm", "hybrid"):
+        kw.update(ssm_head_dim=32, ssm_state=16)
+        kw["num_kv_heads"] = 4
+    if cfg.family == "hybrid":
+        kw.update(shared_attn_every=2, num_layers=4)
+    if cfg.family == "encdec":
+        kw.update(encoder_layers=2, encoder_seq=16, num_layers=2)
+        kw["num_kv_heads"] = 4
+    if cfg.family == "vlm":
+        kw.update(num_prefix_embeddings=4)
+    return ModelConfig(**kw)

@@ -1,0 +1,34 @@
+"""Core of the reproduction: the FrogWild! algorithm, its estimator, exact
+PageRank baselines, accuracy metrics, analytic bounds and the generalized
+partial-synchronization primitive."""
+from repro.core.frogwild import FrogWildConfig, FrogWildResult, frogwild, frogwild_run
+from repro.core.metrics import (
+    exact_identification,
+    mass_captured,
+    normalized_mass_captured,
+)
+from repro.core.pagerank import power_iteration, reduced_iteration_baseline
+from repro.core.partial_sync import (
+    partial_all_to_all,
+    partial_channel_mask,
+    partial_psum,
+)
+from repro.core.sparsify import sparsify_uniform
+from repro.core import theory
+
+__all__ = [
+    "FrogWildConfig",
+    "FrogWildResult",
+    "frogwild",
+    "frogwild_run",
+    "exact_identification",
+    "mass_captured",
+    "normalized_mass_captured",
+    "power_iteration",
+    "reduced_iteration_baseline",
+    "partial_all_to_all",
+    "partial_channel_mask",
+    "partial_psum",
+    "sparsify_uniform",
+    "theory",
+]

@@ -1,0 +1,162 @@
+"""FrogWild! walker-centric oracle (paper §2.2, Appendix A).
+
+This is the *semantic reference* for the whole system: N discrete walkers
+("frogs") start uniformly at random, take at most ``t`` steps following the
+original transition matrix P, die with probability ``p_T`` at each apply()
+(⇒ Geometric(p_T) lifespans truncated at t — Process 15, provably identical
+in distribution to walking the Google matrix Q, Lemma 16), and are tallied
+where they stop. The estimator π̂ = c/N (Definition 5).
+
+Partial synchronization is modelled by **edge erasures** (Definition 8):
+at every step a random subset of edges is disabled and frogs redraw uniformly
+among surviving out-edges of their vertex (the "blocking walk", Process 19).
+Three erasure models are implemented:
+
+* ``none``           — p_s = 1, the plain process.
+* ``independent``    — Example 9: every edge erased i.i.d. w.p. 1 − p_s.
+                       With "at least one out-edge per node" repair
+                       (Example 10) so walkers are never lost.
+* ``channel``        — edges grouped by destination shard; one coin per
+                       (vertex, destination-shard) pair. This is exactly what
+                       the distributed engine does (and what the paper's
+                       GraphLab patch does per mirror machine); Theorem 1's
+                       analysis covers it through Definition 8.
+
+Everything is pure JAX (lax.scan over steps) and runs on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.csr import CSRGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class FrogWildConfig:
+    num_frogs: int = 100_000          # N  (paper uses 800K on 41.6M-vertex Twitter)
+    num_steps: int = 4                # t  (paper: good results with 3–4 iterations)
+    p_T: float = 0.15                 # teleport/death probability
+    p_s: float = 1.0                  # synchronization probability
+    erasure: str = "none"             # none | independent | channel
+    num_shards: int = 16              # channel model: destination shards
+
+
+@dataclasses.dataclass
+class FrogWildResult:
+    counts: jnp.ndarray               # int32[n] — c(i), frogs stopped at i
+    pi_hat: jnp.ndarray               # f32[n]   — counts / N (Definition 5)
+    num_frogs: int
+
+
+def _kept_mask(
+    key: jax.Array,
+    g: CSRGraph,
+    dst_shard: jnp.ndarray,
+    cfg: FrogWildConfig,
+) -> jnp.ndarray:
+    """Per-edge keep mask for one superstep under the configured model."""
+    if cfg.erasure == "independent":
+        return jax.random.bernoulli(key, cfg.p_s, shape=g.col_idx.shape)
+    elif cfg.erasure == "channel":
+        # One coin per (source vertex, destination shard): all edges of v
+        # going to shard s share the coin — the engine/mirror granularity.
+        coins = jax.random.bernoulli(
+            key, cfg.p_s, shape=(g.n, cfg.num_shards)
+        )
+        src = _edge_src(g)
+        return coins[src, dst_shard]
+    raise ValueError(f"unknown erasure model {cfg.erasure!r}")
+
+
+def _edge_src(g: CSRGraph) -> jnp.ndarray:
+    """int32[nnz] source vertex of each edge (computed once per graph)."""
+    # repeat is cheap relative to the walk; avoid caching device arrays.
+    return jnp.repeat(
+        jnp.arange(g.n, dtype=jnp.int32), g.out_deg, total_repeat_length=g.nnz
+    )
+
+
+def frogwild_run(
+    g: CSRGraph,
+    cfg: FrogWildConfig,
+    key: jax.Array,
+) -> FrogWildResult:
+    """Runs the FrogWild! process and returns the stop-counter estimator."""
+    n, nnz = g.n, g.nnz
+    N, t = cfg.num_frogs, cfg.num_steps
+    row_ptr = g.row_ptr
+    col_idx = g.col_idx
+    deg = g.out_deg
+    use_erasure = cfg.erasure != "none" and cfg.p_s < 1.0
+    if use_erasure:
+        src = _edge_src(g)
+        dst_shard = (col_idx.astype(jnp.int32) //
+                     max(1, -(-n // cfg.num_shards)))  # ceil-div shard size
+    else:
+        src = dst_shard = None
+
+    k_init, k_loop = jax.random.split(key)
+    pos0 = jax.random.randint(k_init, (N,), 0, n, dtype=jnp.int32)
+    alive0 = jnp.ones((N,), dtype=bool)
+    counts0 = jnp.zeros((n,), dtype=jnp.int32)
+
+    def plain_move(kmove: jax.Array, pos: jnp.ndarray) -> jnp.ndarray:
+        slot = jax.random.randint(kmove, (N,), 0, 1 << 30, dtype=jnp.int32)
+        slot = slot % deg[pos]
+        return col_idx[row_ptr[pos] + slot]
+
+    def erasure_move(kmove: jax.Array, pos: jnp.ndarray) -> jnp.ndarray:
+        k_mask, k_force, k_draw = jax.random.split(kmove, 3)
+        kept = _kept_mask(k_mask, g, dst_shard, cfg)
+        csum = jnp.cumsum(kept.astype(jnp.int32))            # inclusive
+        kept_before = jnp.concatenate([jnp.zeros((1,), jnp.int32), csum])
+        # surviving out-degree per frog's vertex
+        kv = kept_before[row_ptr[pos + 1]] - kept_before[row_ptr[pos]]
+        # Example 10 repair: one forced edge per vertex when all erased.
+        forced_slot = jax.random.randint(k_force, (n,), 0, 1 << 30, jnp.int32) % deg
+        forced_edge = row_ptr[jnp.arange(n)] + forced_slot
+        # rank among kept edges of the frog's vertex
+        u = jax.random.randint(k_draw, (N,), 0, 1 << 30, jnp.int32)
+        u = u % jnp.maximum(kv, 1)
+        target = kept_before[row_ptr[pos]] + u + 1           # 1-indexed rank
+        edge = jnp.searchsorted(csum, target, side="left").astype(jnp.int32)
+        edge = jnp.where(kv > 0, edge, forced_edge[pos])
+        return col_idx[edge]
+
+    def step(carry, step_key):
+        pos, alive, counts = carry
+        k_die, k_move = jax.random.split(step_key)
+        # apply(): each arriving frog dies w.p. p_T and is tallied here.
+        die = jax.random.bernoulli(k_die, cfg.p_T, shape=(N,)) & alive
+        counts = counts.at[pos].add(die.astype(jnp.int32))
+        alive = alive & ~die
+        # scatter(): survivors traverse one (non-erased) out-edge.
+        nxt = erasure_move(k_move, pos) if use_erasure else plain_move(k_move, pos)
+        pos = jnp.where(alive, nxt, pos)
+        return (pos, alive, counts), None
+
+    keys = jax.random.split(k_loop, t)
+    (pos, alive, counts), _ = jax.lax.scan(step, (pos0, alive0, counts0), keys)
+    # cut-off at t: all surviving frogs halt and are tallied (Process 15).
+    counts = counts.at[pos].add(alive.astype(jnp.int32))
+    pi_hat = counts.astype(jnp.float32) / N
+    return FrogWildResult(counts=counts, pi_hat=pi_hat, num_frogs=N)
+
+
+# jitted entry point (static graph arrays close over the trace)
+def frogwild(
+    g: CSRGraph, cfg: FrogWildConfig, seed: int = 0
+) -> FrogWildResult:
+    key = jax.random.PRNGKey(seed)
+    run = jax.jit(lambda k: _as_tuple(frogwild_run(g, cfg, k)))
+    counts, pi_hat = run(key)
+    return FrogWildResult(counts=counts, pi_hat=pi_hat, num_frogs=cfg.num_frogs)
+
+
+def _as_tuple(r: FrogWildResult):
+    return r.counts, r.pi_hat

@@ -1,0 +1,43 @@
+"""Top-k accuracy metrics (paper Definition 2 and §2.1.1).
+
+* ``mass_captured``: μ_k(v) = π(argmax_{|S|=k} v(S)) — the true PageRank mass
+  of the k vertices the estimate ranks highest. Maximized by π itself.
+* ``exact_identification``: |top_k(v) ∩ top_k(π)| / k.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def topk_set(v: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Indices of the k largest entries of v (ties broken by lower index,
+    matching jax.lax.top_k semantics)."""
+    _, idx = jnp.lax.top_k(v, k) if hasattr(jnp, "lax") else (None, None)
+    return idx
+
+
+def mass_captured(estimate: jnp.ndarray, pi: jnp.ndarray, k: int) -> jnp.ndarray:
+    """μ_k(estimate) per paper Definition 2."""
+    import jax
+
+    _, idx = jax.lax.top_k(estimate, k)
+    return pi[idx].sum()
+
+
+def normalized_mass_captured(estimate: jnp.ndarray, pi: jnp.ndarray, k: int) -> jnp.ndarray:
+    """μ_k(estimate) / μ_k(π) ∈ [0, 1] — the paper's plotted accuracy."""
+    import jax
+
+    _, idx_opt = jax.lax.top_k(pi, k)
+    opt = pi[idx_opt].sum()
+    return mass_captured(estimate, pi, k) / opt
+
+
+def exact_identification(estimate: jnp.ndarray, pi: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Fraction of the true top-k list recovered (paper Fig. 2b)."""
+    import jax
+
+    _, a = jax.lax.top_k(estimate, k)
+    _, b = jax.lax.top_k(pi, k)
+    hits = (a[:, None] == b[None, :]).any(axis=1)
+    return hits.mean()

@@ -1,0 +1,137 @@
+"""Partial synchronization as a first-class, mesh-generic primitive.
+
+This is the paper's `p_s` knob (randomized mirror synchronization in
+PowerGraph) lifted to JAX collectives (DESIGN.md §3). All functions are meant
+to be called **inside shard_map** with a named mesh axis.
+
+Modes
+-----
+* ``unbiased``        — each shard's contribution enters the collective with
+  probability p_s, scaled by 1/p_s. E[partial_psum(x)] = psum(x). This is the
+  exact analogue of the paper's Binomial(K, 1/(d·p_s)) scatter marginal.
+* ``error_feedback``  — contributions are masked *without* rescaling and the
+  unsent part accumulates in a local residual that is added next round
+  (gradient-compression-style). Biased per-step, but the bias telescopes:
+  after T rounds the total synced mass equals the total produced mass minus
+  one residual. Used for DP gradient sync where per-step unbiasedness matters
+  less than variance.
+
+Straggler note: dropping a shard's contribution for one round is
+*mathematically identical* to that shard being a straggler whose message is
+not waited for — Theorem 1 prices this in, which is why partial sync doubles
+as straggler mitigation (README §fault-tolerance).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _shard_coin(key: jax.Array, p_s: float, axis_name: str) -> jax.Array:
+    """One Bernoulli(p_s) coin per shard along ``axis_name``; independent
+    across shards (key folded with the shard index) and across calls."""
+    idx = jax.lax.axis_index(axis_name)
+    return jax.random.bernoulli(jax.random.fold_in(key, idx), p_s)
+
+
+def partial_psum(
+    x,
+    axis_name: str,
+    p_s: float,
+    key: jax.Array,
+    mode: str = "unbiased",
+    residual=None,
+):
+    """Randomly-synchronized all-reduce over ``axis_name``.
+
+    Args:
+      x: pytree of arrays (per-shard contribution).
+      p_s: synchronization probability. 1.0 short-circuits to plain psum.
+      key: PRNG key, identical on all shards (folded per shard internally).
+      mode: "unbiased" | "error_feedback".
+      residual: pytree like x (required for error_feedback), carried state.
+
+    Returns:
+      unbiased:        psum of masked-and-rescaled contributions.
+      error_feedback:  (psum of masked contributions, new_residual).
+    """
+    if p_s >= 1.0:
+        out = jax.lax.psum(x, axis_name)
+        return out if mode == "unbiased" else (out, residual)
+
+    coin = _shard_coin(key, p_s, axis_name)
+    if mode == "unbiased":
+        scale = coin.astype(jnp.float32) / p_s
+        masked = jax.tree.map(lambda a: a * scale.astype(a.dtype), x)
+        return jax.lax.psum(masked, axis_name)
+    elif mode == "error_feedback":
+        if residual is None:
+            residual = jax.tree.map(jnp.zeros_like, x)
+        msg = jax.tree.map(lambda a, r: a + r, x, residual)
+        sent = jax.tree.map(lambda m: m * coin.astype(m.dtype), msg)
+        new_residual = jax.tree.map(lambda m, s: m - s, msg, sent)
+        # No rescaling: the residual mechanism already conserves mass —
+        # over T rounds Σ out = T·psum(x) − final residual. Rescaling by
+        # n/n_synced would double-compensate (≈1/p_s long-run bias).
+        out = jax.lax.psum(sent, axis_name)
+        return out, new_residual
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def partial_channel_mask(
+    key: jax.Array,
+    p_s: float,
+    axis_name: str,
+    num_shards: int,
+    force_one: bool = True,
+) -> jax.Array:
+    """bool[num_shards] — per-destination-channel coins for this shard.
+
+    This is the engine's mirror-sync granularity: entry d says whether this
+    shard's messages to shard d are synchronized this superstep. With
+    ``force_one`` (Example 10, "at least one out-edge per node") one uniform
+    channel is forced open when all coins come up tails, so no shard is ever
+    fully cut off.
+    """
+    me = jax.lax.axis_index(axis_name)
+    k = jax.random.fold_in(key, me)
+    k_coin, k_force = jax.random.split(k)
+    coins = jax.random.bernoulli(k_coin, p_s, shape=(num_shards,))
+    if p_s >= 1.0:
+        return jnp.ones((num_shards,), dtype=bool)
+    if force_one:
+        forced = jax.random.randint(k_force, (), 0, num_shards)
+        all_closed = ~coins.any()
+        coins = coins | (all_closed & (jnp.arange(num_shards) == forced))
+    return coins
+
+
+def partial_all_to_all(
+    x: jnp.ndarray,
+    axis_name: str,
+    p_s: float,
+    key: jax.Array,
+    num_shards: int,
+    compensate: bool = True,
+) -> Tuple[jnp.ndarray, jax.Array]:
+    """Channel-masked all-to-all along leading axis (length ``num_shards``).
+
+    Each (sender → receiver) channel is open with probability p_s; closed
+    channels transmit zeros (which XLA still moves, but the engine's cost
+    model and a real sparse transport count only open channels — see
+    engine/netcost.py). Open payloads are scaled 1/p_s when ``compensate``.
+
+    Returns (received block-stack, open-channel mask used).
+    """
+    coins = partial_channel_mask(key, p_s, axis_name, num_shards)
+    scale = (coins.astype(x.dtype) / (p_s if compensate else 1.0)) if p_s < 1.0 else (
+        coins.astype(x.dtype)
+    )
+    shaped = scale.reshape((num_shards,) + (1,) * (x.ndim - 1))
+    masked = x * shaped
+    out = jax.lax.all_to_all(
+        masked[:, None], axis_name, split_axis=0, concat_axis=0, tiled=False
+    )[:, 0]
+    return out, coins

@@ -1,0 +1,29 @@
+"""Uniform graph sparsification baseline (paper §2.4, Figure 5).
+
+The natural heuristic FrogWild is compared against: independently delete each
+edge with probability ``r = 1 − q``, then run a couple of power iterations on
+the sparsified graph. (The paper notes no known sparsifier preserves
+PageRank; this uniform one is the cheap strawman and FrogWild beats it on
+time at comparable accuracy.)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph, build_csr
+
+
+def sparsify_uniform(g: CSRGraph, keep_prob: float, seed: int = 0) -> CSRGraph:
+    """Keeps each edge i.i.d. with probability ``keep_prob`` (q in Fig. 5).
+
+    Vertices that lose all out-edges are repaired by ``build_csr``'s dangling
+    fix (mirrors GraphLab needing d_out > 0).
+    """
+    if not (0.0 < keep_prob <= 1.0):
+        raise ValueError("keep_prob must be in (0, 1]")
+    gn = g.to_numpy()
+    rng = np.random.default_rng(seed)
+    keep = rng.random(g.nnz) < keep_prob
+    deg = gn.out_deg.astype(np.int64)
+    src = np.repeat(np.arange(g.n, dtype=np.int64), deg)
+    return build_csr(g.n, src[keep], gn.col_idx[keep].astype(np.int64))

@@ -1,0 +1,4 @@
+"""Data pipeline: deterministic synthetic LM stream + graph workloads."""
+from repro.data.tokens import SyntheticTokens
+
+__all__ = ["SyntheticTokens"]

@@ -1,0 +1,51 @@
+"""Deterministic synthetic LM token stream.
+
+Step-indexed PRNG (threefry fold-in of the step number) means the pipeline
+is **stateless-resumable**: after a restart from checkpoint step k, batch k+1
+is bit-identical — no shard iterators to persist. Per-host sharding slices
+the global batch by process index (single-process here, but the arithmetic
+is the multi-host one).
+
+The stream is a learnable mixture (repeated n-grams + structural tokens),
+not uniform noise, so smoke-training runs show real loss decrease.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticTokens:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    num_patterns: int = 64          # learnable n-gram pool size
+    process_index: int = 0
+    process_count: int = 1
+
+    @property
+    def local_batch(self) -> int:
+        assert self.global_batch % self.process_count == 0
+        return self.global_batch // self.process_count
+
+    def _pattern_table(self) -> jnp.ndarray:
+        key = jax.random.PRNGKey(self.seed)
+        return jax.random.randint(
+            key, (self.num_patterns, 8), 2, self.vocab_size, dtype=jnp.int32)
+
+    def batch(self, step: int) -> Dict[str, jnp.ndarray]:
+        """Returns {"tokens": [B, S], "labels": [B, S]} for this host."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed ^ 0x5EED), step)
+        key = jax.random.fold_in(key, self.process_index)
+        B, S = self.local_batch, self.seq_len
+        table = self._pattern_table()
+        n_slots = (S + 1 + 7) // 8
+        pat = jax.random.randint(key, (B, n_slots), 0, self.num_patterns,
+                                 dtype=jnp.int32)
+        seq = table[pat].reshape(B, n_slots * 8)[:, : S + 1]
+        return {"tokens": seq[:, :-1], "labels": seq[:, 1:]}

@@ -1,0 +1,17 @@
+"""Distribution substrate: sharding rules, pipeline parallelism, elastic
+resharding."""
+from repro.distributed.sharding import (
+    MeshAxes,
+    batch_pspec,
+    decode_state_pspecs,
+    param_pspecs,
+    with_rules,
+)
+
+__all__ = [
+    "MeshAxes",
+    "batch_pspec",
+    "decode_state_pspecs",
+    "param_pspecs",
+    "with_rules",
+]

@@ -1,0 +1,87 @@
+"""Trace-time activation-sharding context.
+
+GSPMD propagates parameter shardings well, but drops the batch axis at scan
+boundaries (saved-for-backward residual stacks come out replicated —
+observed: 210 GB/chip for a 1B model). The standard fix is explicit
+``with_sharding_constraint`` on the canonical activation shapes; model code
+stays mesh-agnostic by calling :func:`constrain`, which is a no-op unless
+the launcher opened an :func:`activation_sharding` context around tracing.
+
+Every constraint checks divisibility and silently degrades to replication on
+that axis otherwise (e.g. batch=1 long_500k cells, 36-head attention).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ActivationSharding:
+    mesh: Mesh
+    dp: Tuple[str, ...] = ("data",)
+    tp: str = "model"
+    sp: bool = False      # Megatron sequence parallelism: shard the sequence
+                          # dim of block-boundary activations over the model
+                          # axis (the saved-for-backward stacks shrink 1/tp)
+
+
+_CTX: Optional[ActivationSharding] = None
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, dp: Tuple[str, ...] = ("data",),
+                        tp: str = "model", sp: bool = False):
+    global _CTX
+    old = _CTX
+    _CTX = ActivationSharding(mesh, dp, tp, sp)
+    try:
+        yield _CTX
+    finally:
+        _CTX = old
+
+
+def current() -> Optional[ActivationSharding]:
+    return _CTX
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, tuple):
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axes]
+
+
+def constrain(x, kind: str):
+    """kind: 'btd' (hidden states), 'logits' (…, vocab), 'bt' (per-token),
+    'bh' (attention internals [B, H, …]: heads on the model axis when
+    divisible — None dims in an explicit constraint mean *replicated*, so
+    attention tensors need the head axis spelled out)."""
+    ctx = _CTX
+    if ctx is None:
+        return x
+    dp = ctx.dp if len(ctx.dp) > 1 else ctx.dp[0]
+    dp_size = _axis_size(ctx.mesh, dp)
+    tp_size = ctx.mesh.shape[ctx.tp]
+    spec = [None] * x.ndim
+    if x.ndim and x.shape[0] % dp_size == 0 and x.shape[0] > 0:
+        spec[0] = dp
+    if kind == "logits" and x.shape[-1] % tp_size == 0:
+        spec[-1] = ctx.tp
+    if kind == "bh" and x.ndim >= 2 and x.shape[1] % tp_size == 0:
+        spec[1] = ctx.tp
+    if (kind == "btd" and ctx.sp and x.ndim == 3
+            and x.shape[1] % tp_size == 0):
+        spec[1] = ctx.tp
+    if kind == "state4" and x.ndim == 4 and x.shape[-1] % tp_size == 0:
+        spec[-1] = ctx.tp
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))

@@ -1,0 +1,44 @@
+"""Elastic scaling: move a training state between mesh shapes.
+
+A checkpoint written on mesh A restores onto mesh B (different chip count /
+topology) because checkpoints store *unsharded* host arrays and restore
+re-places them with the target mesh's PartitionSpecs
+(checkpoint/checkpointer.py). This module adds the live-resize path:
+``reshard_state`` re-places an in-memory state onto a new mesh — the
+node-failure / scale-up recovery primitive (lose a pod → rebuild the mesh
+from survivors → reshard → continue).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import MeshAxes, param_pspecs
+from repro.models.config import ModelConfig
+
+
+def reshard_state(state: Any, pspecs: Any, new_mesh: Mesh) -> Any:
+    """device_put every leaf with the new mesh's sharding. Works across any
+    mesh-shape change whose axes still divide the leaf dims (the rules in
+    distributed/sharding.py degrade to replication otherwise)."""
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(new_mesh, s)),
+        state, pspecs,
+    )
+
+
+def reshard_train_state(
+    state: Any, cfg: ModelConfig, new_mesh: Mesh, fsdp: bool = False
+) -> Any:
+    ax = MeshAxes.for_mesh(new_mesh, fsdp=fsdp)
+    pspecs = param_pspecs(cfg, new_mesh, state["params"], ax)
+    out = dict(state)
+    out["params"] = reshard_state(state["params"], pspecs, new_mesh)
+    if "opt" in state:
+        opt = dict(state["opt"])
+        for k in ("m", "v"):
+            opt[k] = reshard_state(state["opt"][k], pspecs, new_mesh)
+        out["opt"] = opt
+    return out

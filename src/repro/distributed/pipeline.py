@@ -1,0 +1,102 @@
+"""GPipe-style pipeline parallelism over a ``stage`` mesh axis.
+
+The third parallelism dimension for >2-pod scales (DESIGN.md §7): layers are
+split into S stages, the batch into M microbatches; activations flow
+stage-to-stage with ``jax.lax.ppermute`` inside a shard_map. The classic
+GPipe schedule runs S + M − 1 ticks with (S−1)/(M+S−1) bubble overhead.
+
+Implementation: every stage runs every tick (SPMD); a tick counter decides
+whether its output is real or bubble, and a rolling input buffer keeps the
+microbatch stream aligned. Stage weights live only on their stage's devices
+(leading stage dim sharded over the axis).
+
+Used by ``examples/pipeline_demo.py`` and tests/test_pipeline.py; the
+production mesh keeps PP optional (axis can be folded into "pod").
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    num_stages: int
+    num_microbatches: int
+    axis_name: str = "stage"
+
+
+def pipeline_forward(
+    stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
+    stage_params: Any,                  # leaves with leading [S, ...]
+    x: jnp.ndarray,                     # [M, mb, ...] microbatched input
+    cfg: PipelineConfig,
+    mesh: Mesh,
+) -> jnp.ndarray:
+    """Runs x through S stages with the GPipe schedule; returns [M, mb, ...]."""
+    S, M = cfg.num_stages, cfg.num_microbatches
+    ax = cfg.axis_name
+    if x.shape[0] != M:
+        raise ValueError(f"x leading dim {x.shape[0]} != microbatches {M}")
+
+    def body(params, xm):
+        params = jax.tree.map(lambda a: a[0], params)   # drop stage dim
+        xm = xm[0]                                      # [M, mb, ...]
+        sid = jax.lax.axis_index(ax)
+        mb_shape = xm.shape[1:]
+        ticks = S + M - 1
+
+        def tick(carry, t):
+            buf, outs = carry
+            # stage 0 feeds microbatch t (if any); others read their buffer.
+            feed = jnp.where(t < M, t, 0)
+            x_in = jnp.where(sid == 0, xm[feed], buf)
+            y = stage_fn(params, x_in)
+            # forward the activation to the next stage
+            nxt = jax.lax.ppermute(
+                y, ax, [(i, (i + 1) % S) for i in range(S)])
+            # last stage commits microbatch (t - (S-1)) when valid
+            mb_idx = t - (S - 1)
+            valid = (mb_idx >= 0) & (sid == S - 1)
+            outs = jax.lax.cond(
+                valid,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.maximum(mb_idx, 0), 0),
+                lambda o: o,
+                outs,
+            )
+            return (nxt, outs), None
+
+        buf0 = jnp.zeros(mb_shape, xm.dtype)
+        buf0 = jax.lax.pcast(buf0, (ax,), to="varying")
+        outs0 = jnp.zeros_like(xm)          # zeros_like(varying) is varying
+        (_, outs), _ = jax.lax.scan(tick, (buf0, outs0), jnp.arange(ticks))
+        # only the last stage holds real outputs; broadcast them to all.
+        outs = jax.lax.psum(
+            jnp.where(sid == S - 1, outs, jnp.zeros_like(outs)), ax)
+        return outs[None]
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(ax), P(ax)),
+        out_specs=P(ax),
+    )
+    # replicate microbatches to every stage (stage dim = leading)
+    x_rep = jnp.broadcast_to(x[None], (S,) + x.shape)
+    out = fn(stage_params, x_rep)
+    return out[0]
+
+
+def split_layers_for_stages(stacked_params: Any, num_stages: int) -> Any:
+    """[L, ...] stacked block params → [S, L/S, ...] per-stage stacks."""
+    def reshape(a):
+        L = a.shape[0]
+        assert L % num_stages == 0, (L, num_stages)
+        return a.reshape(num_stages, L // num_stages, *a.shape[1:])
+
+    return jax.tree.map(reshape, stacked_params)

@@ -1,0 +1,195 @@
+"""Sharding rules: PartitionSpec trees for params, batches and decode state.
+
+Megatron-style tensor parallelism over the ``model`` axis with divisibility-
+aware fallbacks (heads that don't divide the TP degree stay replicated —
+recorded per-arch in the dry-run report), plus optional FSDP: parameter
+*storage* additionally sharded over the ``data`` axis on the first divisible
+dimension; XLA inserts the all-gather (forward) / reduce-scatter (backward)
+— exactly the ZeRO-3 dataflow.
+
+Rules are name-based over the parameter tree:
+  * input-side projections  (wq/wk/wv/w_gate/w_up/…)   → shard output dim
+  * output-side projections (wo/w_down/w_out)          → shard input dim
+  * expert tensors [E, …]                              → shard E (expert par.)
+  * embedding [V, d]                                   → shard V
+  * vectors / norms / small LoRA                       → replicate
+Stacked-layer leading dims (scan-over-layers) are never sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Logical → mesh-axis binding.
+
+    data axes may be a tuple (("pod", "data")) — batch shards over both.
+    """
+    data: Tuple[str, ...] = ("data",)
+    model: str = "model"
+    fsdp: bool = False            # shard param storage over data axes too
+
+    @staticmethod
+    def for_mesh(mesh: Mesh, fsdp: bool = False) -> "MeshAxes":
+        names = mesh.axis_names
+        data = tuple(n for n in names if n in ("pod", "data"))
+        return MeshAxes(data=data or (names[0],), model=names[-1], fsdp=fsdp)
+
+
+# name sets driving the rules
+_IN_SHARD = {  # 2-D [in, out] — shard the output (last) dim
+    "wq", "wk", "wv", "w_gate", "w_up", "w_r", "w_k", "w_v", "w_g",
+    "w_in", "w_in_z", "w_in_x", "kernel",
+}
+_OUT_SHARD = {  # 2-D [in, out] — shard the input (second-to-last) dim
+    "wo", "w_down", "w_out", "w_o",
+}
+_REPLICATE = {
+    "scale", "ln_scale", "norm_scale", "mu", "mu_r", "mu_k", "mu_v", "mu_w",
+    "mu_g", "w0", "u", "dt_bias", "A_log", "D", "conv_w", "w_lora_a",
+    "w_lora_b", "w_in_B", "w_in_C", "w_in_dt", "router",
+}
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= mesh.shape[n]
+        return out
+    return mesh.shape[name]
+
+
+def _leaf_spec(path, leaf, cfg: ModelConfig, mesh: Mesh, ax: MeshAxes,
+               stacked_depth: int) -> P:
+    name = None
+    keys = [p.key for p in path if hasattr(p, "key")]
+    if keys:
+        name = keys[-1]
+    ndim = leaf.ndim
+    tp = mesh.shape[ax.model]
+    dp = _axis_size(mesh, ax.data)
+    spec = [None] * ndim
+
+    def try_set(dim: int, axis) -> bool:
+        size = leaf.shape[dim]
+        if spec[dim] is None and size % _axis_size(mesh, axis) == 0:
+            spec[dim] = axis
+            return True
+        return False
+
+    base = stacked_depth            # leading scan dims stay unsharded
+    if name == "embedding":
+        try_set(0, ax.model)
+    elif name in _REPLICATE:
+        pass
+    elif "w_gate" == name and ndim - base == 3 or (
+            name in ("w_up", "w_down") and ndim - base == 3):
+        # MoE expert stacks [*, E, d, f] — expert parallelism on E
+        if not try_set(base, ax.model):
+            # fall back to sharding the ff dim
+            ff_dim = ndim - 1 if name != "w_down" else ndim - 2
+            try_set(ff_dim, ax.model)
+    elif name in _IN_SHARD and ndim - base == 2:
+        try_set(ndim - 1, ax.model)
+    elif name in _OUT_SHARD and ndim - base == 2:
+        try_set(ndim - 2, ax.model)
+
+    if ax.fsdp:
+        # storage-only: shard the first still-unsharded, divisible dim over
+        # the data axes (ZeRO-3 parameter sharding).
+        for d in range(base, ndim):
+            if spec[d] is None and leaf.shape[d] % dp == 0:
+                spec[d] = ax.data if len(ax.data) > 1 else ax.data[0]
+                break
+    return P(*spec)
+
+
+def _stacked_depth(path) -> int:
+    """blocks/enc_blocks/dec_blocks subtrees carry a leading layer dim."""
+    keys = [p.key for p in path if hasattr(p, "key")]
+    return 1 if any(k in ("blocks", "enc_blocks", "dec_blocks") for k in keys) else 0
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, params_or_specs,
+                 ax: Optional[MeshAxes] = None):
+    """PartitionSpec tree matching the params tree (works on ShapeDtypeStructs)."""
+    ax = ax or MeshAxes.for_mesh(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, cfg, mesh, ax,
+                                      _stacked_depth(path)),
+        params_or_specs,
+    )
+
+
+def batch_pspec(cfg: ModelConfig, mesh: Mesh, batch_specs,
+                ax: Optional[MeshAxes] = None):
+    """Batch dim sharded over the data axes; everything else replicated."""
+    ax = ax or MeshAxes.for_mesh(mesh)
+    data_axis = ax.data if len(ax.data) > 1 else ax.data[0]
+
+    def spec(leaf):
+        s = [None] * leaf.ndim
+        if leaf.ndim >= 1 and leaf.shape[0] % _axis_size(mesh, ax.data) == 0:
+            s[0] = data_axis
+        return P(*s)
+
+    return jax.tree.map(spec, batch_specs)
+
+
+def decode_state_pspecs(cfg: ModelConfig, mesh: Mesh, state_specs,
+                        ax: Optional[MeshAxes] = None):
+    """Decode state: batch dim over data axes; KV-cache *sequence* dim over
+    the model axis (split-KV layout — the memory answer for 32k/500k caches
+    regardless of head divisibility)."""
+    ax = ax or MeshAxes.for_mesh(mesh)
+    data_axis = ax.data if len(ax.data) > 1 else ax.data[0]
+    tp = mesh.shape[ax.model]
+    dp = _axis_size(mesh, ax.data)
+
+    def spec(path, leaf):
+        keys = [p.key for p in path if hasattr(p, "key")]
+        name = keys[-1] if keys else None
+        s = [None] * leaf.ndim
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] % dp == 0:
+            s[0] = data_axis
+        if name in ("k", "v", "k_scale", "v_scale") and leaf.ndim == 4:
+            # [B, Hkv, S, hd|1] — shard cache sequence over model axis
+            if leaf.shape[2] % tp == 0:
+                s[2] = ax.model
+        elif name == "S" and leaf.ndim == 4:
+            # rwkv state [B, H, D, D] — shard heads if divisible
+            if leaf.shape[1] % tp == 0:
+                s[1] = ax.model
+        elif name == "h" and leaf.ndim == 4:
+            # mamba state [B, H, hd, n]
+            if leaf.shape[1] % tp == 0:
+                s[1] = ax.model
+        elif name == "conv_buf" and leaf.ndim == 3:
+            if leaf.shape[2] % tp == 0:
+                s[2] = ax.model
+        elif leaf.ndim == 4 and name not in ("k", "v"):
+            if leaf.shape[1] % tp == 0:
+                s[1] = ax.model
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, state_specs)
+
+
+def with_rules(x, mesh: Mesh, spec_tree):
+    """with_sharding_constraint over a pytree of specs."""
+    return jax.tree.map(
+        lambda a, s: jax.lax.with_sharding_constraint(
+            a, NamedSharding(mesh, s)),
+        x, spec_tree,
+    )

@@ -1,0 +1,31 @@
+"""Distributed GAS engine: the GraphLab-PowerGraph role, on a JAX mesh.
+
+``gas.py`` runs FrogWild! supersteps over a 1-D "vertex" mesh axis with the
+paper's randomized partial synchronization; ``baseline.py`` is the
+distributed GraphLab-PR power iteration it is compared against;
+``netcost.py`` is the wire-byte cost model (what GraphLab's network counters
+measured).
+"""
+from repro.engine.gas import (
+    DistributedGraph,
+    EngineConfig,
+    EngineResult,
+    build_distributed_graph,
+    distributed_frogwild,
+)
+from repro.engine.baseline import distributed_power_iteration
+from repro.engine.netcost import (
+    frogwild_bytes_model,
+    pagerank_bytes_model,
+)
+
+__all__ = [
+    "DistributedGraph",
+    "EngineConfig",
+    "EngineResult",
+    "build_distributed_graph",
+    "distributed_frogwild",
+    "distributed_power_iteration",
+    "frogwild_bytes_model",
+    "pagerank_bytes_model",
+]

@@ -1,0 +1,120 @@
+"""Distributed GraphLab-PR baseline: power iteration on the vertex mesh.
+
+Pull-form PageRank over range-sharded vertices. Each iteration must read the
+rank of every predecessor, which under vertex replication is exactly the
+all-mirror synchronization GraphLab performs — on a TPU mesh it is an
+**all-gather of the full rank vector** (O(n) bytes per shard per iteration).
+That dense synchronization is the cost FrogWild's sparse, partially-
+synchronized frog exchange avoids; the two collective footprints are
+contrasted in EXPERIMENTS.md §Roofline.
+
+Like the engine, the same program serves execution and dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.graph.csr import CSRGraph
+from repro.graph.partition import partition_graph
+
+
+@dataclasses.dataclass(frozen=True)
+class PullGraph:
+    """Per-shard in-edge COO blocks (pull orientation), stacked on shard axis.
+
+    ``src`` holds *global* predecessor ids, ``dst`` local successor ids,
+    ``w = 1/d_out(src)``; padded entries have w = 0.
+    """
+
+    num_shards: int
+    shard_size: int
+    n: int
+    nnz_max: int
+    src: jnp.ndarray | None = None    # int32[S, nnz_max]
+    dst: jnp.ndarray | None = None    # int32[S, nnz_max]
+    w: jnp.ndarray | None = None      # f32[S, nnz_max]
+
+    def array_specs(self):
+        S, nnz = self.num_shards, self.nnz_max
+        return (
+            jax.ShapeDtypeStruct((S, nnz), jnp.int32),
+            jax.ShapeDtypeStruct((S, nnz), jnp.int32),
+            jax.ShapeDtypeStruct((S, nnz), jnp.float32),
+        )
+
+
+def build_pull_graph(g: CSRGraph, num_shards: int) -> PullGraph:
+    gp, part = partition_graph(g, num_shards)
+    gn = gp.to_numpy()
+    S, sz = num_shards, part.shard_size
+    deg = gn.out_deg.astype(np.int64)
+    src_all = np.repeat(np.arange(gp.n, dtype=np.int64), deg)
+    dst_all = gn.col_idx.astype(np.int64)
+    w_all = (1.0 / deg[src_all]).astype(np.float32)
+    owner = dst_all // sz
+
+    nnz_per = np.bincount(owner, minlength=S)
+    nnz_max = max(8, int(np.ceil(nnz_per.max() / 8) * 8))
+    src = np.zeros((S, nnz_max), dtype=np.int32)
+    dst = np.zeros((S, nnz_max), dtype=np.int32)
+    w = np.zeros((S, nnz_max), dtype=np.float32)
+    for s in range(S):
+        sel = owner == s
+        m = int(sel.sum())
+        src[s, :m] = src_all[sel]
+        dst[s, :m] = dst_all[sel] - s * sz
+        w[s, :m] = w_all[sel]
+    return PullGraph(
+        num_shards=S, shard_size=sz, n=g.n, nnz_max=nnz_max,
+        src=jnp.asarray(src), dst=jnp.asarray(dst), w=jnp.asarray(w),
+    )
+
+
+def _pr_sharded_fn(pg: PullGraph, num_iters: int, p_T: float, mesh: Mesh,
+                   axis_name: str = "vertex"):
+    S, sz, n = pg.num_shards, pg.shard_size, pg.n
+
+    def shard_body(src, dst, w):
+        src, dst, w = src[0], dst[0], w[0]
+
+        def step(x_local, _):
+            # The dense mirror synchronization: every shard needs every
+            # predecessor's rank → all-gather the full vector (O(n) bytes).
+            x_full = jax.lax.all_gather(x_local, axis_name, tiled=True)
+            contrib = x_full[src] * w
+            px = jax.ops.segment_sum(contrib, dst, num_segments=sz)
+            x_new = (1.0 - p_T) * px + p_T / n
+            return x_new, None
+
+        x0 = jnp.full((sz,), 1.0 / n, dtype=jnp.float32)
+        x0 = jax.lax.pcast(x0, (axis_name,), to="varying")
+        x, _ = jax.lax.scan(step, x0, None, length=num_iters)
+        return x[None]
+
+    return jax.shard_map(
+        shard_body, mesh=mesh,
+        in_specs=(P(axis_name),) * 3,
+        out_specs=P(axis_name),
+    )
+
+
+def distributed_power_iteration(
+    pg: PullGraph, mesh: Mesh, num_iters: int = 50, p_T: float = 0.15
+) -> jnp.ndarray:
+    """Returns the PageRank vector computed on the mesh (padding stripped)."""
+    fn = jax.jit(_pr_sharded_fn(pg, num_iters, p_T, mesh))
+    x = fn(pg.src, pg.dst, pg.w)
+    return x.reshape(-1)[: pg.n]
+
+
+def pagerank_dryrun_lowered(pg: PullGraph, mesh: Mesh, num_iters: int = 2,
+                            p_T: float = 0.15, axis_name: str = "vertex"):
+    """Dry-run lowering of the baseline (ShapeDtypeStructs, no allocation)."""
+    sh = NamedSharding(mesh, P(axis_name))
+    fn = _pr_sharded_fn(pg, num_iters, p_T, mesh, axis_name)
+    return jax.jit(fn, in_shardings=(sh,) * 3).lower(*pg.array_specs())

@@ -1,0 +1,343 @@
+"""Distributed FrogWild! over a JAX mesh — the PowerGraph role.
+
+Vertices are range-sharded over a 1-D ``"vertex"`` mesh axis; each shard owns
+the CSR row-block of its vertices' out-edges. One superstep =
+
+  init     frogs arrive from the previous exchange (fixed-capacity buffers);
+  apply    each frog dies w.p. p_T and is tallied in the owner's counter;
+  sync     each (vertex, destination-shard) channel opens w.p. p_s
+           (the paper's randomized mirror synchronization — Definition 8's
+           erasure model at exactly the granularity of the GraphLab patch);
+  scatter  survivors redraw uniformly among edges on *open* channels
+           ("blocking walk", Process 19; Example 10 repair guarantees one
+           open edge), are bucketed per destination shard, and exchanged
+           with a single all-to-all.
+
+The all-to-all buffers are **fixed-capacity per channel** (like MoE token
+dispatch): static shapes for XLA, a measured overflow counter instead of
+dynamic resizing. Frogs have no identity (paper §3.3's first optimization) —
+the payload is just destination vertex ids, and the cost model in netcost.py
+counts only open channels, matching what GraphLab's sparse transport would
+put on the wire.
+
+The *same* shard program is used for execution (``distributed_frogwild``)
+and for the large-scale dry-run (``frogwild_dryrun_lowered`` — ShapeDtype-
+Structs only, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.graph.csr import CSRGraph
+from repro.graph.partition import partition_graph
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    num_frogs: int = 100_000
+    num_steps: int = 4
+    p_T: float = 0.15
+    p_s: float = 1.0
+    capacity_factor: float = 4.0     # per-channel buffer slack (≥ 1)
+    axis_name: str = "vertex"
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedGraph:
+    """Stacked per-shard CSR blocks (leading axis = shard, sharded on mesh).
+
+    For dry-runs this carries only the *shapes* (arrays are None).
+    """
+
+    num_shards: int
+    shard_size: int                   # vertices per shard (padded)
+    n: int                            # original vertex count
+    nnz_max: int                      # padded edges per shard
+    row_ptr: jnp.ndarray | None = None      # int32[S, shard_size + 1]
+    col_idx: jnp.ndarray | None = None      # int32[S, nnz_max] (global dest)
+    deg: jnp.ndarray | None = None          # int32[S, shard_size]
+    edge_src: jnp.ndarray | None = None     # int32[S, nnz_max] (local source)
+    edge_dst_shard: jnp.ndarray | None = None  # int32[S, nnz_max]
+    has_edge_to: jnp.ndarray | None = None  # bool [S, shard_size, num_shards]
+    # has_edge_to[s, v, d] — vertex v (on shard s) has ≥1 out-edge into shard
+    # d: the "mirror" structure. A (v, d) sync message is owed only when v is
+    # active AND the channel opened — the quantity p_s throttles in GraphLab.
+
+    @property
+    def n_padded(self) -> int:
+        return self.num_shards * self.shard_size
+
+    def array_specs(self):
+        S, sz, nnz = self.num_shards, self.shard_size, self.nnz_max
+        return (
+            jax.ShapeDtypeStruct((S, sz + 1), jnp.int32),
+            jax.ShapeDtypeStruct((S, nnz), jnp.int32),
+            jax.ShapeDtypeStruct((S, sz), jnp.int32),
+            jax.ShapeDtypeStruct((S, nnz), jnp.int32),
+            jax.ShapeDtypeStruct((S, nnz), jnp.int32),
+            jax.ShapeDtypeStruct((S, sz, S), jnp.bool_),
+        )
+
+    def arrays(self):
+        return (self.row_ptr, self.col_idx, self.deg, self.edge_src,
+                self.edge_dst_shard, self.has_edge_to)
+
+
+@dataclasses.dataclass
+class EngineResult:
+    counts: jnp.ndarray                 # int32[n] — stop tallies (global)
+    pi_hat: jnp.ndarray                 # f32[n]
+    sent_per_step: np.ndarray           # int64[t] — frogs exchanged each step
+    open_channels_per_step: np.ndarray  # int64[t] — (shard→shard) pairs used
+    sync_msgs_per_step: np.ndarray      # int64[t] — (active vertex, mirror)
+    overflow: int                       # frogs dropped by capacity (want 0)
+    config: EngineConfig
+
+
+def build_distributed_graph(g: CSRGraph, num_shards: int) -> DistributedGraph:
+    """Splits CSR rows into per-shard blocks with uniform padded shapes."""
+    gp, part = partition_graph(g, num_shards)
+    gn = gp.to_numpy()
+    S, sz = num_shards, part.shard_size
+    nnz_per = [int(gn.row_ptr[(s + 1) * sz] - gn.row_ptr[s * sz]) for s in range(S)]
+    nnz_max = max(8, int(np.ceil(max(nnz_per) / 8) * 8))
+
+    row_ptr = np.zeros((S, sz + 1), dtype=np.int32)
+    col_idx = np.zeros((S, nnz_max), dtype=np.int32)
+    deg = np.zeros((S, sz), dtype=np.int32)
+    edge_src = np.zeros((S, nnz_max), dtype=np.int32)
+    for s in range(S):
+        lo = int(gn.row_ptr[s * sz])
+        hi = int(gn.row_ptr[(s + 1) * sz])
+        row_ptr[s] = gn.row_ptr[s * sz : (s + 1) * sz + 1] - lo
+        col_idx[s, : hi - lo] = gn.col_idx[lo:hi]
+        deg[s] = gn.out_deg[s * sz : (s + 1) * sz]
+        edge_src[s, : hi - lo] = np.repeat(
+            np.arange(sz, dtype=np.int32), deg[s].astype(np.int64)
+        )
+    edge_dst_shard = (col_idx // sz).astype(np.int32)
+    # mirror structure: has_edge_to[s, v, d]
+    has_edge_to = np.zeros((S, sz, S), dtype=bool)
+    for s in range(S):
+        hi = int(row_ptr[s, -1])
+        has_edge_to[s, edge_src[s, :hi], edge_dst_shard[s, :hi]] = True
+    return DistributedGraph(
+        num_shards=S, shard_size=sz, n=g.n, nnz_max=nnz_max,
+        row_ptr=jnp.asarray(row_ptr),
+        col_idx=jnp.asarray(col_idx),
+        deg=jnp.asarray(deg),
+        edge_src=jnp.asarray(edge_src),
+        edge_dst_shard=jnp.asarray(edge_dst_shard),
+        has_edge_to=jnp.asarray(has_edge_to),
+    )
+
+
+def channel_capacity(cfg: EngineConfig, S: int) -> int:
+    """Expected frogs per (shard → shard) channel is N/S²; the blocking walk
+    concentrates them into the open p_s fraction, hence the 1/p_s term."""
+    expected = cfg.num_frogs / (S * S * max(cfg.p_s, 1e-3))
+    cap = int(np.ceil(cfg.capacity_factor * max(expected, 1.0)))
+    return max(8, int(np.ceil(cap / 8) * 8))
+
+
+def _pack_by_shard(
+    dest: jnp.ndarray, S: int, shard_size: int, cap: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Buckets frogs (global dest ids, -1 = empty) into a (S, cap) buffer.
+
+    Sort-based packing: stable argsort by destination shard, rank-in-group by
+    index arithmetic, capacity overflow dropped (and counted). This is the
+    same fixed-capacity dispatch pattern as MoE token routing.
+    """
+    B = dest.shape[0]
+    valid = dest >= 0
+    ds = jnp.where(valid, dest // shard_size, S)      # trash bucket S
+    order = jnp.argsort(ds)                           # stable — groups shards
+    ds_s = ds[order]
+    dv_s = dest[order]
+    first = jnp.searchsorted(ds_s, jnp.arange(S), side="left")
+    rank = jnp.arange(B, dtype=jnp.int32) - first[jnp.clip(ds_s, 0, S - 1)].astype(jnp.int32)
+    ok = (ds_s < S) & (rank < cap)
+    row = jnp.where(ok, ds_s, S)                      # OOB rows drop
+    col = jnp.where(ok, rank, 0)
+    buf = jnp.full((S, cap), -1, dtype=jnp.int32)
+    buf = buf.at[row, col].set(dv_s, mode="drop")
+    n_sent = ok.sum()
+    return buf, n_sent, valid.sum() - n_sent
+
+
+def _blocking_draw(
+    pos_local: jnp.ndarray,       # int32[B] local vertex (garbage if dead)
+    row_ptr: jnp.ndarray,         # int32[shard_size + 1]
+    col_idx: jnp.ndarray,         # int32[nnz_max]
+    deg: jnp.ndarray,             # int32[shard_size]
+    edge_src: jnp.ndarray,        # int32[nnz_max]
+    edge_dst_shard: jnp.ndarray,  # int32[nnz_max]
+    coins: jnp.ndarray | None,    # bool[shard_size, S] — open sync channels
+    p_s: float,
+    key: jax.Array,
+) -> jnp.ndarray:
+    """One scatter draw per frog among edges on open channels (Process 19)."""
+    B = pos_local.shape[0]
+    shard_size = deg.shape[0]
+    nnz_max = col_idx.shape[0]
+    k_force, k_draw = jax.random.split(key)
+
+    if p_s >= 1.0:
+        u = jax.random.randint(k_draw, (B,), 0, 1 << 30, jnp.int32)
+        slot = u % jnp.maximum(deg[pos_local], 1)
+        return col_idx[row_ptr[pos_local] + slot]
+
+    real_edge = jnp.arange(nnz_max, dtype=jnp.int32) < row_ptr[-1]
+    kept = coins[edge_src, edge_dst_shard] & real_edge
+    csum = jnp.cumsum(kept.astype(jnp.int32))
+    kb = jnp.concatenate([jnp.zeros((1,), jnp.int32), csum])
+    kv = kb[row_ptr[pos_local + 1]] - kb[row_ptr[pos_local]]
+    # Example 10 repair: one uniformly-chosen edge per fully-blocked vertex.
+    forced_slot = (
+        jax.random.randint(k_force, (shard_size,), 0, 1 << 30, jnp.int32)
+        % jnp.maximum(deg, 1)
+    )
+    forced_edge = row_ptr[:-1] + forced_slot
+    u = jax.random.randint(k_draw, (B,), 0, 1 << 30, jnp.int32)
+    u = u % jnp.maximum(kv, 1)
+    target = kb[row_ptr[pos_local]] + u + 1
+    edge = jnp.searchsorted(csum, target, side="left").astype(jnp.int32)
+    edge = jnp.where(kv > 0, edge, forced_edge[pos_local])
+    return col_idx[edge]
+
+
+def make_shard_body(dg: DistributedGraph, cfg: EngineConfig):
+    """The per-shard superstep program (shared by run and dry-run paths).
+
+    Takes stacked blocks ([1, ...] per shard) + a raw uint32 PRNG key; returns
+    (counts[1, shard_size], stats[1, t, 3]).
+    """
+    S, sz, n = dg.num_shards, dg.shard_size, dg.n
+    ax = cfg.axis_name
+    cap = channel_capacity(cfg, S)
+    B = S * cap
+    t = cfg.num_steps
+    f0 = cfg.num_frogs // S
+    if f0 > B:
+        raise ValueError(f"buffer too small: {f0} initial frogs > B={B}")
+
+    def shard_body(row_ptr, col_idx, deg, edge_src, edge_dst_shard,
+                   has_edge_to, key_data):
+        row_ptr, col_idx = row_ptr[0], col_idx[0]
+        deg, edge_src, edge_dst_shard = deg[0], edge_src[0], edge_dst_shard[0]
+        has_edge_to = has_edge_to[0]
+        me = jax.lax.axis_index(ax)
+        base = me * sz
+        n_local = jnp.clip(n - base, 1, sz)
+
+        key = jax.random.wrap_key_data(key_data, impl="threefry2x32")
+        k = jax.random.fold_in(key, me)
+        k_init, k_run = jax.random.split(k)
+        pos0 = base + (
+            jax.random.randint(k_init, (B,), 0, 1 << 30, jnp.int32) % n_local
+        )
+        frogs0 = jnp.where(jnp.arange(B) < f0, pos0, -1)
+        counts0 = jax.lax.pcast(
+            jnp.zeros((sz + 1,), jnp.int32), (ax,), to="varying"
+        )                                               # last bin = trash
+
+        def step(carry, step_key):
+            frogs, counts = carry
+            valid = frogs >= 0
+            v_local = jnp.clip(frogs - base, 0, sz - 1)
+            k_die, k_coin, k_draw = jax.random.split(step_key, 3)
+            # apply(): deaths tallied where they happen.
+            die = jax.random.bernoulli(k_die, cfg.p_T, (B,)) & valid
+            counts = counts.at[jnp.where(die, v_local, sz)].add(1)
+            alive = valid & ~die
+            # <sync>: one coin per (vertex, mirror shard) — the p_s patch.
+            if cfg.p_s < 1.0:
+                coins = jax.random.bernoulli(k_coin, cfg.p_s, shape=(sz, S))
+            else:
+                coins = jnp.ones((sz, S), dtype=bool)
+            # GraphLab-faithful sync accounting: a message is owed for every
+            # (active vertex, existing mirror) pair whose channel opened.
+            occ = jnp.zeros((sz + 1,), jnp.int32).at[
+                jnp.where(alive, v_local, sz)
+            ].add(1)
+            active = occ[:sz] > 0
+            sync_msgs = (active[:, None] & coins & has_edge_to).sum()
+            dest = _blocking_draw(
+                v_local, row_ptr, col_idx, deg, edge_src, edge_dst_shard,
+                coins, cfg.p_s, k_draw,
+            )
+            dest = jnp.where(alive, dest, -1)
+            buf, n_sent, ovf = _pack_by_shard(dest, S, sz, cap)
+            open_ch = (buf >= 0).any(axis=1).sum()
+            recv = jax.lax.all_to_all(
+                buf[:, None], ax, split_axis=0, concat_axis=0, tiled=False
+            )[:, 0]
+            frogs = recv.reshape(B)
+            stats = jnp.stack([n_sent.astype(jnp.int32),
+                               open_ch.astype(jnp.int32),
+                               ovf.astype(jnp.int32),
+                               sync_msgs.astype(jnp.int32)])
+            return (frogs, counts), stats
+
+        step_keys = jax.random.split(k_run, t)
+        (frogs, counts), stats = jax.lax.scan(step, (frogs0, counts0), step_keys)
+        # cut-off at t: survivors halt and are tallied (Process 15).
+        valid = frogs >= 0
+        v_local = jnp.clip(frogs - base, 0, sz - 1)
+        counts = counts.at[jnp.where(valid, v_local, sz)].add(1)
+        return counts[None, :sz], stats[None]
+
+    return shard_body
+
+
+def _sharded_fn(dg: DistributedGraph, cfg: EngineConfig, mesh: Mesh):
+    ax = cfg.axis_name
+    body = make_shard_body(dg, cfg)
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(ax),) * 6 + (P(),),
+        out_specs=(P(ax), P(ax)),
+    )
+
+
+def distributed_frogwild(
+    dg: DistributedGraph, cfg: EngineConfig, mesh: Mesh, seed: int = 0
+) -> EngineResult:
+    """Runs the full FrogWild! process under ``mesh`` and returns π̂ + stats."""
+    if mesh.devices.size != dg.num_shards:
+        raise ValueError(
+            f"mesh has {mesh.devices.size} devices, graph has {dg.num_shards} shards"
+        )
+    fn = jax.jit(_sharded_fn(dg, cfg, mesh))
+    key_data = jax.random.key_data(jax.random.PRNGKey(seed))
+    counts, stats = fn(*dg.arrays(), key_data)
+    counts = counts.reshape(-1)[: dg.n]
+    stats = np.asarray(stats)                         # [S, t, 4]
+    total = (cfg.num_frogs // dg.num_shards) * dg.num_shards
+    return EngineResult(
+        counts=counts,
+        pi_hat=counts.astype(jnp.float32) / total,
+        sent_per_step=stats[:, :, 0].sum(axis=0).astype(np.int64),
+        open_channels_per_step=stats[:, :, 1].sum(axis=0).astype(np.int64),
+        sync_msgs_per_step=stats[:, :, 3].sum(axis=0).astype(np.int64),
+        overflow=int(stats[:, :, 2].sum()),
+        config=cfg,
+    )
+
+
+def frogwild_dryrun_lowered(dg: DistributedGraph, cfg: EngineConfig, mesh: Mesh):
+    """Lowers the identical shard program from ShapeDtypeStructs only —
+    the multi-pod dry-run entry point (no graph data, no allocation)."""
+    ax = cfg.axis_name
+    sh = NamedSharding(mesh, P(ax))
+    rep = NamedSharding(mesh, P())
+    fn = _sharded_fn(dg, cfg, mesh)
+    specs = dg.array_specs() + (jax.ShapeDtypeStruct((2,), jnp.uint32),)
+    return jax.jit(fn, in_shardings=(sh,) * 6 + (rep,)).lower(*specs)

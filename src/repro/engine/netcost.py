@@ -1,0 +1,78 @@
+"""Wire-byte cost models — what GraphLab's network counters measured.
+
+The paper's headline systems numbers (Fig. 1c, Fig. 8, Fig. 4 circle areas)
+are bytes on the wire. XLA's dense collectives always move the full buffer,
+so the *semantic* savings of partial synchronization are accounted here the
+way a sparse transport (GraphLab's, or a ragged all-to-all) would see them:
+
+* FrogWild: per superstep, each open (shard→shard) channel costs a header
+  plus 4 bytes per frog in it; closed channels cost nothing. The engine
+  reports measured per-step sent-frog and open-channel counts.
+* GraphLab-PR: every iteration synchronizes every replica of every vertex —
+  in our range-sharded formulation, an all-gather of the f32 rank vector
+  (each shard receives n − n/S values, ×4 bytes), plus the same on the
+  apply-side accumulate (reduce). This is the O(E)-ish dense traffic the
+  paper contrasts against.
+
+These models are validated against the *compiled* collective bytes parsed
+from dry-run HLO in EXPERIMENTS.md §Dry-run (dense upper bound) and used for
+the Fig-1c/Fig-8 reproductions.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+SYNC_MSG_BYTES = 64            # one (vertex, mirror) sync: program + data
+FROG_PAYLOAD_BYTES = 4         # one int32 vertex id per frog (no identity)
+RANK_BYTES = 4                 # f32 PageRank value
+
+
+@dataclasses.dataclass(frozen=True)
+class BytesReport:
+    total: float
+    per_step: np.ndarray
+
+    def __str__(self) -> str:
+        return f"{self.total / 1e6:.3f} MB total ({len(self.per_step)} steps)"
+
+
+def frogwild_bytes_measured(
+    sent_per_step: np.ndarray, sync_msgs_per_step: np.ndarray
+) -> BytesReport:
+    """Bytes from engine-measured statistics (the paper's Fig-8 counter).
+
+    Dominant term: (active vertex, mirror) sync messages — each costs the
+    vertex-program/data envelope, and p_s throttles exactly these. Frog
+    payloads ride along at 4 bytes each.
+    """
+    per_step = (
+        sent_per_step.astype(np.float64) * FROG_PAYLOAD_BYTES
+        + sync_msgs_per_step.astype(np.float64) * SYNC_MSG_BYTES
+    )
+    return BytesReport(total=float(per_step.sum()), per_step=per_step)
+
+
+def frogwild_bytes_model(
+    N: int, t: int, p_T: float, p_s: float, S: int, avg_mirrors: float = 4.0
+) -> BytesReport:
+    """Analytic expectation. Alive frogs decay as (1−p_T)^τ. Active vertices
+    ≈ alive frogs (sub-linear collisions at N ≪ n); each syncs an expected
+    p_s · avg_mirrors channels. avg_mirrors = E[# distinct destination shards
+    per vertex] (graph-dependent, ≤ min(S, avg out-degree))."""
+    per_step = []
+    for tau in range(t):
+        alive = N * (1.0 - p_T) ** (tau + 1)
+        syncs = alive * p_s * avg_mirrors
+        per_step.append(alive * FROG_PAYLOAD_BYTES + syncs * SYNC_MSG_BYTES)
+    arr = np.asarray(per_step)
+    return BytesReport(total=float(arr.sum()), per_step=arr)
+
+
+def pagerank_bytes_model(n: int, num_iters: int, S: int) -> BytesReport:
+    """Dense rank synchronization: all-gather (recv (S−1)·n/S values per
+    shard, S shards) per iteration — 2× for the gather+apply round trip."""
+    per_iter = 2.0 * (S - 1) * n * RANK_BYTES
+    arr = np.full(num_iters, per_iter)
+    return BytesReport(total=float(arr.sum()), per_step=arr)

@@ -1,0 +1,27 @@
+"""Graph substrate: CSR storage, synthetic generators, vertex partitioning.
+
+Graphs are immutable, host-generated (numpy) and converted to device arrays
+once. All downstream code (core walkers, distributed engine, kernels) consumes
+the :class:`~repro.graph.csr.CSRGraph` container.
+"""
+from repro.graph.csr import CSRGraph, build_csr, transition_edges
+from repro.graph.generators import (
+    barabasi_albert,
+    chung_lu_powerlaw,
+    uniform_random,
+    ring_of_cliques,
+)
+from repro.graph.partition import VertexPartition, partition_graph, to_ell
+
+__all__ = [
+    "CSRGraph",
+    "build_csr",
+    "transition_edges",
+    "barabasi_albert",
+    "chung_lu_powerlaw",
+    "uniform_random",
+    "ring_of_cliques",
+    "VertexPartition",
+    "partition_graph",
+    "to_ell",
+]

@@ -1,0 +1,127 @@
+"""Compressed-sparse-row storage for directed graphs.
+
+Conventions (paper §2.1):
+  * ``A[i, j] = 1`` iff there is an edge ``j -> i``.
+  * ``P[i, j] = A[i, j] / d_out(j)`` — column-stochastic transition matrix.
+  * Every vertex has ``d_out(j) > 0`` (generators enforce this by adding a
+    uniform random out-edge to any dangling vertex).
+
+We store **out-edges in CSR by source vertex**: ``col_idx[row_ptr[v] :
+row_ptr[v + 1]]`` are the successors of ``v``. This is the layout both the
+walker oracle (gather successor by slot) and the distributed engine (each
+shard owns a contiguous row block) want.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """A directed graph in CSR (by source vertex) form.
+
+    Attributes:
+      n:        number of vertices.
+      row_ptr:  int32[n + 1]  — CSR offsets into ``col_idx``.
+      col_idx:  int32[nnz]    — destination vertex of each out-edge.
+      out_deg:  int32[n]      — ``row_ptr[1:] - row_ptr[:-1]`` (cached).
+    """
+
+    n: int
+    row_ptr: jnp.ndarray
+    col_idx: jnp.ndarray
+    out_deg: jnp.ndarray
+
+    @property
+    def nnz(self) -> int:
+        return int(self.col_idx.shape[0])
+
+    @property
+    def max_out_deg(self) -> int:
+        return int(np.asarray(self.out_deg).max())
+
+    def edge_range(self, v: int) -> Tuple[int, int]:
+        rp = np.asarray(self.row_ptr)
+        return int(rp[v]), int(rp[v + 1])
+
+    def successors(self, v: int) -> np.ndarray:
+        lo, hi = self.edge_range(v)
+        return np.asarray(self.col_idx[lo:hi])
+
+    def to_numpy(self) -> "CSRGraph":
+        return CSRGraph(
+            n=self.n,
+            row_ptr=np.asarray(self.row_ptr),
+            col_idx=np.asarray(self.col_idx),
+            out_deg=np.asarray(self.out_deg),
+        )
+
+
+def build_csr(n: int, src: np.ndarray, dst: np.ndarray) -> CSRGraph:
+    """Builds a CSRGraph from an edge list, fixing dangling vertices.
+
+    Any vertex with zero out-degree receives a single out-edge to a
+    deterministic pseudo-random target (hash of the vertex id), preserving the
+    paper's assumption ``d_out > 0``. Duplicate edges are kept (multi-edges
+    are legal and correspond to proportionally higher transition probability).
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if src.shape != dst.shape:
+        raise ValueError(f"src/dst shape mismatch: {src.shape} vs {dst.shape}")
+    if src.size and (src.min() < 0 or src.max() >= n or dst.min() < 0 or dst.max() >= n):
+        raise ValueError("edge endpoints out of range")
+
+    deg = np.bincount(src, minlength=n)
+    dangling = np.nonzero(deg == 0)[0]
+    if dangling.size:
+        # Deterministic "random" target for reproducibility.
+        fix_dst = (dangling * 2654435761 + 12345) % n
+        # avoid pure self-loops on dangling fixes
+        fix_dst = np.where(fix_dst == dangling, (fix_dst + 1) % n, fix_dst)
+        src = np.concatenate([src, dangling])
+        dst = np.concatenate([dst, fix_dst])
+        deg = np.bincount(src, minlength=n)
+
+    order = np.argsort(src, kind="stable")
+    col = dst[order]
+    row_ptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(deg, out=row_ptr[1:])
+    return CSRGraph(
+        n=n,
+        row_ptr=jnp.asarray(row_ptr, dtype=jnp.int32),
+        col_idx=jnp.asarray(col, dtype=jnp.int32),
+        out_deg=jnp.asarray(deg, dtype=jnp.int32),
+    )
+
+
+def transition_edges(g: CSRGraph) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns ``(src, dst, weight)`` per edge with ``weight = 1/d_out(src)``.
+
+    This is matrix ``P`` in COO form: ``(P x)[i] = sum_{e: dst==i} w_e x[src_e]``.
+    Used by the power-iteration baseline and the jnp SpMV oracle.
+    """
+    rp = np.asarray(g.row_ptr)
+    deg = np.asarray(g.out_deg)
+    src = np.repeat(np.arange(g.n, dtype=np.int64), deg)
+    w = 1.0 / deg[src].astype(np.float64)
+    return (
+        jnp.asarray(src, dtype=jnp.int32),
+        jnp.asarray(g.col_idx, dtype=jnp.int32),
+        jnp.asarray(w, dtype=jnp.float32),
+    )
+
+
+def adjacency_dense(g: CSRGraph) -> np.ndarray:
+    """Dense column-stochastic P (tests only — O(n^2) memory)."""
+    gn = g.to_numpy()
+    P = np.zeros((g.n, g.n), dtype=np.float64)
+    for v in range(g.n):
+        lo, hi = gn.row_ptr[v], gn.row_ptr[v + 1]
+        for u in gn.col_idx[lo:hi]:
+            P[int(u), v] += 1.0 / (hi - lo)
+    return P

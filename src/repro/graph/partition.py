@@ -1,0 +1,166 @@
+"""Vertex partitioning and kernel-friendly formats.
+
+The distributed engine range-shards vertices: shard ``s`` owns vertices
+``[s * n_per, (s + 1) * n_per)`` and the CSR row-block of their out-edges.
+This plays the role of GraphLab's vertex placement; the *frontier exchange*
+between shards plays the role of mirror synchronization (DESIGN.md §2).
+
+``to_ell`` converts CSR to a padded ELLPACK layout (``idx[n, K]`` +
+``valid[n, K]``) consumed by the Pallas SpMV kernel: regular rows live in the
+ELL slab, and rows with out-degree > K (power-law hubs) are split — their
+first K edges stay in the slab and the remainder spills to a COO tail that
+the ops wrapper applies with a segment-sum. The hybrid keeps the slab narrow
+(memory ∝ n·K) while hubs stay exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexPartition:
+    """Range partition of vertices over ``num_shards`` shards.
+
+    Vertices are padded to a multiple of ``num_shards``; padded vertices have
+    a single self-loop and never receive frogs (start distribution excludes
+    them), so they do not perturb the process.
+    """
+
+    num_shards: int
+    n: int                 # original vertex count
+    n_padded: int          # padded to a multiple of num_shards
+    shard_size: int        # n_padded // num_shards
+
+    def shard_of(self, v: np.ndarray) -> np.ndarray:
+        return v // self.shard_size
+
+    def bounds(self, s: int) -> Tuple[int, int]:
+        return s * self.shard_size, (s + 1) * self.shard_size
+
+
+def partition_graph(g: CSRGraph, num_shards: int) -> Tuple[CSRGraph, VertexPartition]:
+    """Pads ``g`` so ``n`` divides ``num_shards`` and returns the partition.
+
+    Padding vertices get one self-loop (never visited; keeps CSR well-formed
+    and out-degrees positive so vectorized code needs no special cases).
+    """
+    n = g.n
+    n_padded = ((n + num_shards - 1) // num_shards) * num_shards
+    part = VertexPartition(
+        num_shards=num_shards, n=n, n_padded=n_padded,
+        shard_size=n_padded // num_shards,
+    )
+    if n_padded == n:
+        return g, part
+
+    gn = g.to_numpy()
+    pad = n_padded - n
+    row_ptr = np.concatenate([
+        gn.row_ptr,
+        gn.row_ptr[-1] + 1 + np.arange(pad, dtype=gn.row_ptr.dtype),
+    ])
+    col_idx = np.concatenate([gn.col_idx, np.arange(n, n_padded, dtype=gn.col_idx.dtype)])
+    out_deg = np.concatenate([gn.out_deg, np.ones(pad, dtype=gn.out_deg.dtype)])
+    gp = CSRGraph(
+        n=n_padded,
+        row_ptr=jnp.asarray(row_ptr, dtype=jnp.int32),
+        col_idx=jnp.asarray(col_idx, dtype=jnp.int32),
+        out_deg=jnp.asarray(out_deg, dtype=jnp.int32),
+    )
+    return gp, part
+
+
+@dataclasses.dataclass(frozen=True)
+class EllGraph:
+    """Hybrid ELL + COO-spill layout for the SpMV kernel.
+
+    Attributes:
+      idx:    int32[n_rows, K] — destination ids; garbage where ``~valid``.
+      valid:  bool [n_rows, K]
+      weight: f32  [n_rows, K] — 1/d_out(src) transition weights (0 if invalid).
+      spill_src/spill_dst/spill_w: COO tail for rows with degree > K.
+
+    Orientation note: the SpMV computes ``y = P @ x`` with
+    ``P[i, j] = A[i, j]/d_out(j)``, i.e. *pull* form — row i of the ELL slab
+    lists the **predecessors** of vertex i. ``to_ell`` therefore transposes
+    the (source-CSR) graph internally.
+    """
+
+    n_rows: int
+    K: int
+    idx: jnp.ndarray
+    valid: jnp.ndarray
+    weight: jnp.ndarray
+    spill_src: jnp.ndarray
+    spill_dst: jnp.ndarray
+    spill_w: jnp.ndarray
+
+    @property
+    def spill_nnz(self) -> int:
+        return int(self.spill_src.shape[0])
+
+
+def to_ell(g: CSRGraph, K: int = 32, row_pad: int = 8) -> EllGraph:
+    """Converts to pull-oriented hybrid ELL (see :class:`EllGraph`).
+
+    Args:
+      g: source-CSR graph.
+      K: ELL slab width (edges per row kept in the regular slab). Rounded up
+        to a multiple of 8 for TPU lane friendliness.
+      row_pad: rows are padded to a multiple of this.
+    """
+    K = int(np.ceil(K / 8) * 8)
+    gn = g.to_numpy()
+    deg = gn.out_deg.astype(np.int64)
+    src = np.repeat(np.arange(g.n, dtype=np.int64), deg)
+    dst = gn.col_idx.astype(np.int64)
+    w = (1.0 / deg[src]).astype(np.float32)
+
+    # Pull orientation: group edges by destination.
+    order = np.argsort(dst, kind="stable")
+    by_dst_src = src[order]
+    by_dst_dst = dst[order]
+    by_dst_w = w[order]
+    in_deg = np.bincount(by_dst_dst, minlength=g.n)
+    in_ptr = np.zeros(g.n + 1, dtype=np.int64)
+    np.cumsum(in_deg, out=in_ptr[1:])
+
+    n_rows = int(np.ceil(g.n / row_pad) * row_pad)
+    idx = np.zeros((n_rows, K), dtype=np.int32)
+    valid = np.zeros((n_rows, K), dtype=bool)
+    weight = np.zeros((n_rows, K), dtype=np.float32)
+    spill_s: list[np.ndarray] = []
+    spill_d: list[np.ndarray] = []
+    spill_w: list[np.ndarray] = []
+    for i in range(g.n):
+        lo, hi = in_ptr[i], in_ptr[i + 1]
+        k = min(K, hi - lo)
+        idx[i, :k] = by_dst_src[lo : lo + k]
+        valid[i, :k] = True
+        weight[i, :k] = by_dst_w[lo : lo + k]
+        if hi - lo > K:
+            spill_s.append(by_dst_src[lo + K : hi])
+            spill_d.append(by_dst_dst[lo + K : hi])
+            spill_w.append(by_dst_w[lo + K : hi])
+
+    def _cat(parts, dtype):
+        if parts:
+            return jnp.asarray(np.concatenate(parts), dtype=dtype)
+        return jnp.zeros((0,), dtype=dtype)
+
+    return EllGraph(
+        n_rows=n_rows,
+        K=K,
+        idx=jnp.asarray(idx),
+        valid=jnp.asarray(valid),
+        weight=jnp.asarray(weight),
+        spill_src=_cat(spill_s, jnp.int32),
+        spill_dst=_cat(spill_d, jnp.int32),
+        spill_w=_cat(spill_w, jnp.float32),
+    )

@@ -1,0 +1,193 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose against these.
+They are also the fallback implementation used on non-TPU backends (the
+512-device CPU dry-run compiles these; the Pallas kernels are the TPU-target
+implementations, validated in interpret mode).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def spmv_ref(idx: jnp.ndarray, weight: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y[i] = Σ_k weight[i, k] · x[idx[i, k]]   (hybrid-ELL slab part).
+
+    Invalid lanes are encoded by weight == 0 (idx may be garbage but always
+    in-range), so no mask argument is needed.
+    """
+    gathered = jnp.take(x, idx, axis=0)          # [rows, K]
+    return (gathered * weight).sum(axis=1).astype(x.dtype)
+
+
+def spill_ref(
+    spill_src: jnp.ndarray,
+    spill_dst: jnp.ndarray,
+    spill_w: jnp.ndarray,
+    x: jnp.ndarray,
+    n: int,
+) -> jnp.ndarray:
+    """COO tail of the hybrid SpMV: y[dst] += w · x[src]."""
+    if spill_src.shape[0] == 0:
+        return jnp.zeros((n,), dtype=x.dtype)
+    return jax.ops.segment_sum(
+        x[spill_src] * spill_w.astype(x.dtype), spill_dst, num_segments=n
+    )
+
+
+def frog_count_ref(dest: jnp.ndarray, n: int, weights: Optional[jnp.ndarray] = None
+                   ) -> jnp.ndarray:
+    """counts[v] = Σ_f weights[f] · 1{dest[f] == v}. int32 when weights=None."""
+    if weights is None:
+        return jnp.zeros((n,), jnp.int32).at[dest].add(1)
+    return jnp.zeros((n,), weights.dtype).at[dest].add(weights)
+
+
+def attention_ref(
+    q: jnp.ndarray,                    # [B, Hq, Sq, D]
+    k: jnp.ndarray,                    # [B, Hkv, Skv, D]
+    v: jnp.ndarray,                    # [B, Hkv, Skv, D]
+    causal: bool = True,
+    window: Optional[int] = None,      # sliding-window size (None = full)
+    q_offset: int = 0,                 # absolute position of q[…, 0, :] (decode)
+    logit_soft_cap: Optional[float] = None,
+) -> jnp.ndarray:
+    """GQA scaled-dot-product attention oracle (f32 accumulation)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32)
+    ) * scale
+    if logit_soft_cap is not None:
+        logits = logit_soft_cap * jnp.tanh(logits / logit_soft_cap)
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (can happen with tiny windows) → zeros, not NaN
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vx.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_chunked(
+    q: jnp.ndarray,                    # [B, Hq, Sq, D]
+    k: jnp.ndarray,                    # [B, Hkv, Skv, D]
+    v: jnp.ndarray,                    # [B, Hkv, Skv, D]
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    logit_soft_cap: Optional[float] = None,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Memory-bounded attention: lax.scan over query chunks, f32 online math.
+
+    Peak live logits are [B, Hq, chunk, Skv] instead of [B, Hq, Sq, Skv] —
+    this is the XLA-compilable path the 32k-prefill dry-runs lower (the
+    Pallas flash kernel is the TPU-target twin of this computation). With a
+    sliding ``window``, each chunk slices only the K/V band it can see
+    (⌈(window+chunk)/chunk⌉ chunks), so SWA work is O(S·window), not O(S²) —
+    what makes 500k-token contexts feasible for danube/gemma3.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    if Sq % chunk:
+        # pad then strip (padding attends but is discarded)
+        pad = chunk - Sq % chunk
+        qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        out = attention_chunked(qp, k, v, causal, window, q_offset,
+                                logit_soft_cap, chunk)
+        return out[:, :, :Sq]
+    group = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    n_chunks = Sq // chunk
+    qc = q.reshape(B, Hq, n_chunks, chunk, D).transpose(2, 0, 1, 3, 4)
+
+    banded = window is not None and causal
+    if banded:
+        # K/V band per chunk: positions [c*chunk + q_offset - window + 1,
+        # c*chunk + q_offset + chunk). Width rounded to chunk multiple.
+        band = ((window + chunk + chunk - 1) // chunk) * chunk
+        band = min(band, Skv)
+
+    def body(_, args):
+        from repro.distributed.context import constrain
+
+        ci, qi = args
+        qi = constrain(qi, "bh")    # keep batch+heads sharded in the chunk scan
+        q0 = ci * chunk + q_offset                       # absolute q start
+        if banded:
+            start = jnp.clip(q0 - window + 1, 0, Skv - band)
+            kc = jax.lax.dynamic_slice(k, (0, 0, start, 0), (B, Hkv, band, D))
+            vc = jax.lax.dynamic_slice(v, (0, 0, start, 0), (B, Hkv, band, D))
+            kpos = start + jnp.arange(band)[None, :]
+        else:
+            kc, vc = k, v
+            kpos = jnp.arange(Skv)[None, :]
+        kx = jnp.repeat(kc, group, axis=1)
+        vx = jnp.repeat(vc, group, axis=1)
+        logits = jnp.einsum(
+            "bhqd,bhkd->bhqk", qi.astype(jnp.float32), kx.astype(jnp.float32)
+        ) * scale
+        if logit_soft_cap is not None:
+            logits = logit_soft_cap * jnp.tanh(logits / logit_soft_cap)
+        qpos = q0 + jnp.arange(chunk)[:, None]
+        mask = jnp.ones((chunk, kpos.shape[1]), dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        logits = constrain(
+            jnp.where(mask[None, None], logits, -jnp.inf), "bh")
+        probs = jax.nn.softmax(logits, axis=-1)
+        probs = constrain(jnp.where(jnp.isnan(probs), 0.0, probs), "bh")
+        o = jnp.einsum("bhqk,bhkd->bhqd", probs, vx.astype(jnp.float32))
+        return None, constrain(o.astype(q.dtype), "bh")
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(n_chunks), qc))
+    return outs.transpose(1, 2, 0, 3, 4).reshape(B, Hq, Sq, D)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,                    # [B, Hq, 1, D]
+    k_cache: jnp.ndarray,              # [B, Hkv, S, D]
+    v_cache: jnp.ndarray,              # [B, Hkv, S, D]
+    length: jnp.ndarray,               # int32[] — valid cache prefix
+    window: Optional[int] = None,
+    logit_soft_cap: Optional[float] = None,
+) -> jnp.ndarray:
+    """Single-token decode attention oracle (full-cache, length-masked)."""
+    B, Hq, _, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    group = Hq // Hkv
+    kx = jnp.repeat(k_cache, group, axis=1)
+    vx = jnp.repeat(v_cache, group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32)
+    ) * scale
+    if logit_soft_cap is not None:
+        logits = logit_soft_cap * jnp.tanh(logits / logit_soft_cap)
+    pos = jnp.arange(S)[None, None, None, :]
+    mask = pos < length
+    if window is not None:
+        mask &= pos >= length - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vx.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,322 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks device count on first init. The
+# 512 placeholder host devices exist ONLY for dry-run lowering/compilation —
+# smoke tests and benchmarks never import this module and see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell from ShapeDtypeStructs, print memory/cost analyses, and derive the
+roofline terms (launch/roofline.py) from the compiled HLO.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --engine            # paper's own workload
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, input_specs, shape_applicable
+from repro.configs.registry import ARCHS, param_specs
+from repro.distributed.sharding import (
+    MeshAxes,
+    batch_pspec,
+    decode_state_pspecs,
+    param_pspecs,
+)
+from repro.launch.mesh import make_production_mesh, make_vertex_mesh
+from repro.launch.roofline import build_roofline
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, forward_train
+from repro.training.optimizer import adamw_init
+from repro.training.train_step import TrainStepConfig, make_train_step
+
+
+def _named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _bf16_specs(specs):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating)
+            else s.dtype),
+        specs)
+
+
+def lower_cell(arch: str, shape: str, mesh: Mesh, mesh_name: str,
+               overrides: Optional[dict] = None):
+    """Returns (lowered, kind, cfg, extras) for one dry-run cell.
+
+    ``overrides``: dataclasses.replace kwargs on the ModelConfig — the §Perf
+    hillclimb harness lowers variants through the identical path.
+    """
+    import dataclasses as _dc2
+
+    from repro.distributed.context import activation_sharding
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = _dc2.replace(cfg, **overrides)
+    kind, specs = input_specs(cfg, shape)
+    ax_train = MeshAxes.for_mesh(mesh, fsdp=True)
+    ax_serve = MeshAxes.for_mesh(mesh, fsdp=False)
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    p_specs = param_specs(cfg)
+    # sequence parallelism on for train (saved-activation stacks must fit);
+    # serving paths have no saved stacks — plain constraints suffice.
+    act_ctx = activation_sharding(mesh, dp=ax_train.data, tp=ax_train.model,
+                                  sp=(kind == "train"))
+
+    if kind == "train":
+        accum = 8 if cfg.param_count > 5e9 else 4
+        tcfg = TrainStepConfig(remat=True, accum_steps=accum)
+        step = make_train_step(cfg, tcfg)
+        opt_specs = jax.eval_shape(adamw_init, p_specs)
+        state_specs = {"params": p_specs, "opt": opt_specs}
+        pspec_tree = param_pspecs(cfg, mesh, p_specs, ax_train)
+        state_pspecs = {
+            "params": pspec_tree,
+            "opt": {"m": pspec_tree, "v": pspec_tree, "step": P()},
+        }
+        batch_pspecs = batch_pspec(cfg, mesh, specs, ax_train)
+        with act_ctx:
+            lowered = jax.jit(
+                step,
+                in_shardings=(_named(mesh, state_pspecs),
+                              _named(mesh, batch_pspecs),
+                              NamedSharding(mesh, P())),
+                out_shardings=(_named(mesh, state_pspecs), None),
+                donate_argnums=(0,),
+            ).lower(state_specs, specs, key_spec)
+        return lowered, kind, cfg
+
+    if kind == "prefill":
+        import dataclasses as _dc
+
+        # dispatch chunking only helps backward-pass transients; for the
+        # forward-only serving path the chunk scan's stacked copies cost more
+        # than they save.
+        cfg = _dc.replace(cfg, moe_dispatch_chunks=1)
+
+        def fwd(params, batch):
+            logits, _ = forward_train(params, batch, cfg, remat=False)
+            return logits[:, -1].astype(jnp.float32)   # serving: last token
+
+        serve_params = _bf16_specs(p_specs)
+        pspec_tree = param_pspecs(cfg, mesh, serve_params, ax_serve)
+        batch_pspecs = batch_pspec(cfg, mesh, specs, ax_serve)
+        with act_ctx:
+            lowered = jax.jit(
+                fwd,
+                in_shardings=(_named(mesh, pspec_tree),
+                              _named(mesh, batch_pspecs)),
+            ).lower(serve_params, specs)
+        return lowered, kind, cfg
+
+    # decode — serve_step: one token against the configured cache.
+    def step_fn(params, state, tokens):
+        logits, new_state = decode_step(params, state, tokens, cfg)
+        return logits.astype(jnp.float32), new_state
+
+    serve_params = _bf16_specs(p_specs)
+    # decode-state specs come from init_decode_state and already carry the
+    # serving dtypes (bf16 KV caches, f32 SSM recurrence states) — no cast.
+    state_specs = specs["state"]
+    pspec_tree = param_pspecs(cfg, mesh, serve_params, ax_serve)
+    state_pspecs = decode_state_pspecs(cfg, mesh, state_specs, ax_serve)
+    tok_pspec = batch_pspec(cfg, mesh, specs["tokens"], ax_serve)
+    with act_ctx:
+        lowered = jax.jit(
+            step_fn,
+            in_shardings=(_named(mesh, pspec_tree),
+                          _named(mesh, state_pspecs),
+                          NamedSharding(mesh, tok_pspec)),
+            out_shardings=(None, _named(mesh, state_pspecs)),
+            donate_argnums=(1,),
+        ).lower(serve_params, state_specs, specs["tokens"])
+    return lowered, kind, cfg
+
+
+HBM_PER_CHIP = 16 * 1024**3          # v5e
+
+
+def run_cell(arch: str, shape: str, mesh_name: str,
+             save_dir: Optional[str] = None,
+             keep_hlo: bool = False,
+             overrides: Optional[dict] = None,
+             tag: str = "") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        res = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "skipped": why}
+        _save(res, save_dir)
+        return res
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        lowered, kind, cfg = lower_cell(arch, shape, mesh, mesh_name,
+                                        overrides=overrides)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        }
+        live = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+        mem_d["live_bytes_per_device"] = live
+        mem_d["fits_hbm"] = bool(live <= HBM_PER_CHIP)
+        xla_cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        spec = SHAPES[shape]
+        roof = build_roofline(
+            arch, shape, mesh_name, chips, hlo, cfg, kind,
+            spec.seq_len, spec.global_batch, memory_analysis=mem_d)
+        res = {
+            "arch": arch, "shape": shape, "mesh": mesh_name, "chips": chips,
+            "kind": kind, "ok": True, "tag": tag,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory": mem_d,
+            "xla_flops_per_device_unscanned": float(xla_cost.get("flops", 0)),
+            "roofline": roof.as_dict(),
+        }
+        print(f"[dryrun] {arch} × {shape} [{mesh_name}] OK "
+              f"live={live/1e9:.2f}GB/chip fits={mem_d['fits_hbm']} "
+              f"lower={t_lower:.0f}s compile={t_compile:.0f}s")
+        print("         " + roof.summary())
+        if keep_hlo and save_dir:
+            with open(os.path.join(
+                    save_dir, f"{arch}_{shape}_{mesh_name}.hlo.txt"),
+                    "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 — dry-run must report every cell
+        res = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "ok": False, "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+        print(f"[dryrun] {arch} × {shape} [{mesh_name}] FAILED: "
+              f"{type(e).__name__}: {str(e)[:200]}")
+    _save(res, save_dir)
+    return res
+
+
+def _save(res: Dict[str, Any], save_dir: Optional[str]):
+    if not save_dir:
+        return
+    os.makedirs(save_dir, exist_ok=True)
+    tag = ("_" + res["tag"]) if res.get("tag") else ""
+    name = f"{res['arch']}_{res['shape']}_{res['mesh']}{tag}.json".replace("/", "-")
+    with open(os.path.join(save_dir, name), "w") as f:
+        json.dump(res, f, indent=1, default=str)
+
+
+def run_engine_cells(mesh_name: str, save_dir: Optional[str] = None):
+    """The paper's own workload at production scale: FrogWild + GraphLab-PR
+    baseline on a Twitter-scale graph spec, on the vertex mesh."""
+    from repro.configs.frogwild_graphs import TWITTER_FULL
+    from repro.engine.baseline import PullGraph, pagerank_dryrun_lowered
+    from repro.engine.gas import (DistributedGraph, EngineConfig,
+                                  frogwild_dryrun_lowered)
+
+    mesh = make_vertex_mesh(multi_pod=(mesh_name == "multi"))
+    S = mesh.devices.size
+    n = TWITTER_FULL.n
+    sz = -(-n // S)
+    sz = ((sz + 7) // 8) * 8
+    nnz_per = int(TWITTER_FULL.avg_out_deg * sz * 2)       # 2× skew headroom
+    nnz_per = ((nnz_per + 7) // 8) * 8
+    results = []
+
+    dg = DistributedGraph(num_shards=S, shard_size=sz, n=n, nnz_max=nnz_per)
+    ecfg = EngineConfig(num_frogs=800_000, num_steps=4, p_s=0.7)
+    for name, low_fn in (
+        ("frogwild", lambda: frogwild_dryrun_lowered(dg, ecfg, mesh)),
+        ("graphlab-pr", lambda: pagerank_dryrun_lowered(
+            PullGraph(num_shards=S, shard_size=sz, n=n, nnz_max=nnz_per),
+            mesh, num_iters=2)),
+    ):
+        t0 = time.time()
+        try:
+            lowered = low_fn()
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            live = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+            from repro.launch.hlo_analysis import analyze_hlo
+            cost = analyze_hlo(compiled.as_text())
+            res = {
+                "arch": name, "shape": "twitter-full", "mesh": mesh_name,
+                "chips": S, "ok": True, "kind": "engine",
+                "compile_s": round(time.time() - t0, 1),
+                "memory": {"live_bytes_per_device": live,
+                           "fits_hbm": bool(live <= HBM_PER_CHIP)},
+                "hlo_cost": cost.as_dict(),
+            }
+            print(f"[dryrun] engine {name} [{mesh_name}] OK "
+                  f"live={live/1e9:.3f}GB/chip "
+                  f"coll={cost.collective_bytes/1e6:.1f}MB/dev")
+        except Exception as e:  # noqa: BLE001
+            res = {"arch": name, "shape": "twitter-full", "mesh": mesh_name,
+                   "ok": False, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            print(f"[dryrun] engine {name} [{mesh_name}] FAILED: {e}")
+        _save(res, save_dir)
+        results.append(res)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None, help="shape id or 'all'")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch × shape) cell")
+    ap.add_argument("--engine", action="store_true",
+                    help="the paper's graph-engine cells")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--keep-hlo", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.engine:
+        for m in meshes:
+            run_engine_cells(m, args.out)
+        return
+
+    archs = list(ARCHS) if (args.all or args.arch == "all") else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape == "all") else [args.shape]
+    if not archs[0] or not shapes[0]:
+        ap.error("need --arch and --shape, or --all")
+    n_ok = n_fail = n_skip = 0
+    for m in meshes:
+        for a in archs:
+            for s in shapes:
+                r = run_cell(a, s, m, args.out, keep_hlo=args.keep_hlo)
+                if "skipped" in r:
+                    n_skip += 1
+                elif r.get("ok"):
+                    n_ok += 1
+                else:
+                    n_fail += 1
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

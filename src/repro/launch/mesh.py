@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _make(shape, axes):
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The LM mesh: 16×16 chips per pod; ``pod`` axis for the 2-pod config."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _make(shape, axes)
+
+
+def make_vertex_mesh(*, multi_pod: bool = False):
+    """The graph-engine mesh: all chips flattened on one ``vertex`` axis
+    (vertex range-sharding has no 2-D structure to exploit)."""
+    n = 512 if multi_pod else 256
+    return _make((n,), ("vertex",))
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2):
+    return _make((n_data, n_model), ("data", "model"))

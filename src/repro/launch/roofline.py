@@ -1,0 +1,102 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+
+  compute   = FLOPs_per_device / 197 TFLOP/s (bf16)
+  memory    = HBM-ish bytes_per_device / 819 GB/s
+  collective= wire bytes_per_device / 50 GB/s ICI
+
+FLOPs / bytes come from the exact HLO walker (hlo_analysis.py — XLA's own
+cost_analysis drops while-loop trip counts). MODEL_FLOPS uses the 6·N·D
+(train) / 2·N·D (inference) convention with N = active params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.launch.hlo_analysis import HloCost, analyze_hlo
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    memory_bytes_per_device: float
+    collective_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_per_device: float
+    useful_flops_ratio: float
+    step_time_s: float                     # max of the three terms
+    hw_util: float                         # model_flops/(step_time·peak)
+    collective_breakdown: Dict[str, float]
+    memory_analysis: Optional[dict] = None
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def summary(self) -> str:
+        return (f"{self.arch} × {self.shape} [{self.mesh}]  "
+                f"compute={self.compute_s*1e3:.2f}ms "
+                f"memory={self.memory_s*1e3:.2f}ms "
+                f"collective={self.collective_s*1e3:.2f}ms "
+                f"→ {self.dominant}-bound, "
+                f"useful={self.useful_flops_ratio:.2f}, "
+                f"MFU*={self.hw_util:.3f}")
+
+
+def model_flops(cfg, kind: str, seq_len: int, global_batch: int) -> float:
+    """6·N·D train / 2·N·D inference (D = tokens this step, global)."""
+    n = cfg.active_param_count
+    if kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = seq_len * global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * global_batch
+
+
+def build_roofline(
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    hlo_text: str,
+    cfg,
+    kind: str,
+    seq_len: int,
+    global_batch: int,
+    memory_analysis: Optional[dict] = None,
+) -> Roofline:
+    cost = analyze_hlo(hlo_text)
+    compute_s = cost.flops / PEAK_FLOPS
+    memory_s = cost.memory_bytes / HBM_BW
+    coll_s = cost.collective_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, kind, seq_len, global_batch) / chips
+    step = max(compute_s, memory_s, coll_s)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=cost.flops,
+        memory_bytes_per_device=cost.memory_bytes,
+        collective_bytes_per_device=cost.collective_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        dominant=dominant,
+        model_flops_per_device=mf,
+        useful_flops_ratio=(mf / cost.flops) if cost.flops else 0.0,
+        step_time_s=step,
+        hw_util=(mf / (step * PEAK_FLOPS)) if step > 0 else 0.0,
+        collective_breakdown=cost.collective_breakdown,
+        memory_analysis=memory_analysis,
+    )

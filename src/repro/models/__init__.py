@@ -1,0 +1,23 @@
+"""Composable LM model zoo (the assigned-architecture substrate).
+
+Pure-functional JAX models: params are nested dicts of arrays, apply
+functions are pure, sharding is injected via PartitionSpec trees built in
+``repro.distributed.sharding``. Families: dense (GQA/SWA/local-global),
+MoE (top-k, EP), RWKV6, Mamba2 (+Zamba2 hybrid), Whisper enc-dec, LLaVA
+(stub vision frontend).
+"""
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    init_params,
+    forward_train,
+    init_decode_state,
+    decode_step,
+)
+
+__all__ = [
+    "ModelConfig",
+    "init_params",
+    "forward_train",
+    "init_decode_state",
+    "decode_step",
+]

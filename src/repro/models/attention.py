@@ -1,0 +1,398 @@
+"""GQA attention block: train/prefill (chunked flash) and decode (KV cache).
+
+Decode supports two cache layouts:
+* ``full``  — cache length = max context (standard full attention);
+* ``ring``  — cache length = sliding window; positions wrap modulo the
+  window (danube / gemma3-local layers). This is what makes 500k-token
+  decode O(window) in memory for SWA layers.
+
+The split-KV (sequence-sharded cache) distributed decode lives in
+``repro/serving/decode.py``; this module is layout-agnostic single-logical-
+device math that GSPMD shards via constraint specs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, dtype_of, pdtype_of
+
+
+def attention_init(key, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    pd = pdtype_of(cfg)
+    return {
+        "wq": dense_init(kq, (d, cfg.num_heads * hd), pd),
+        "wk": dense_init(kk, (d, cfg.num_kv_heads * hd), pd),
+        "wv": dense_init(kv, (d, cfg.num_kv_heads * hd), pd),
+        "wo": dense_init(ko, (cfg.num_heads * hd, d), pd, fan_in=cfg.num_heads * hd),
+    }
+
+
+def _project_q(params: dict, x: jnp.ndarray, cfg: ModelConfig):
+    B, S, _ = x.shape
+    dt = dtype_of(cfg)
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(dt))
+    return q.reshape(B, S, cfg.num_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+
+def project_kv(params: dict, src: jnp.ndarray, cfg: ModelConfig):
+    """K/V projection from ``src`` (self: src = x; cross: encoder states)."""
+    B, S, _ = src.shape
+    dt = dtype_of(cfg)
+    k = jnp.einsum("bsd,dh->bsh", src, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", src, params["wv"].astype(dt))
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def attention_forward(
+    params: dict,
+    x: jnp.ndarray,                 # [B, S, d]
+    cfg: ModelConfig,
+    is_global: bool = True,
+    causal: bool = True,
+    positions: Optional[jnp.ndarray] = None,
+    kv_source: Optional[jnp.ndarray] = None,    # cross-attn: encoder states
+    use_rope: bool = True,
+) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill / encoder / cross)."""
+    B, S, _ = x.shape
+    q = _project_q(params, x, cfg)
+    k, v = project_kv(params, kv_source if kv_source is not None else x, cfg)
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    if kv_source is None and use_rope:          # self-attention gets RoPE
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    window = None if is_global else cfg.sliding_window
+    if cfg.attn_impl == "cp_kv" and kv_source is None:
+        out = cp_kv_attention(q, k, v, cfg, causal=causal, window=window)
+    else:
+        out = kops.attention(
+            q, k, v, causal=causal, window=window,
+            soft_cap=cfg.logit_soft_cap, impl=cfg.attn_impl,
+            chunk=cfg.attn_chunk,
+        )
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(dtype_of(cfg)))
+
+
+def cp_kv_attention(q, k, v, cfg: ModelConfig, causal: bool = True,
+                    window=None) -> jnp.ndarray:
+    """§Perf: context parallelism over the KV sequence (ring-attention lite).
+
+    For archs whose head counts don't divide the TP degree (starcoder2's 36,
+    gemma3's 8), head-parallel attention is unavailable and the baseline
+    replicates attention work across the model axis. Here each model shard
+    holds a 1/tp slice of K/V; for every q chunk all shards compute a
+    partial online softmax over their slice and combine with pmax/psum —
+    attention FLOPs and logit HBM traffic drop 1/tp at the cost of one
+    small (B,H,chunk,D) psum per chunk. Falls back to jnp_flash when no
+    sharding context is active (CPU tests).
+    """
+    import functools
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import context as dctx
+
+    ctx = dctx.current()
+    B, Hq, S, D = q.shape
+    Skv = k.shape[2]
+    if ctx is None or Skv % ctx.mesh.shape[ctx.tp] or cfg.attn_chunk > S:
+        return kops.attention(q, k, v, causal=causal, window=window,
+                              soft_cap=cfg.logit_soft_cap, impl="jnp_flash",
+                              chunk=cfg.attn_chunk)
+    ntp = ctx.mesh.shape[ctx.tp]
+    dp = ctx.dp if len(ctx.dp) > 1 else ctx.dp[0]
+    dp_size = 1
+    for a in (ctx.dp if isinstance(ctx.dp, tuple) else (ctx.dp,)):
+        dp_size *= ctx.mesh.shape[a]
+    bspec = dp if B % dp_size == 0 else None
+    starts = jnp.arange(ntp, dtype=jnp.int32)
+    chunk = cfg.attn_chunk
+    nq = S // chunk
+    probs_dt = jnp.bfloat16 if cfg.attn_bf16_probs else jnp.float32
+
+    def body(qc, kl, vl, starts, ci):
+        # qc [B,H,chunk,D] replicated over model; kl/vl local KV slice.
+        Sl = kl.shape[2]
+        start = starts[0] * Sl
+        group = Hq // kl.shape[1]
+        kx = jnp.repeat(kl, group, axis=1).astype(jnp.float32)
+        vx = jnp.repeat(vl, group, axis=1).astype(probs_dt)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+        s = jnp.einsum("bhqd,bhkd->bhqk", qc.astype(jnp.float32), kx) * scale
+        if cfg.logit_soft_cap is not None:
+            s = cfg.logit_soft_cap * jnp.tanh(s / cfg.logit_soft_cap)
+        qpos = ci * chunk + jnp.arange(chunk)[:, None]
+        kpos = (start + jnp.arange(Sl))[None, :]
+        mask = jnp.ones((chunk, Sl), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_i = jnp.maximum(s.max(-1, keepdims=True), -1e30)
+        p = jnp.where(mask[None, None], jnp.exp(s - m_i), 0.0)
+        l_i = p.sum(-1, keepdims=True)
+        o_i = jnp.einsum("bhqk,bhkd->bhqd", p.astype(probs_dt), vx)
+        m = jax.lax.pmax(m_i, ctx.tp)
+        corr = jnp.exp(m_i - m)
+        l = jax.lax.psum(l_i * corr, ctx.tp)
+        o = jax.lax.psum(o_i.astype(jnp.float32) * corr, ctx.tp)
+        return (o / jnp.maximum(l, 1e-30)).astype(qc.dtype)
+
+    fn = jax.shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(bspec), P(bspec, None, ctx.tp, None),
+                  P(bspec, None, ctx.tp, None), P(ctx.tp), P()),
+        out_specs=P(bspec),
+        axis_names=set(ctx.mesh.axis_names),
+        check_vma=False,
+    )
+
+    qc = q.reshape(B, Hq, nq, chunk, D).transpose(2, 0, 1, 3, 4)
+
+    def scan_body(_, args):
+        ci, qi = args
+        return None, fn(qi, k, v, starts, ci)
+
+    _, outs = jax.lax.scan(scan_body, None, (jnp.arange(nq), qc))
+    return outs.transpose(1, 2, 0, 3, 4).reshape(B, Hq, S, D)
+
+
+# ----------------------------------------------------------------------------
+# KV-cache decode
+# ----------------------------------------------------------------------------
+
+def cache_is_ring(cfg: ModelConfig, is_global: bool) -> bool:
+    """Static layout decision: windowed layers use a ring cache."""
+    return not (is_global or cfg.sliding_window is None)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  is_global: bool) -> dict:
+    """Cache arrays for one layer. Ring layout when the layer is windowed
+    (layout itself is static — see ``cache_is_ring``).
+
+    ``kv_cache_dtype="int8"`` stores per-(position, head) symmetric-quantized
+    K/V (scales alongside) — halves cache HBM vs bf16, the production lever
+    that fits phi3.5-42B × decode_32k on a single pod.
+    """
+    length = max_len if not cache_is_ring(cfg, is_global) else min(
+        max_len, cfg.sliding_window
+    )
+    shape = (batch, cfg.num_kv_heads, length, cfg.head_dim)
+    if cfg.kv_cache_dtype == "int8":
+        sshape = shape[:-1] + (1,)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v_scale": jnp.zeros(sshape, jnp.float32)}
+    dt = dtype_of(cfg)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def _quantize_kv(x: jnp.ndarray):
+    """Symmetric per-(batch, head, position) int8 quantization."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dt):
+    return (q.astype(jnp.float32) * scale).astype(dt)
+
+
+def _splitkv_body(q, k_new, v_new, kc, vc, ks, vs, pos, starts, *,
+                  ring: bool, L: int, window, soft_cap, axis: str,
+                  quantized: bool):
+    """Per-model-shard decode attention over a sequence-sharded cache.
+
+    The owner shard writes the new K/V locally (no cross-shard gather — the
+    thing GSPMD cannot do for a dynamic-update-slice on a sharded dim) and
+    every shard computes a partial online-softmax over its cache slice; the
+    partials combine with one tiny pmax/psum. This is flash-decoding mapped
+    onto the mesh, and works for ANY head count.
+
+    ``starts`` is a P(axis)-sharded iota (each shard sees its own [1] slice)
+    — the partial-manual-safe replacement for axis_index, whose partition-id
+    lowering the SPMD partitioner refuses in mixed auto/manual modules.
+    """
+    B, Hq, _, D = q.shape
+    Hkv = kc.shape[1]
+    Sl = kc.shape[2]
+    start = starts[0] * Sl
+    slot_g = (pos % L) if ring else pos
+    slot = jnp.clip(slot_g - start, 0, Sl - 1)
+    in_range = (slot_g >= start) & (slot_g < start + Sl)
+
+    def upd(buf, new):
+        u = jax.lax.dynamic_update_slice(buf, new, (0, 0, slot, 0))
+        return jnp.where(in_range, u, buf)
+
+    if quantized:
+        k8, ksc = _quantize_kv(k_new)
+        v8, vsc = _quantize_kv(v_new)
+        kc, vc = upd(kc, k8), upd(vc, v8)
+        ks, vs = upd(ks, ksc), upd(vs, vsc)
+        k_f = kc.astype(jnp.float32) * ks
+        v_f = vc.astype(jnp.float32) * vs
+    else:
+        kc, vc = upd(kc, k_new), upd(vc, v_new)
+        k_f, v_f = kc, vc
+
+    group = Hq // Hkv
+    kx = jnp.repeat(k_f, group, axis=1).astype(jnp.float32)
+    vx = jnp.repeat(v_f, group, axis=1).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx) * scale
+    if soft_cap is not None:
+        s = soft_cap * jnp.tanh(s / soft_cap)
+    gidx = start + jnp.arange(Sl)[None, None, None, :]
+    if ring:
+        valid = gidx < jnp.minimum(pos + 1, L)
+    else:
+        valid = gidx <= pos
+        if window is not None:
+            valid = valid & (gidx > pos - window)
+    s = jnp.where(valid, s, -jnp.inf)
+    m_i = s.max(axis=-1, keepdims=True)                      # [B,H,1,1]
+    m_i = jnp.maximum(m_i, -1e30)                            # empty shard
+    p = jnp.exp(s - m_i)
+    p = jnp.where(valid, p, 0.0)
+    l_i = p.sum(axis=-1, keepdims=True)
+    o_i = jnp.einsum("bhqk,bhkd->bhqd", p, vx)
+    m = jax.lax.pmax(m_i, axis)
+    corr = jnp.exp(m_i - m)                                  # [B,H,1,1]
+    l = jax.lax.psum(l_i * corr, axis)
+    o = jax.lax.psum(o_i * corr, axis)
+    out = o / jnp.maximum(l, 1e-30)
+    return out.astype(q.dtype), kc, vc, ks, vs
+
+
+def decode_attention(
+    params: dict,
+    x: jnp.ndarray,                 # [B, 1, d]
+    cache: dict,
+    pos: jnp.ndarray,               # int32[] — absolute position of this token
+    cfg: ModelConfig,
+    is_global: bool = True,
+    use_rope: bool = True,
+) -> Tuple[jnp.ndarray, dict]:
+    """One decode step: update cache at ``pos``, attend to the valid prefix.
+
+    Under an activation-sharding context with a divisible cache length, the
+    split-KV shard_map path runs (sequence-sharded cache, flash-decoding
+    combine); otherwise the single-logical-device path.
+    """
+    from repro.distributed import context as dctx
+
+    B = x.shape[0]
+    q = _project_q(params, x, cfg)
+    k_new, v_new = project_kv(params, x, cfg)
+    if use_rope:
+        q = apply_rope(q, jnp.full((1,), pos, jnp.int32), cfg.rope_theta)
+        k_new = apply_rope(k_new, jnp.full((1,), pos, jnp.int32), cfg.rope_theta)
+
+    ring = cache_is_ring(cfg, is_global)          # static
+    L = cache["k"].shape[2]
+    window = None if (is_global or ring) else cfg.sliding_window
+
+    ctx = dctx.current()
+    use_splitkv = (ctx is not None
+                   and L % ctx.mesh.shape[ctx.tp] == 0
+                   and L >= ctx.mesh.shape[ctx.tp])
+    if use_splitkv:
+        import functools
+
+        from jax.sharding import PartitionSpec as P
+
+        quantized = cfg.kv_cache_dtype == "int8"
+        body = functools.partial(
+            _splitkv_body, ring=ring, L=L, window=window,
+            soft_cap=cfg.logit_soft_cap, axis=ctx.tp, quantized=quantized)
+        ntp = ctx.mesh.shape[ctx.tp]
+        starts = jnp.arange(ntp, dtype=jnp.int32)
+        # FULLY-manual shard_map (every mesh axis named): the SPMD
+        # partitioner never sees this region, so its partition-id refusal
+        # in mixed auto/manual modules cannot trigger. Batch shards over
+        # the data axes when divisible; heads stay local.
+        dp = ctx.dp if len(ctx.dp) > 1 else ctx.dp[0]
+        dp_size = 1
+        for a in (ctx.dp if isinstance(ctx.dp, tuple) else (ctx.dp,)):
+            dp_size *= ctx.mesh.shape[a]
+        bspec = dp if (q.shape[0] % dp_size == 0) else None
+        cspec = P(bspec, None, ctx.tp, None)
+        if quantized:
+            ks_in, vs_in = cache["k_scale"], cache["v_scale"]
+        else:  # dummy tiny placeholders keep one body signature
+            ks_in = jnp.zeros((1, 1, ntp, 1), jnp.float32)
+            vs_in = jnp.zeros((1, 1, ntp, 1), jnp.float32)
+        sspec = cspec if quantized else P(None, None, ctx.tp, None)
+        fn = jax.shard_map(
+            body, mesh=ctx.mesh,
+            in_specs=(P(bspec), P(bspec), P(bspec), cspec, cspec,
+                      sspec, sspec, P(), P(ctx.tp)),
+            out_specs=(P(bspec), cspec, cspec, sspec, sspec),
+            axis_names=set(ctx.mesh.axis_names),
+            check_vma=False,
+        )
+        out, k_cache, v_cache, ks_out, vs_out = fn(
+            q, k_new, v_new, cache["k"], cache["v"], ks_in, vs_in,
+            pos, starts)
+        new_cache = {"k": k_cache, "v": v_cache}
+        if quantized:
+            new_cache["k_scale"] = ks_out
+            new_cache["v_scale"] = vs_out
+    else:
+        slot = (pos % L) if ring else pos
+        quantized = cfg.kv_cache_dtype == "int8"
+        if quantized:
+            k8, ksc = _quantize_kv(k_new)
+            v8, vsc = _quantize_kv(v_new)
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k8, (0, 0, slot, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v8, (0, 0, slot, 0))
+            ks = jax.lax.dynamic_update_slice(
+                cache["k_scale"], ksc, (0, 0, slot, 0))
+            vs = jax.lax.dynamic_update_slice(
+                cache["v_scale"], vsc, (0, 0, slot, 0))
+            dt = dtype_of(cfg)
+            k_att = _dequantize_kv(k_cache, ks, dt)
+            v_att = _dequantize_kv(v_cache, vs, dt)
+            new_cache = {"k": k_cache, "v": v_cache,
+                         "k_scale": ks, "v_scale": vs}
+        else:
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k_new, (0, 0, slot, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v_new, (0, 0, slot, 0))
+            k_att, v_att = k_cache, v_cache
+            new_cache = {"k": k_cache, "v": v_cache}
+        if ring:
+            # Ring cache holds the last ≤L positions in wrapped order. RoPE
+            # was applied at absolute positions when written and softmax is
+            # order-invariant, so wrapped slot order does not perturb scores.
+            length = jnp.minimum(pos + 1, L)
+            out = kref.decode_attention_ref(
+                q, k_att, v_att, length,
+                window=None, logit_soft_cap=cfg.logit_soft_cap)
+        else:
+            out = kref.decode_attention_ref(
+                q, k_att, v_att, pos + 1,
+                window=window, logit_soft_cap=cfg.logit_soft_cap)
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, cfg.num_heads * cfg.head_dim)
+    y = jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(dtype_of(cfg)))
+    return y, new_cache

@@ -1,0 +1,132 @@
+"""Single configuration dataclass covering every assigned architecture family."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"            # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    d_ff: int = 512
+    vocab_size: int = 1024
+    head_dim: Optional[int] = None   # default: d_model // num_heads
+
+    # --- attention pattern ---
+    sliding_window: Optional[int] = None   # SWA width (danube, gemma3 locals)
+    global_every: Optional[int] = None     # gemma3: every Nth layer is global
+    rope_theta: float = 10_000.0
+    logit_soft_cap: Optional[float] = None
+
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_dispatch_chunks: int = 8       # batch sub-chunks per dispatch scan
+
+    # --- SSM (rwkv6 / mamba2) ---
+    ssm_state: int = 64
+    ssm_heads: Optional[int] = None        # default d_model // ssm_head_dim
+    ssm_head_dim: int = 64
+    conv_width: int = 4                    # mamba2 depthwise conv
+
+    # --- hybrid (zamba2) ---
+    shared_attn_every: int = 0             # shared attention block period
+
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 1500                # precomputed frame embeddings
+
+    # --- frontend stubs ---
+    num_prefix_embeddings: int = 0         # VLM: precomputed patch embeds
+
+    # --- numerics / misc ---
+    act: str = "silu"
+    mlp_gated: bool = True                 # False: classic 2-matrix MLP
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"                # compute dtype
+    param_dtype: str = "float32"           # storage dtype
+    attn_impl: str = "jnp_flash"           # jnp_flash | pallas | ref | cp_kv
+    attn_chunk: int = 512                  # q-chunk for jnp_flash
+    attn_bf16_probs: bool = False          # §Perf: bf16 softmax probs
+    ssm_state_sharding: bool = True        # §Perf: shard recurrence state (V3)
+    kv_cache_dtype: str = "compute"        # "compute" (=dtype) | "int8"
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.ssm_heads is None:
+            object.__setattr__(
+                self, "ssm_heads", max(1, self.d_model // self.ssm_head_dim)
+            )
+
+    # ---- derived properties ----
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def has_decoder(self) -> bool:
+        return True   # every assigned arch has an autoregressive decoder
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this arch decode at 500k context? (DESIGN.md §4)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        if self.sliding_window is not None:
+            return True          # SWA (danube) / local-global (gemma3)
+        return False
+
+    def layer_is_global(self, i: int) -> bool:
+        """gemma3-style local:global pattern; True ⇒ full attention."""
+        if self.global_every is None:
+            return self.sliding_window is None
+        return (i + 1) % self.global_every == 0
+
+    @property
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks), for rooflines.
+
+        Matches the implemented modules (tests assert against actual trees).
+        """
+        d, f, V, L = self.d_model, self.d_ff, self.vocab_size, self.num_layers
+        hd, Hq, Hkv = self.head_dim, self.num_heads, self.num_kv_heads
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        attn = d * hd * (Hq + 2 * Hkv) + Hq * hd * d
+        n_mlp_mats = 3 if self.mlp_gated else 2
+        mlp = n_mlp_mats * d * f
+        if self.family == "moe":
+            mlp = self.num_experts * 3 * d * f + d * self.num_experts
+        if self.family == "ssm":
+            # rwkv6: 5 d×d time-mix mats + decay LoRA + 2-matrix channel mix
+            per_layer = 5 * d * d + d * 64 + 64 * d + 2 * d * f
+        elif self.family == "hybrid":
+            # mamba2: in_proj (z,x → 2·2d) + out_proj (2d) ≈ 6d² + small
+            per_layer = 6 * d * d + 2 * d * self.ssm_state + d * 2
+        else:
+            per_layer = attn + mlp
+        total = emb + L * per_layer
+        if self.family == "encdec":
+            total += self.encoder_layers * (attn + mlp) + L * attn  # cross-attn
+        if self.family == "hybrid" and self.shared_attn_every:
+            total += attn + 3 * d * f          # one shared attn+MLP block
+        if self.family == "vlm":
+            total += d * d                     # vision projector stub
+        return int(total)
+
+    @property
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: top-k experts only)."""
+        if self.family != "moe":
+            return self.param_count
+        d, f, L = self.d_model, self.d_ff, self.num_layers
+        dense_mlp = self.num_experts_per_tok * 3 * d * f
+        full_mlp = self.num_experts * 3 * d * f
+        return int(self.param_count - L * (full_mlp - dense_mlp))

@@ -1,0 +1,110 @@
+"""Shared building blocks: norms, rotary embeddings, linear/embedding init."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ----------------------------------------------------------------------------
+# initializers
+# ----------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            ).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# RMSNorm
+# ----------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embeddings (supports offset for decode)
+# ----------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(
+    x: jnp.ndarray,                # [B, H, S, D]
+    positions: jnp.ndarray,        # int32[S] or int32[B, S]
+    theta: float = 10_000.0,
+) -> jnp.ndarray:
+    B, H, S, D = x.shape
+    freqs = rope_freqs(D, theta)                     # [D/2]
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [S, D/2]
+        ang = ang[None, None]                                          # [1,1,S,D/2]
+    else:
+        ang = positions.astype(jnp.float32)[:, None, :, None] * freqs  # [B,1,S,D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Embedding / unembedding
+# ----------------------------------------------------------------------------
+
+def embedding_init(key, cfg: ModelConfig) -> dict:
+    p = {"embedding": embed_init(key, (cfg.vocab_size, cfg.d_model),
+                                 pdtype_of(cfg))}
+    return p
+
+
+def embed_tokens(params: dict, tokens: jnp.ndarray, cfg: ModelConfig
+                 ) -> jnp.ndarray:
+    emb = params["embedding"].astype(dtype_of(cfg))
+    x = jnp.take(emb, tokens, axis=0)
+    return x * jnp.asarray(cfg.d_model ** 0.5, dtype=x.dtype)
+
+
+def unembed(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+            head: Optional[dict] = None) -> jnp.ndarray:
+    """Project to vocab logits (tied or separate head)."""
+    if cfg.tie_embeddings or head is None:
+        w = params["embedding"].astype(dtype_of(cfg))       # [V, d]
+        return jnp.einsum("...d,vd->...v", x, w)
+    w = head["kernel"].astype(dtype_of(cfg))                # [d, V]
+    return jnp.einsum("...d,dv->...v", x, w)
+
+
+def lm_head_init(key, cfg: ModelConfig) -> Optional[dict]:
+    if cfg.tie_embeddings:
+        return None
+    return {"kernel": dense_init(key, (cfg.d_model, cfg.vocab_size),
+                                 pdtype_of(cfg))}

@@ -1,0 +1,128 @@
+"""Mamba-2 (SSD) block — selective state-space layer (zamba2 backbone).
+
+Kept faithful: per-head scalar decay A (the Mamba-2 simplification),
+input-dependent Δ (softplus), B/C projections shared across heads within a
+group, causal depthwise conv on the SSM input path, gated (silu z) output
+with RMS norm, and a skip D·x term. State: h ∈ R^{heads × head_dim × n}.
+
+  h_t = exp(Δ_t·a) · h_{t−1} + Δ_t · (x_t ⊗ B_t)
+  y_t = h_t · C_t + D ⊙ x_t
+
+Training scans over time; decode carries (conv_buf, h) — constant state, so
+zamba2 decodes 500k contexts with O(1) SSM memory (plus the shared-attention
+cache handled in transformer.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, dtype_of, pdtype_of
+from repro.models.scan_utils import chunked_scan
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    return d_inner, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba2_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, H, D, n = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    pd = pdtype_of(cfg)
+    return {
+        # fused input projection → [z, x, B, C, dt]
+        "w_in_z": dense_init(ks[0], (d, d_inner), pd),
+        "w_in_x": dense_init(ks[1], (d, d_inner), pd),
+        "w_in_B": dense_init(ks[2], (d, n), pd),
+        "w_in_C": dense_init(ks[3], (d, n), pd),
+        "w_in_dt": dense_init(ks[4], (d, H), pd),
+        "dt_bias": jnp.zeros((H,), pd),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(pd),
+        "D": jnp.ones((H,), pd),
+        "conv_w": (jax.random.normal(ks[5], (cfg.conv_width, d_inner),
+                                     jnp.float32) * 0.1).astype(pd),
+        "norm_scale": jnp.ones((d_inner,), pd),
+        "w_out": dense_init(jax.random.fold_in(key, 7), (d_inner, d), pd,
+                            fan_in=d_inner),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, buf: jnp.ndarray | None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv along time. x: [B,S,C]; w: [W,C]; buf: [B,W-1,C]."""
+    B, S, C = x.shape
+    W = w.shape[0]
+    if buf is None:
+        buf = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([buf, x], axis=1)              # [B, S+W-1, C]
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i : i + S] * w[i][None, None]
+    return out, xp[:, -(W - 1):]
+
+
+def _gated_rmsnorm(x: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray,
+                   eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def mamba2_forward(
+    params: dict,
+    x: jnp.ndarray,                 # [B, S, d]
+    cfg: ModelConfig,
+    state: Tuple[jnp.ndarray, jnp.ndarray] | None = None,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Returns (out, (conv_buf, h)) — state carried at decode."""
+    B, S, d = x.shape
+    d_inner, H, D, n = _dims(cfg)
+    dt = dtype_of(cfg)
+
+    z = jnp.einsum("bsd,de->bse", x, params["w_in_z"].astype(dt))
+    xc = jnp.einsum("bsd,de->bse", x, params["w_in_x"].astype(dt))
+    Bv = jnp.einsum("bsd,dn->bsn", x, params["w_in_B"].astype(dt))
+    Cv = jnp.einsum("bsd,dn->bsn", x, params["w_in_C"].astype(dt))
+    delta = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, params["w_in_dt"].astype(dt)).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )                                                    # [B, S, H]
+
+    conv_buf0 = None if state is None else state[0]
+    xc, conv_buf = _causal_conv(xc, params["conv_w"].astype(dt), conv_buf0)
+    xc = jax.nn.silu(xc)
+
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))    # [H] (negative)
+    h0 = (jnp.zeros((B, H, D, n), jnp.float32) if state is None else state[1])
+
+    xh = xc.reshape(B, S, H, D).astype(jnp.float32)
+    Bf = Bv.astype(jnp.float32)
+    Cf = Cv.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, Bt, Ct, dlt = inp                            # [B,H,D],[B,n],[B,n],[B,H]
+        decay = jnp.exp(dlt * a[None, :])                # [B, H]
+        dBx = jnp.einsum("bhd,bn,bh->bhdn", xt, Bt, dlt)
+        # state sharded over (data, model): heads split across the model
+        # axis — the SSM analogue of head-parallel attention.
+        h_new = constrain(decay[..., None, None] * h + dBx, "bh")
+        y = jnp.einsum("bhdn,bn->bhd", h_new, Ct)
+        return h_new, y
+
+    inputs = (xh.transpose(1, 0, 2, 3), Bf.transpose(1, 0, 2),
+              Cf.transpose(1, 0, 2), delta.transpose(1, 0, 2))
+    h_last, ys = chunked_scan(step, h0, inputs, chunk=64)
+    y = ys.transpose(1, 0, 2, 3)                         # [B, S, H, D]
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner).astype(dt)
+    y = _gated_rmsnorm(y, z, params["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(dt))
+    return out, (conv_buf, h_last)

@@ -1,0 +1,40 @@
+"""Gated MLP (SwiGLU / GeGLU) block."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, dtype_of, pdtype_of
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+}
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    kg, ku, kd = jax.random.split(key, 3)
+    pd = pdtype_of(cfg)
+    p = {
+        "w_up": dense_init(ku, (d, f), pd),
+        "w_down": dense_init(kd, (f, d), pd, fan_in=f),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = dense_init(kg, (d, f), pd)
+    return p
+
+
+def mlp_forward(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dt = dtype_of(cfg)
+    act = _ACTS[cfg.act]
+    u = jnp.einsum("...d,df->...f", x, params["w_up"].astype(dt))
+    if cfg.mlp_gated:
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(dt))
+        h = act(g) * u
+    else:
+        h = act(u)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(dt))

@@ -1,0 +1,148 @@
+"""Mixture-of-Experts block: top-k router + sort-based capacity dispatch.
+
+Dispatch is the same fixed-capacity bucketing pattern as the engine's frog
+exchange (gas.py `_pack_by_shard`): argsort token-slots by expert, rank-in-
+group by index arithmetic, capacity overflow dropped. No [T, E, C] one-hot
+tensors are ever materialized — the dispatch buffer is [E, C, d] and experts
+are applied with a single batched einsum, sharded expert-parallel
+(P("model", None, None)) by the sharding rules.
+
+Partial synchronization hook (DESIGN.md §3): with ``p_s < 1`` the router's
+expert set is stochastically masked per step — the FrogWild channel lottery
+applied to EP dispatch; dropped experts' tokens fall through to their
+next-best routed expert, and router probabilities are renormalized (the
+analogue of the blocking-walk redraw).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, dtype_of, pdtype_of
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    pd = pdtype_of(cfg)
+    return {
+        "router": dense_init(kr, (d, E), pd),
+        "w_gate": dense_init(kg, (E, d, f), pd, fan_in=d),
+        "w_up": dense_init(ku, (E, d, f), pd, fan_in=d),
+        "w_down": dense_init(kd, (E, f, d), pd, fan_in=f),
+    }
+
+
+def capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    import math
+
+    c = num_tokens * cfg.num_experts_per_tok / cfg.num_experts
+    c = math.ceil(c * cfg.moe_capacity_factor)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_forward(
+    params: dict,
+    x: jnp.ndarray,                    # [B, S, d]
+    cfg: ModelConfig,
+    expert_mask: Optional[jnp.ndarray] = None,   # bool[E] — partial-sync lottery
+) -> Tuple[jnp.ndarray, dict]:
+    """Returns (output, aux) where aux carries the load-balancing loss.
+
+    GShard-style **grouped dispatch**: each sequence is its own routing group
+    (capacity per group = S·k/E·factor), and the sort/bucket runs vmapped
+    over the batch dim. Groups align with the data-sharded batch axis, so
+    under GSPMD the dispatch is entirely batch-local — no global sort, no
+    token all-gather; only the expert einsums (E sharded on the model axis)
+    move tokens, which is the EP all-to-all proper.
+    """
+    B0, S0, d = x.shape
+    # GShard-style routing groups: long sequences are split into ≤4096-token
+    # groups (capacity enforced per group) so dispatch gathers stay bounded
+    # at 32k+ prefill.
+    gs = S0
+    while gs > 4096 and gs % 2 == 0:
+        gs //= 2
+    B, S = B0 * (S0 // gs), gs
+    x = x.reshape(B, S, d)
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    dt = dtype_of(cfg)
+    C = capacity(cfg, S)
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"].astype(dt))
+    logits = logits.astype(jnp.float32)
+    if expert_mask is not None:
+        logits = jnp.where(expert_mask[None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)                       # [B, S, E]
+    top_p, top_e = jax.lax.top_k(probs, k)                        # [B, S, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing auxiliary loss (Switch-style, global) ----
+    me = probs.mean(axis=(0, 1))                                  # [E]
+    ce = jax.nn.one_hot(top_e[..., 0], E).mean(axis=(0, 1))       # [E]
+    aux_loss = E * jnp.sum(me * ce)
+
+    def dispatch_group(xg, eg, wg):
+        """One group: xg [S, d], eg/wg [S, k] → (buf [E,C,d], meta)."""
+        e_flat = eg.reshape(-1)                                   # [S*k]
+        w_flat = wg.reshape(-1).astype(dt)
+        t_flat = jnp.arange(S * k, dtype=jnp.int32) // k
+        order = jnp.argsort(e_flat)                               # stable
+        e_s, t_s, w_s = e_flat[order], t_flat[order], w_flat[order]
+        first = jnp.searchsorted(e_s, jnp.arange(E), side="left")
+        rank = jnp.arange(S * k, dtype=jnp.int32) - first[
+            jnp.clip(e_s, 0, E - 1)].astype(jnp.int32)
+        ok = rank < C
+        row = jnp.where(ok, e_s, E)                               # OOB drops
+        col = jnp.where(ok, rank, 0)
+        buf = jnp.zeros((E, C, d), dt).at[row, col].set(
+            xg[t_s], mode="drop")
+        return buf, (row, col, t_s, w_s, ok)
+
+    def combine_group(ob, m):
+        row, col, t_s, w_s, ok = m
+        vals = ob[row, col] * w_s[:, None]                        # [S*k, d]
+        vals = jnp.where(ok[:, None], vals, 0)
+        y = jnp.zeros((S, d), dt).at[t_s].add(vals)
+        return y, (~ok).sum()
+
+    act = _ACTS[cfg.act]
+
+    def chunk_fn(_, inp):
+        """Dispatch + experts + combine for one batch sub-chunk. The chunk
+        scan (checkpointed) bounds the [S·k, d]-sized gather/scatter
+        transients — with all groups vmapped at once they dominate HBM."""
+        xg, eg, wg = inp
+        buf, meta = jax.vmap(dispatch_group)(xg, eg, wg)          # [Bc,E,C,d]
+        buf = constrain(buf, "bh")    # batch over data, experts over model
+        g = jnp.einsum("becd,edf->becf", buf, params["w_gate"].astype(dt))
+        u = jnp.einsum("becd,edf->becf", buf, params["w_up"].astype(dt))
+        h = constrain(act(g) * u, "bh")
+        out_buf = constrain(
+            jnp.einsum("becf,efd->becd", h, params["w_down"].astype(dt)),
+            "bh")
+        y, dropped = jax.vmap(combine_group)(out_buf, meta)
+        return None, (y, dropped.sum())
+
+    # chunk count: bound transients while keeping the per-chunk batch a
+    # multiple of 32 (so data-axis sharding of the chunk survives on meshes
+    # up to dp=32); degenerate cases fall back to one pass.
+    n_chunks = min(cfg.moe_dispatch_chunks, max(1, B // 32))
+    if B % n_chunks != 0:
+        n_chunks = 1
+    Bc = B // n_chunks
+    xs = (x.reshape(n_chunks, Bc, S, d),
+          top_e.reshape(n_chunks, Bc, S, k),
+          top_p.reshape(n_chunks, Bc, S, k))
+    if n_chunks > 1:
+        _, (y, dropped) = jax.lax.scan(jax.checkpoint(chunk_fn), None, xs)
+        dropped = dropped.sum()
+    else:
+        _, (y, dropped) = chunk_fn(None, jax.tree.map(lambda a: a[0], xs))
+    return y.reshape(B0, S0, d), {"aux_loss": aux_loss, "dropped": dropped}

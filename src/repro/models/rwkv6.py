@@ -1,0 +1,171 @@
+"""RWKV-6 ("Finch") block — attention-free linear recurrence with
+data-dependent decay (arXiv:2404.05892).
+
+Faithful core mechanics kept:
+  * token-shift mixing (μ-interpolation with the previous token),
+  * per-channel **data-dependent decay** w_t = exp(−exp(w0 + LoRA(x_t)))
+    — the defining Finch feature,
+  * per-head state S ∈ R^{D×D} recurrence  S_t = diag(w_t)·S_{t−1} + k_t v_tᵀ,
+    readout o_t = r_tᵀ(S_{t−1} + diag(u)·k_t v_tᵀ),
+  * grouped output norm + silu(g) gating, squared-ReLU channel mix.
+
+Training runs a lax.scan over time (O(T) state memory); decode carries
+(x_prev, S) — constant-size state, which is why rwkv6 is the cheapest
+``long_500k`` architecture in the fleet.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, dtype_of, pdtype_of
+from repro.models.scan_utils import chunked_scan
+
+
+LORA_RANK = 64
+
+
+def rwkv_time_mix_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H, D = cfg.ssm_heads, cfg.ssm_head_dim
+    assert H * D == d, (H, D, d)
+    ks = jax.random.split(key, 10)
+    pd = pdtype_of(cfg)
+    return {
+        "mu_r": jnp.full((d,), 0.5, pd),
+        "mu_k": jnp.full((d,), 0.5, pd),
+        "mu_v": jnp.full((d,), 0.5, pd),
+        "mu_w": jnp.full((d,), 0.5, pd),
+        "mu_g": jnp.full((d,), 0.5, pd),
+        "w_r": dense_init(ks[0], (d, d), pd),
+        "w_k": dense_init(ks[1], (d, d), pd),
+        "w_v": dense_init(ks[2], (d, d), pd),
+        "w_g": dense_init(ks[3], (d, d), pd),
+        "w_o": dense_init(ks[4], (d, d), pd),
+        # data-dependent decay: w0 + tanh(x A) B  (low-rank)
+        "w0": jnp.full((d,), -6.0, pd),
+        "w_lora_a": dense_init(ks[5], (d, LORA_RANK), pd),
+        "w_lora_b": dense_init(ks[6], (LORA_RANK, d), pd, fan_in=LORA_RANK),
+        "u": (jax.random.normal(ks[7], (d,), jnp.float32) * 0.1).astype(pd),
+        "ln_scale": jnp.ones((d,), pd),
+    }
+
+
+def _decay(params: dict, xw: jnp.ndarray, dt) -> jnp.ndarray:
+    """w_t ∈ (0, 1): exp(−exp(w0 + tanh(x·A)·B)) — data-dependent decay."""
+    a = jnp.tanh(jnp.einsum("...d,dr->...r", xw, params["w_lora_a"].astype(dt)))
+    lora = jnp.einsum("...r,rd->...d", a, params["w_lora_b"].astype(dt))
+    raw = params["w0"].astype(jnp.float32) + lora.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(raw))
+
+
+def _group_norm(x: jnp.ndarray, scale: jnp.ndarray, H: int, eps: float
+                ) -> jnp.ndarray:
+    """Per-head (group) normalization of the readout."""
+    B, d = x.shape
+    xh = x.reshape(B, H, d // H).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    y = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (y.reshape(B, d) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rwkv_time_mix(
+    params: dict,
+    x: jnp.ndarray,                  # [B, S, d]
+    cfg: ModelConfig,
+    state: Tuple[jnp.ndarray, jnp.ndarray] | None = None,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Returns (out [B,S,d], (x_last, S_last)). ``state``: carried at decode.
+
+    §Perf note (EXPERIMENTS.md): the r/k/v/g/decay projections are hoisted
+    OUT of the time recurrence into full-sequence matmuls — token-shift
+    inputs are known for all t up front — so each weight matrix is read from
+    HBM once per call instead of once per timestep. The recurrence streams
+    only precomputed per-step vectors plus the state. (The original
+    hypothesis — that the state itself dominated HBM — was refuted: per-step
+    weight re-reads were ~75% of the memory term.)
+    """
+    B, S, d = x.shape
+    H, D = cfg.ssm_heads, cfg.ssm_head_dim
+    dt = dtype_of(cfg)
+    if state is None:
+        x_prev0 = jnp.zeros((B, d), dt)
+        S0 = jnp.zeros((B, H, D, D), jnp.float32)
+    else:
+        x_prev0, S0 = state
+
+    shifted = jnp.concatenate([x_prev0[:, None], x[:, :-1]], axis=1)
+
+    def mix(mu):
+        m = params[mu].astype(dt)
+        return x * m + shifted * (1.0 - m)
+
+    # full-sequence projections (one HBM weight read per call)
+    r = jnp.einsum("bsd,de->bse", mix("mu_r"), params["w_r"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", mix("mu_k"), params["w_k"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", mix("mu_v"), params["w_v"].astype(dt))
+    g = jnp.einsum("bsd,de->bse", mix("mu_g"), params["w_g"].astype(dt))
+    w = _decay(params, mix("mu_w"), dt)                           # [B,S,d] f32
+
+    rh = r.reshape(B, S, H, D).astype(jnp.float32).transpose(1, 0, 2, 3)
+    kh = k.reshape(B, S, H, D).astype(jnp.float32).transpose(1, 0, 2, 3)
+    vh = v.reshape(B, S, H, D).astype(jnp.float32).transpose(1, 0, 2, 3)
+    wh = w.reshape(B, S, H, D).transpose(1, 0, 2, 3)
+    uh = params["u"].astype(jnp.float32).reshape(H, D)
+
+    def step(Sst, inp):
+        rt, kt, vt, wt = inp                                      # [B,H,D]
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)                  # k ⊗ v
+        if cfg.ssm_state_sharding:
+            # §Perf V1: shard the state value-dim over the model axis —
+            # per-step ops contract the key dim, so this stays local.
+            kv = constrain(kv, "state4")
+        o = jnp.einsum("bhi,bhij->bhj", rt, Sst + uh[None, :, :, None] * kv)
+        S_new = wt[..., None] * Sst + kv
+        if cfg.ssm_state_sharding:
+            S_new = constrain(S_new, "state4")
+        return S_new, o
+
+    S_last, outs = chunked_scan(step, S0, (rh, kh, vh, wh), chunk=256)
+    o_seq = outs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(dt)
+    out = jax.vmap(
+        lambda a: _group_norm(a, params["ln_scale"], H, cfg.norm_eps),
+        in_axes=1, out_axes=1)(o_seq)
+    out = out * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", out, params["w_o"].astype(dt))
+    return out, (x[:, -1], S_last)
+
+
+def rwkv_channel_mix_init(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    pd = pdtype_of(cfg)
+    return {
+        "mu": jnp.full((d,), 0.5, pd),
+        "w_in": dense_init(k1, (d, f), pd),
+        "w_out": dense_init(k2, (f, d), pd, fan_in=f),
+    }
+
+
+def rwkv_channel_mix(
+    params: dict,
+    x: jnp.ndarray,                 # [B, S, d]
+    cfg: ModelConfig,
+    x_prev: jnp.ndarray | None = None,   # [B, d] decode carry
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, S, d = x.shape
+    dt = dtype_of(cfg)
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), dt)
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    m = params["mu"].astype(dt)
+    xm = x * m + shifted * (1.0 - m)
+    h = jnp.einsum("bsd,df->bsf", xm, params["w_in"].astype(dt))
+    h = jnp.square(jax.nn.relu(h))                   # squared ReLU (RWKV)
+    y = jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(dt))
+    return y, x[:, -1]

@@ -1,0 +1,39 @@
+"""Time-chunked scan with checkpointing — linear-RNN training memory fix.
+
+``lax.scan`` autodiff saves the carry at every step; for SSM states
+(rwkv6: [B,H,64,64] ≈ 10 MB/step, mamba2: [B,H,64,n] ≈ 67 MB/step at the
+dry-run batch) a 4096-step sequence would stash 43–274 GB per device.
+``chunked_scan`` nests two scans — outer over S/chunk segments (AD saves
+only segment-boundary states), inner over the chunk under ``jax.checkpoint``
+(recomputed during backward) — the classic BPTT-with-checkpointing trade:
+memory  O(S/chunk + chunk)  instead of O(S), at ~2× step compute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+
+
+def chunked_scan(
+    step: Callable[[Any, Any], Tuple[Any, Any]],
+    carry0: Any,
+    xs: Any,                      # pytree, leaves time-major [S, ...]
+    chunk: int = 256,
+) -> Tuple[Any, Any]:
+    """Drop-in for ``lax.scan(step, carry0, xs)`` with O(√S)-ish AD memory."""
+    leaves = jax.tree.leaves(xs)
+    S = leaves[0].shape[0]
+    if S <= chunk or S % chunk != 0:
+        return jax.lax.scan(step, carry0, xs)
+    n = S // chunk
+    xs_c = jax.tree.map(lambda a: a.reshape(n, chunk, *a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def segment(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    carry, ys_c = jax.lax.scan(segment, carry0, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape(S, *a.shape[2:]), ys_c)
+    return carry, ys

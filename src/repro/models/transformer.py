@@ -1,0 +1,530 @@
+"""Model assembly for every architecture family.
+
+Training/prefill forward passes use **scan-over-layers** with stacked block
+parameters (one traced block, L-fold loop) — this is what keeps the
+512-device dry-run HLO small enough to compile for 7B/42B configs — plus
+optional remat. Heterogeneous layer patterns (gemma3's 5:1 local:global) stay
+inside the scan via ``lax.cond`` on a per-layer flag, so the block stays
+homogeneous for XLA.
+
+Decode takes the opposite trade: a Python loop over layers (per-layer
+compute is tiny, and caches are heterogeneous — ring buffers for windowed
+layers, full buffers for global ones, SSM states for mamba/rwkv).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv
+from repro.models.attention import (
+    attention_forward,
+    cache_is_ring,
+    decode_attention,
+    init_kv_cache,
+    project_kv,
+)
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    dense_init,
+    dtype_of,
+    embed_tokens,
+    embedding_init,
+    lm_head_init,
+    pdtype_of,
+    rmsnorm,
+    rmsnorm_init,
+    unembed,
+)
+from repro.models.mlp import mlp_forward, mlp_init
+from repro.distributed.context import constrain
+
+
+# ----------------------------------------------------------------------------
+# per-family block init
+# ----------------------------------------------------------------------------
+
+def _dense_block_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, pdtype_of(cfg)),
+        "attn": attn_mod.attention_init(k1, cfg),
+        "ln2": rmsnorm_init(cfg.d_model, pdtype_of(cfg)),
+        "mlp": mlp_init(k2, cfg),
+    }
+
+
+def _moe_block_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, pdtype_of(cfg)),
+        "attn": attn_mod.attention_init(k1, cfg),
+        "ln2": rmsnorm_init(cfg.d_model, pdtype_of(cfg)),
+        "moe": moe_mod.moe_init(k2, cfg),
+    }
+
+
+def _rwkv_block_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, pdtype_of(cfg)),
+        "time_mix": rwkv.rwkv_time_mix_init(k1, cfg),
+        "ln2": rmsnorm_init(cfg.d_model, pdtype_of(cfg)),
+        "channel_mix": rwkv.rwkv_channel_mix_init(k2, cfg),
+    }
+
+
+def _mamba_block_init(key, cfg: ModelConfig) -> dict:
+    return {
+        "ln": rmsnorm_init(cfg.d_model, pdtype_of(cfg)),
+        "mamba": m2.mamba2_init(key, cfg),
+    }
+
+
+def _encdec_block_init(key, cfg: ModelConfig, cross: bool) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model, pdtype_of(cfg)),
+        "attn": attn_mod.attention_init(ks[0], cfg),
+        "ln2": rmsnorm_init(cfg.d_model, pdtype_of(cfg)),
+        "mlp": mlp_init(ks[1], cfg),
+    }
+    if cross:
+        p["ln_cross"] = rmsnorm_init(cfg.d_model, pdtype_of(cfg))
+        p["cross_attn"] = attn_mod.attention_init(ks[2], cfg)
+    return p
+
+
+def _stacked(init_fn, key, L: int):
+    keys = jax.random.split(key, L)
+    return jax.vmap(init_fn)(keys)
+
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    k_emb, k_blocks, k_head, k_extra = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": embedding_init(k_emb, cfg),
+        "final_norm": rmsnorm_init(cfg.d_model, pdtype_of(cfg)),
+    }
+    head = lm_head_init(k_head, cfg)
+    if head is not None:
+        params["head"] = head
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["blocks"] = _stacked(
+            lambda k: _dense_block_init(k, cfg), k_blocks, cfg.num_layers)
+        if fam == "vlm":
+            params["vision_proj"] = {
+                "kernel": dense_init(k_extra, (cfg.d_model, cfg.d_model),
+                                     pdtype_of(cfg))
+            }
+    elif fam == "moe":
+        params["blocks"] = _stacked(
+            lambda k: _moe_block_init(k, cfg), k_blocks, cfg.num_layers)
+    elif fam == "ssm":
+        params["blocks"] = _stacked(
+            lambda k: _rwkv_block_init(k, cfg), k_blocks, cfg.num_layers)
+    elif fam == "hybrid":
+        params["blocks"] = _stacked(
+            lambda k: _mamba_block_init(k, cfg), k_blocks, cfg.num_layers)
+        ka, km = jax.random.split(k_extra)
+        # zamba2's weight-shared transformer block (attention + MLP), applied
+        # at every shared_attn_every-th depth with the same parameters.
+        params["shared_attn"] = {
+            "ln": rmsnorm_init(cfg.d_model, pdtype_of(cfg)),
+            "attn": attn_mod.attention_init(ka, cfg),
+            "ln2": rmsnorm_init(cfg.d_model, pdtype_of(cfg)),
+            "mlp": mlp_init(km, cfg),
+        }
+    elif fam == "encdec":
+        ke, kd = jax.random.split(k_blocks)
+        params["enc_blocks"] = _stacked(
+            lambda k: _encdec_block_init(k, cfg, cross=False),
+            ke, cfg.encoder_layers)
+        params["dec_blocks"] = _stacked(
+            lambda k: _encdec_block_init(k, cfg, cross=True),
+            kd, cfg.num_layers)
+        params["enc_final_norm"] = rmsnorm_init(cfg.d_model, pdtype_of(cfg))
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return params
+
+
+# ----------------------------------------------------------------------------
+# helpers
+# ----------------------------------------------------------------------------
+
+def _sinusoidal(S: int, d: int, dtype) -> jnp.ndarray:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _sinusoidal_at(pos: jnp.ndarray, d: int, dtype) -> jnp.ndarray:
+    """Sinusoidal embedding for one (dynamic) position."""
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _is_global_flags(cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.asarray(
+        [cfg.layer_is_global(i) for i in range(cfg.num_layers)], dtype=bool
+    )
+
+
+def _maybe_remat(fn, remat: bool, family: str = "dense"):
+    if not remat:
+        return fn
+    if family in ("ssm", "hybrid"):
+        # recurrent blocks: save nothing — the per-step projections that the
+        # dots policy would keep are O(S·B·d) *per step* and dwarf HBM;
+        # recomputing them inside the chunked time scan is the memory-sane
+        # trade for linear-RNN training.
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    )
+
+
+# ----------------------------------------------------------------------------
+# training / prefill forward
+# ----------------------------------------------------------------------------
+
+def forward_train(
+    params: Dict[str, Any],
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    remat: bool = False,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence forward. Returns (logits [B,S,V], aux losses).
+
+    batch keys: "tokens" [B,S]; VLM adds "prefix_embeds" [B,P,d]; whisper
+    adds "encoder_frames" [B,T_enc,d] (stub frontend output).
+    """
+    fam = cfg.family
+    dt = dtype_of(cfg)
+    x = embed_tokens(params["embed"], batch["tokens"], cfg)
+    x = constrain(x, "btd")
+    aux: Dict[str, jnp.ndarray] = {}
+
+    if fam == "vlm":
+        prefix = jnp.einsum(
+            "bpd,de->bpe", batch["prefix_embeds"].astype(dt),
+            params["vision_proj"]["kernel"].astype(dt))
+        x = jnp.concatenate([prefix, x], axis=1)
+
+    if fam in ("dense", "vlm"):
+        flags = _is_global_flags(cfg)
+
+        def block(x, scanned):
+            bp, is_glob = scanned
+            h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+            if cfg.global_every is None:
+                a = attention_forward(bp["attn"], h, cfg,
+                                      is_global=cfg.sliding_window is None)
+            else:
+                a = jax.lax.cond(
+                    is_glob,
+                    lambda hh: attention_forward(bp["attn"], hh, cfg,
+                                                 is_global=True),
+                    lambda hh: attention_forward(bp["attn"], hh, cfg,
+                                                 is_global=False),
+                    h,
+                )
+            x = x + a
+            h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+            x = x + mlp_forward(bp["mlp"], h2, cfg)
+            return constrain(x, "btd"), None
+
+        x, _ = jax.lax.scan(_maybe_remat(block, remat), x,
+                            (params["blocks"], flags))
+
+    elif fam == "moe":
+        moe_ck = jax.checkpoint(
+            lambda mp, h: moe_mod.moe_forward(mp, h, cfg))
+
+        def block(x, bp):
+            h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+            x = x + attention_forward(bp["attn"], h, cfg, is_global=True)
+            h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+            # nested checkpoint: the dispatch gathers ([S·k, d] per group)
+            # are recomputed in their own segment during backward instead of
+            # coexisting with the attention residuals.
+            y, moe_aux = moe_ck(bp["moe"], h2)
+            return constrain(x + y, "btd"), moe_aux["aux_loss"]
+
+        x, aux_losses = jax.lax.scan(_maybe_remat(block, remat), x,
+                                     params["blocks"])
+        aux["moe_aux_loss"] = aux_losses.mean()
+
+    elif fam == "ssm":
+        def block(x, bp):
+            h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+            y, _ = rwkv.rwkv_time_mix(bp["time_mix"], h, cfg)
+            x = x + y
+            h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+            y2, _ = rwkv.rwkv_channel_mix(bp["channel_mix"], h2, cfg)
+            return constrain(x + y2, "btd"), None
+
+        x, _ = jax.lax.scan(_maybe_remat(block, remat, "ssm"), x,
+                            params["blocks"])
+
+    elif fam == "hybrid":
+        x = _hybrid_forward_train(params, x, cfg, remat)
+
+    elif fam == "encdec":
+        enc = _encoder_forward(params, batch["encoder_frames"], cfg, remat)
+
+        def block(x, bp):
+            h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+            x = x + attention_forward(bp["attn"], h, cfg, use_rope=False)
+            hc = rmsnorm(bp["ln_cross"], x, cfg.norm_eps)
+            x = x + attention_forward(bp["cross_attn"], hc, cfg,
+                                      causal=False, kv_source=enc)
+            h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+            return constrain(x + mlp_forward(bp["mlp"], h2, cfg), "btd"), None
+
+        S = x.shape[1]
+        x = x + _sinusoidal(S, cfg.d_model, dt)[None]
+        x, _ = jax.lax.scan(_maybe_remat(block, remat), x, params["dec_blocks"])
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg, params.get("head"))
+    return constrain(logits, "logits"), aux
+
+
+def _encoder_forward(params, frames: jnp.ndarray, cfg: ModelConfig,
+                     remat: bool) -> jnp.ndarray:
+    """Whisper encoder over precomputed frame embeddings (conv stub)."""
+    dt = dtype_of(cfg)
+    x = frames.astype(dt)
+    x = x + _sinusoidal(x.shape[1], cfg.d_model, dt)[None]
+
+    def block(x, bp):
+        h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        x = x + attention_forward(bp["attn"], h, cfg, causal=False,
+                                  use_rope=False)
+        h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        return constrain(x + mlp_forward(bp["mlp"], h2, cfg), "btd"), None
+
+    x, _ = jax.lax.scan(_maybe_remat(block, remat), x, params["enc_blocks"])
+    return rmsnorm(params["enc_final_norm"], x, cfg.norm_eps)
+
+
+def _hybrid_forward_train(params, x: jnp.ndarray, cfg: ModelConfig,
+                          remat: bool) -> jnp.ndarray:
+    """Zamba2: scan groups of mamba2 blocks, shared attention in between.
+
+    The shared attention block (single weight set) is applied after every
+    ``shared_attn_every`` mamba layers — weight sharing is the zamba2 trick
+    that keeps the attention parameter count tiny.
+    """
+    L = cfg.num_layers
+    period = cfg.shared_attn_every or L
+
+    def mamba_block(x, bp):
+        h = rmsnorm(bp["ln"], x, cfg.norm_eps)
+        y, _ = m2.mamba2_forward(bp["mamba"], h, cfg)
+        return constrain(x + y, "btd"), None
+
+    def shared_block(x):
+        sp = params["shared_attn"]
+        h = rmsnorm(sp["ln"], x, cfg.norm_eps)
+        x = x + attention_forward(sp["attn"], h, cfg, is_global=True)
+        h2 = rmsnorm(sp["ln2"], x, cfg.norm_eps)
+        return constrain(x + mlp_forward(sp["mlp"], h2, cfg), "btd")
+
+    # Structure the depth loop as a scan over (period-sized mamba group +
+    # one shared-block application): scan's sequential backward keeps only
+    # ONE group's recompute residuals live at a time (a python loop lets the
+    # scheduler keep every site's transients alive simultaneously).
+    n_groups = L // period
+    tail = L - n_groups * period
+
+    def group_fn(x, gp):
+        x, _ = jax.lax.scan(_maybe_remat(mamba_block, remat, "hybrid"), x, gp)
+        return shared_block(x), None
+
+    if n_groups:
+        grouped = jax.tree.map(
+            lambda a: a[: n_groups * period].reshape(
+                n_groups, period, *a.shape[1:]),
+            params["blocks"])
+        x, _ = jax.lax.scan(_maybe_remat(group_fn, remat, "dense"), x, grouped)
+    if tail:
+        tail_p = jax.tree.map(lambda a: a[n_groups * period:], params["blocks"])
+        x, _ = jax.lax.scan(_maybe_remat(mamba_block, remat, "hybrid"), x,
+                            tail_p)
+    return x
+
+
+# ----------------------------------------------------------------------------
+# decode (KV-cache / SSM-state serving path)
+# ----------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DecodeState:
+    pos: jnp.ndarray                      # int32[] — next position to write
+    layers: list                          # per-layer cache / SSM state
+    cross: Optional[list] = None          # whisper: per-layer (k, v) from enc
+    shared: Optional[list] = None         # zamba2: per-site shared-attn cache
+
+
+def init_decode_state(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    encoder_frames: Optional[jnp.ndarray] = None,
+) -> DecodeState:
+    fam = cfg.family
+    dt = dtype_of(cfg)
+    layers: list = []
+    cross = None
+    shared = None
+    if fam in ("dense", "vlm", "moe", "encdec"):
+        for i in range(cfg.num_layers):
+            is_glob = cfg.layer_is_global(i) if fam != "encdec" else True
+            layers.append(init_kv_cache(cfg, batch, max_len, is_glob))
+    elif fam == "ssm":
+        d = cfg.d_model
+        H, D = cfg.ssm_heads, cfg.ssm_head_dim
+        for _ in range(cfg.num_layers):
+            layers.append({
+                "x_prev_tm": jnp.zeros((batch, d), dt),
+                "S": jnp.zeros((batch, H, D, D), jnp.float32),
+                "x_prev_cm": jnp.zeros((batch, d), dt),
+            })
+    elif fam == "hybrid":
+        d_inner, H, D, n = m2._dims(cfg)
+        W = cfg.conv_width
+        for _ in range(cfg.num_layers):
+            layers.append({
+                "conv_buf": jnp.zeros((batch, W - 1, d_inner), dt),
+                "h": jnp.zeros((batch, H, D, n), jnp.float32),
+            })
+        # one KV cache per application site of the weight-shared block —
+        # weights are shared, attention histories are not.
+        period = cfg.shared_attn_every or cfg.num_layers
+        n_sites = cfg.num_layers // period
+        shared = [init_kv_cache(cfg, batch, max_len, True)
+                  for _ in range(n_sites)]
+    if fam == "encdec":
+        if encoder_frames is None:
+            raise ValueError("whisper decode needs encoder_frames")
+        enc = _encoder_forward(params, encoder_frames, cfg, remat=False)
+        cross = []
+        for i in range(cfg.num_layers):
+            bp = jax.tree.map(lambda a: a[i], params["dec_blocks"])
+            cross.append(project_kv(bp["cross_attn"], enc, cfg))
+    return DecodeState(pos=jnp.zeros((), jnp.int32), layers=layers,
+                       cross=cross, shared=shared)
+
+
+def decode_step(
+    params: Dict[str, Any],
+    state: DecodeState,
+    tokens: jnp.ndarray,                  # int32[B] — current input token
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, DecodeState]:
+    """One autoregressive step. Returns (logits [B, V], new state)."""
+    fam = cfg.family
+    pos = state.pos
+    x = embed_tokens(params["embed"], tokens[:, None], cfg)    # [B, 1, d]
+    if fam == "encdec":
+        x = x + _sinusoidal_at(pos, cfg.d_model, x.dtype)[None, None]
+    new_layers = []
+    shared = state.shared
+
+    for i in range(cfg.num_layers):
+        bp = jax.tree.map(lambda a: a[i], params["blocks"]) if fam != "encdec" \
+            else jax.tree.map(lambda a: a[i], params["dec_blocks"])
+        lc = state.layers[i]
+        if fam in ("dense", "vlm"):
+            is_glob = cfg.layer_is_global(i)
+            h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+            a, lc = decode_attention(bp["attn"], h, lc, pos, cfg,
+                                     is_global=is_glob)
+            x = x + a
+            h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+            x = x + mlp_forward(bp["mlp"], h2, cfg)
+        elif fam == "moe":
+            h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+            a, lc = decode_attention(bp["attn"], h, lc, pos, cfg)
+            x = x + a
+            h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+            y, _ = moe_mod.moe_forward(bp["moe"], h2, cfg)
+            x = x + y
+        elif fam == "ssm":
+            h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+            y, (x_tm, S) = rwkv.rwkv_time_mix(
+                bp["time_mix"], h, cfg, state=(lc["x_prev_tm"], lc["S"]))
+            x = x + y
+            h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+            y2, x_cm = rwkv.rwkv_channel_mix(
+                bp["channel_mix"], h2, cfg, x_prev=lc["x_prev_cm"])
+            x = x + y2
+            lc = {"x_prev_tm": x_tm, "S": S, "x_prev_cm": x_cm}
+        elif fam == "hybrid":
+            h = rmsnorm(bp["ln"], x, cfg.norm_eps)
+            y, (cb, hst) = m2.mamba2_forward(
+                bp["mamba"], h, cfg, state=(lc["conv_buf"], lc["h"]))
+            x = x + y
+            lc = {"conv_buf": cb, "h": hst}
+            period = cfg.shared_attn_every or cfg.num_layers
+            if (i + 1) % period == 0:
+                site = (i + 1) // period - 1
+                sp = params["shared_attn"]
+                hs = rmsnorm(sp["ln"], x, cfg.norm_eps)
+                a, site_cache = decode_attention(sp["attn"], hs, shared[site],
+                                                 pos, cfg)
+                shared = shared[:site] + [site_cache] + shared[site + 1:]
+                x = x + a
+                hs2 = rmsnorm(sp["ln2"], x, cfg.norm_eps)
+                x = x + mlp_forward(sp["mlp"], hs2, cfg)
+        elif fam == "encdec":
+            h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+            a, lc = decode_attention(bp["attn"], h, lc, pos, cfg,
+                                     use_rope=False)
+            x = x + a
+            hc = rmsnorm(bp["ln_cross"], x, cfg.norm_eps)
+            kc, vc = state.cross[i]
+            x = x + _cross_decode(bp["cross_attn"], hc, kc, vc, cfg)
+            h2 = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+            x = x + mlp_forward(bp["mlp"], h2, cfg)
+        new_layers.append(lc)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x[:, 0], cfg, params.get("head"))
+    new_state = DecodeState(pos=pos + 1, layers=new_layers,
+                            cross=state.cross, shared=shared)
+    return logits, new_state
+
+
+def _cross_decode(params, x, k, v, cfg: ModelConfig) -> jnp.ndarray:
+    """Cross-attention for a single decode token (cached encoder K/V)."""
+    from repro.kernels import ref as kref
+
+    B = x.shape[0]
+    q = attn_mod._project_q(params, x, cfg)
+    out = kref.attention_ref(q, k, v, causal=False,
+                             logit_soft_cap=cfg.logit_soft_cap)
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, cfg.num_heads * cfg.head_dim)
+    return jnp.einsum("bsh,hd->bsd", out,
+                      params["wo"].astype(dtype_of(cfg)))

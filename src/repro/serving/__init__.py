@@ -1,0 +1,6 @@
+"""Serving substrate: prefill, decode (serve_step), request scheduler."""
+from repro.serving.prefill import prefill
+from repro.serving.decode import sample_token, serve_step
+from repro.serving.scheduler import BatchScheduler, Request
+
+__all__ = ["prefill", "serve_step", "sample_token", "BatchScheduler", "Request"]

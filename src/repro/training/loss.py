@@ -1,0 +1,33 @@
+"""LM loss: causal cross-entropy with f32 logits, z-loss and masking."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+
+
+def lm_loss(
+    logits: jnp.ndarray,               # [B, S, V] (any float dtype)
+    labels: jnp.ndarray,               # int32[B, S]
+    mask: Optional[jnp.ndarray] = None,  # f32/bool[B, S]; None = all valid
+    z_loss: float = 1e-4,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token cross entropy (labels are already shifted by the data
+    pipeline). Returns (scalar loss, metrics)."""
+    lf = constrain(logits.astype(jnp.float32), "logits")
+    lse = constrain(jax.nn.logsumexp(lf, axis=-1), "bt")         # [B, S]
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    zl = jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    total = loss + z_loss * (zl * mask).sum() / denom
+    acc = ((lf.argmax(-1) == labels) * mask).sum() / denom
+    return total, {"ce_loss": loss, "accuracy": acc,
+                   "tokens": mask.sum()}

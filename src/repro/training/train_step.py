@@ -1,0 +1,160 @@
+"""Train-step factory: baseline GSPMD mode and FrogWild partial-sync mode.
+
+* ``mode="gspmd"``   — single jit; batch sharded over data axes, params TP
+  (+FSDP) sharded; XLA inserts the gradient all-reduce. This is the
+  reference data-flow every dry-run cell lowers.
+* ``mode="partial_sync"`` — the paper's technique on the DP boundary:
+  shard_map manual over the data axes (model axis stays auto/GSPMD), local
+  backward, then the p_s-lottery gradient synchronization from grad_sync.py.
+  Carries an error-feedback residual in the train state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward_train
+from repro.training.grad_sync import (
+    PartialSyncConfig,
+    sync_grads_layer,
+    sync_grads_shard,
+)
+from repro.training.loss import lm_loss
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    opt: AdamWConfig = AdamWConfig()
+    remat: bool = True
+    moe_aux_weight: float = 0.01
+    mode: str = "gspmd"                     # gspmd | partial_sync
+    partial_sync: PartialSyncConfig = PartialSyncConfig()
+    accum_steps: int = 1                    # microbatches per optimizer step
+
+
+def _loss_fn(params, batch, cfg: ModelConfig, tcfg: TrainStepConfig):
+    logits, aux = forward_train(params, batch, cfg, remat=tcfg.remat)
+    if cfg.family == "vlm":
+        logits = logits[:, cfg.num_prefix_embeddings:]
+    loss, metrics = lm_loss(logits, batch["labels"])
+    if "moe_aux_loss" in aux:
+        loss = loss + tcfg.moe_aux_weight * aux["moe_aux_loss"]
+        metrics["moe_aux_loss"] = aux["moe_aux_loss"]
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainStepConfig,
+                    mesh: Optional[Mesh] = None,
+                    data_axes: Tuple[str, ...] = ("data",)):
+    """Returns ``step(train_state, batch, key) -> (train_state, metrics)``.
+
+    train_state = {"params", "opt", ["residual"]}. Not jitted here — the
+    launcher jits with in/out shardings (dry-run) or plainly (tests).
+    """
+    if tcfg.mode == "gspmd":
+        def step(state, batch, key):
+            params, opt_state = state["params"], state["opt"]
+            A = tcfg.accum_steps
+            if A <= 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    _loss_fn, has_aux=True)(params, batch, cfg, tcfg)
+            else:
+                # microbatching: sequential scan over batch slices with f32
+                # gradient accumulation — activation transients scale 1/A
+                # while params/optimizer memory is unchanged. Standard at
+                # 64k-tokens-per-chip batch shapes.
+                mb = jax.tree.map(
+                    lambda a: a.reshape(A, a.shape[0] // A, *a.shape[1:]),
+                    batch)
+
+                def micro(carry, mslice):
+                    g_acc, l_acc = carry
+                    (loss, metrics), grads = jax.value_and_grad(
+                        _loss_fn, has_aux=True)(params, mslice, cfg, tcfg)
+                    g_acc = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                    return (g_acc, l_acc + loss), metrics
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss), metrics = jax.lax.scan(
+                    micro, (g0, jnp.zeros((), jnp.float32)), mb)
+                grads = jax.tree.map(lambda g: g / A, grads)
+                loss = loss / A
+                metrics = jax.tree.map(lambda m: m.mean(), metrics)
+            params, opt_state, om = adamw_update(grads, opt_state, params,
+                                                 tcfg.opt)
+            metrics = dict(metrics, loss=loss, **om)
+            return {"params": params, "opt": opt_state}, metrics
+
+        return step
+
+    if tcfg.mode != "partial_sync":
+        raise ValueError(tcfg.mode)
+    if mesh is None:
+        raise ValueError("partial_sync mode needs the mesh")
+    ps = tcfg.partial_sync
+    axis = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def shard_body(params, opt_state, residual, batch, key):
+        (loss, metrics), grads = jax.value_and_grad(
+            _loss_fn, has_aux=True)(params, batch, cfg, tcfg)
+        me = jax.lax.axis_index(axis) if not isinstance(axis, tuple) else (
+            jax.lax.axis_index(axis[0]))
+        shard_key = key                      # folded inside partial_psum
+        if ps.granularity == "shard":
+            grads, residual = sync_grads_shard(
+                grads, axis, ps.p_s, shard_key, mode=ps.mode,
+                residual=residual)
+        else:
+            grads, residual = sync_grads_layer(
+                grads, axis, ps.p_s, shard_key, residual=residual)
+        params, opt_state, om = adamw_update(grads, opt_state, params,
+                                             tcfg.opt)
+        n = jax.lax.psum(jnp.ones(()), axis)
+        metrics = {k: jax.lax.psum(v, axis) / n for k, v in metrics.items()}
+        metrics = dict(metrics, loss=jax.lax.psum(loss, axis) / n, **om)
+        return params, opt_state, residual, metrics
+
+    manual = set(data_axes)
+    batch_spec = P(axis)
+
+    def step(state, batch, key):
+        params, opt_state = state["params"], state["opt"]
+        residual = state.get("residual")
+        if residual is None:
+            residual = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                    params)
+        in_batch_specs = jax.tree.map(lambda _: batch_spec, batch)
+        fn = jax.shard_map(
+            shard_body,
+            mesh=mesh,
+            in_specs=(P(), P(), P(), in_batch_specs, P()),
+            out_specs=(P(), P(), P(), P()),
+            axis_names=manual,
+            check_vma=False,
+        )
+        params, opt_state, residual, metrics = fn(
+            params, opt_state, residual, batch, key)
+        return {"params": params, "opt": opt_state, "residual": residual}, metrics
+
+    return step
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array,
+                     tcfg: Optional[TrainStepConfig] = None) -> Dict[str, Any]:
+    from repro.models.transformer import init_params
+
+    params = init_params(cfg, key)
+    state = {"params": params, "opt": adamw_init(params)}
+    if tcfg is not None and tcfg.mode == "partial_sync":
+        state["residual"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state

@@ -1,0 +1,28 @@
+"""Shared test config. NOTE: no XLA_FLAGS here — tests see 1 real device;
+multi-device behaviour is exercised via subprocess (test_multidevice.py)."""
+import os
+import subprocess
+import sys
+
+import pytest
+from hypothesis import settings
+
+# CPU container: keep hypothesis fast and deadline-free.
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(script: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Runs a python snippet in a subprocess with N placeholder devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, timeout=timeout,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout

@@ -1,0 +1,87 @@
+"""Graph substrate invariants (unit + property)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.graph import (
+    CSRGraph,
+    barabasi_albert,
+    build_csr,
+    chung_lu_powerlaw,
+    partition_graph,
+    ring_of_cliques,
+    to_ell,
+    transition_edges,
+    uniform_random,
+)
+
+
+@given(st.integers(50, 400), st.floats(1.5, 20.0), st.integers(0, 5))
+def test_generators_no_dangling(n, deg, seed):
+    g = chung_lu_powerlaw(n=n, avg_out_deg=deg, seed=seed)
+    assert g.n == n
+    assert int(np.asarray(g.out_deg).min()) >= 1
+    assert np.asarray(g.col_idx).min() >= 0
+    assert np.asarray(g.col_idx).max() < n
+    rp = np.asarray(g.row_ptr)
+    assert rp[0] == 0 and rp[-1] == g.nnz
+    assert (np.diff(rp) == np.asarray(g.out_deg)).all()
+
+
+@pytest.mark.parametrize("gen", [barabasi_albert, uniform_random])
+def test_other_generators(gen):
+    g = gen(300)
+    assert int(np.asarray(g.out_deg).min()) >= 1
+    assert g.nnz > 300
+
+
+def test_build_csr_fixes_dangling():
+    # vertex 2 has no out-edges
+    g = build_csr(4, np.array([0, 1, 3]), np.array([1, 2, 0]))
+    assert int(np.asarray(g.out_deg).min()) >= 1
+    assert g.nnz == 4
+
+
+def test_transition_edges_column_stochastic():
+    g = chung_lu_powerlaw(n=200, avg_out_deg=8, seed=3)
+    src, dst, w = transition_edges(g)
+    colsum = np.zeros(g.n)
+    np.add.at(colsum, np.asarray(src), np.asarray(w))
+    np.testing.assert_allclose(colsum, 1.0, atol=1e-5)
+
+
+@given(st.integers(20, 150), st.integers(2, 8))
+def test_partition_pads_consistently(n, shards):
+    g = uniform_random(n, avg_out_deg=4, seed=1)
+    gp, part = partition_graph(g, shards)
+    assert gp.n % shards == 0
+    assert part.shard_size * shards == gp.n
+    # padded vertices self-loop
+    for v in range(n, gp.n):
+        succ = gp.to_numpy().successors(v)
+        assert len(succ) == 1
+
+
+@given(st.integers(30, 200), st.integers(8, 40))
+def test_ell_roundtrip_spmv(n, K):
+    """Hybrid ELL (slab + spill) must reproduce the COO SpMV exactly."""
+    import jax
+
+    g = chung_lu_powerlaw(n=n, avg_out_deg=6, seed=7)
+    ell = to_ell(g, K=K)
+    x = jnp.asarray(np.random.default_rng(0).random(ell.n_rows),
+                    dtype=jnp.float32)
+    from repro.kernels import ops
+
+    y = ops.spmv(ell, x, impl="ref")[: g.n]
+    src, dst, w = transition_edges(g)
+    y_coo = jax.ops.segment_sum(x[src] * w, dst, num_segments=g.n)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_coo), atol=1e-5)
+
+
+def test_ring_of_cliques_structure():
+    g = ring_of_cliques(4, 5)
+    assert g.n == 20
+    deg = np.asarray(g.out_deg)
+    assert (deg >= 4).all()

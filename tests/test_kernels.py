@@ -1,0 +1,136 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import chung_lu_powerlaw, to_ell, uniform_random
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# SpMV (hybrid ELL)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,deg,K", [
+    (256, 4, 8), (300, 10, 16), (1000, 12, 32), (513, 30, 16),
+])
+def test_spmv_matches_ref(n, deg, K):
+    g = chung_lu_powerlaw(n=n, avg_out_deg=deg, seed=n)
+    ell = to_ell(g, K=K)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(ell.n_rows),
+                    dtype=jnp.float32)
+    y_pal = ops.spmv(ell, x, impl="pallas")
+    y_ref = ops.spmv(ell, x, impl="ref")
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               atol=1e-4)
+
+
+def test_spmv_hub_spill():
+    """Power-law hubs overflow the slab — spill path must stay exact."""
+    g = chung_lu_powerlaw(n=400, avg_out_deg=20, seed=9)
+    ell = to_ell(g, K=8)          # tiny slab forces heavy spill
+    assert ell.spill_nnz > 0
+    x = jnp.ones((ell.n_rows,), jnp.float32)
+    y = ops.spmv(ell, x, impl="pallas")
+    # P is column-stochastic: sum of y equals number of real vertices' mass
+    assert float(y[: g.n].sum()) == pytest.approx(g.n, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# frog_count histogram
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.integers(8, 2000),
+    N=st.integers(1, 5000),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=15)
+def test_frog_count_matches_ref(n, N, seed):
+    dest = jnp.asarray(
+        np.random.default_rng(seed).integers(0, n, size=N), dtype=jnp.int32)
+    a = ops.frog_count(dest, n, impl="pallas")
+    b = ops.frog_count(dest, n, impl="ref")
+    assert (np.asarray(a) == np.asarray(b)).all()
+    assert int(a.sum()) == N
+
+
+def test_frog_count_skewed():
+    dest = jnp.zeros((4096,), jnp.int32)          # all frogs on vertex 0
+    c = ops.frog_count(dest, 1024, impl="pallas")
+    assert int(c[0]) == 4096 and int(c.sum()) == 4096
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+CASES = [
+    # B, Hq, Hkv, S, D, window, causal, soft_cap, dtype
+    (1, 4, 4, 256, 64, None, True, None, jnp.float32),
+    (2, 4, 2, 256, 64, None, True, None, jnp.float32),
+    (2, 8, 2, 384, 32, None, True, None, jnp.bfloat16),
+    (1, 4, 1, 256, 128, None, False, None, jnp.float32),
+    (2, 4, 2, 256, 64, 64, True, None, jnp.float32),
+    (1, 2, 2, 512, 64, 128, True, None, jnp.float32),
+    (1, 4, 4, 256, 64, None, True, 30.0, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D,window,causal,cap,dtype", CASES)
+def test_flash_attention_matches_ref(B, Hq, Hkv, S, D, window, causal, cap,
+                                     dtype):
+    rng = np.random.default_rng(B * 100 + S)
+    q = jnp.asarray(rng.standard_normal((B, Hq, S, D)), dtype=dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), dtype=dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), dtype=dtype)
+    out = ops.attention(q, k, v, causal=causal, window=window, soft_cap=cap,
+                        impl="pallas")
+    want = ops.attention(q, k, v, causal=causal, window=window, soft_cap=cap,
+                         impl="ref")
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("window", [None, 64, 100])
+def test_chunked_attention_matches_ref(window):
+    rng = np.random.default_rng(0)
+    B, Hq, Hkv, S, D = 2, 4, 2, 384, 32
+    q = jnp.asarray(rng.standard_normal((B, Hq, S, D)), dtype=jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), dtype=jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), dtype=jnp.float32)
+    out = ops.attention(q, k, v, causal=True, window=window,
+                        impl="jnp_flash", chunk=128)
+    want = ops.attention(q, k, v, causal=True, window=window, impl="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_decode_attention_ref_consistency():
+    rng = np.random.default_rng(1)
+    B, Hq, Hkv, S, D = 2, 4, 2, 128, 32
+    q = jnp.asarray(rng.standard_normal((B, Hq, 1, D)), dtype=jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), dtype=jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), dtype=jnp.float32)
+    L = 77
+    out = ref.decode_attention_ref(q, kc, vc, jnp.asarray(L))
+    want = ref.attention_ref(q, kc[:, :, :L], vc[:, :, :L], causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+@given(length=st.integers(1, 127), window=st.integers(1, 64))
+@settings(max_examples=10)
+def test_decode_attention_windowed(length, window):
+    rng = np.random.default_rng(length)
+    B, Hq, Hkv, S, D = 1, 2, 2, 128, 16
+    q = jnp.asarray(rng.standard_normal((B, Hq, 1, D)), dtype=jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), dtype=jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((B, Hkv, S, D)), dtype=jnp.float32)
+    out = ref.decode_attention_ref(q, kc, vc, jnp.asarray(length),
+                                   window=window)
+    lo = max(0, length - window)
+    want = ref.attention_ref(q, kc[:, :, lo:length], vc[:, :, lo:length],
+                             causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
