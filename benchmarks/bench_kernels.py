@@ -1,6 +1,9 @@
 """Kernel-level microbench: CPU wall time of the jnp reference paths (the
 Pallas kernels are TPU-target; interpret mode is correctness-only) plus the
 analytic FLOPs each kernel's tile schedule would execute.
+
+Emits ``BENCH_kernels.json`` (via benchmarks.common.emit_json) so the perf
+trajectory stays machine-readable across PRs.
 """
 from __future__ import annotations
 
@@ -8,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, emit_json, timeit
 from repro.graph import chung_lu_powerlaw, to_ell
 from repro.kernels import ops
 
@@ -26,8 +29,27 @@ def main():
     dest = jnp.asarray(np.random.default_rng(0).integers(0, 4096, 100_000),
                        dtype=jnp.int32)
     fc = jax.jit(lambda d: ops.frog_count(d, 4096, impl="ref"))
-    rows.append(("kernel/frog_count_ref_100k", timeit(lambda: fc(dest)),
-                 "bins=4096"))
+    us_ref = timeit(lambda: fc(dest))
+    rows.append(("kernel/frog_count_ref_100k", us_ref, "bins=4096"))
+    fcs = jax.jit(lambda d: ops.frog_count(d, 4096, impl="sort"))
+    us_sort = timeit(lambda: fcs(dest))
+    rows.append(("kernel/frog_count_sort_100k", us_sort,
+                 f"bins=4096 work=(N+n)logN vs_onehot=N*n/512 "
+                 f"speedup_vs_ref={us_ref / max(us_sort, 1):.2f}x"))
+
+    # fused walker step: jnp oracle wall time + the fused kernel's work model
+    # (the Pallas kernel itself runs in interpret mode here — correctness
+    # only; its compiled profile is the TPU target).
+    N = 100_000
+    rng = np.random.default_rng(1)
+    pos = jnp.asarray(rng.integers(0, g.n, N), jnp.int32)
+    die = jnp.asarray(rng.random(N) < 0.15, jnp.int32)
+    bits = jnp.asarray(rng.integers(0, 1 << 30, N), jnp.int32)
+    fs = jax.jit(lambda p, d, b: ops.frog_step(
+        p, d, b, g.row_ptr, g.col_idx, g.out_deg, g.n, impl="ref"))
+    us_step = timeit(lambda: fs(pos, die, bits))
+    rows.append(("kernel/frog_step_ref_100k", us_step,
+                 f"n={g.n} fused=gather+draw+gather+tally"))
 
     B, Hq, Hkv, S, D = 1, 8, 2, 2048, 64
     rng = np.random.default_rng(1)
@@ -44,7 +66,9 @@ def main():
     us_w = timeit(lambda: att_w(q, k, v), repeats=1)
     rows.append(("kernel/flash_jnp_2k_window256", us_w,
                  f"banded_speedup={us / max(us_w, 1):.2f}x"))
-    return emit(rows)
+    emit(rows)
+    emit_json("kernels", rows)
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,14 +1,20 @@
-"""Shared benchmark utilities: cached graphs, timing, CSV rows.
+"""Shared benchmark utilities: cached graphs, timing, CSV rows, JSON dumps.
 
 Every bench emits ``name,us_per_call,derived`` rows (run.py prints them).
+Benches that track the perf trajectory across PRs additionally call
+``emit_json`` to write a machine-readable ``BENCH_<tag>.json`` at the repo
+root (bench_kernels → BENCH_kernels.json, bench_iteration_cost →
+BENCH_iteration.json).
 Graph scale is CPU-sized (LiveJournal stand-in: 65k vertices / ~1M edges);
 the full-scale numbers live in the dry-run/roofline tables.
 """
 from __future__ import annotations
 
 import functools
+import json
+import os
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import jax
 
@@ -47,3 +53,28 @@ def emit(rows: List[Row]) -> List[Row]:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     return rows
+
+
+def emit_json(tag: str, rows: List[Row], extra: Optional[dict] = None) -> str:
+    """Writes ``BENCH_<tag>.json`` at the repo root and returns its path.
+
+    Schema: ``{"bench": tag, "rows": [{name, us, derived}, ...], "extra":
+    {...}}`` — stable keys so future PRs can diff the perf trajectory
+    mechanically.
+    """
+    payload = {
+        "bench": tag,
+        "rows": [
+            {"name": name, "us": round(float(us), 2), "derived": derived}
+            for name, us, derived in rows
+        ],
+    }
+    if extra:
+        payload["extra"] = extra
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, f"BENCH_{tag}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+    return path

@@ -22,17 +22,32 @@ Three erasure models are implemented:
                        GraphLab patch does per mirror machine); Theorem 1's
                        analysis covers it through Definition 8.
 
+Two interchangeable blocking-walk draws (``cfg.draw``):
+
+* ``rejection`` — per-frog rejection sampling with pointwise keyed-hash
+                  coins: O(N · 1/p_s) work per superstep, independent of
+                  nnz (see core/blocking.py).
+* ``cumsum``    — the direct per-edge mask + cumsum + searchsorted draw:
+                  O(nnz) per superstep. Kept as the distributional
+                  reference the rejection path is tested against.
+* ``auto``      — (default) rejection exactly when its probe budget
+                  undercuts the per-edge pass (the paper's N ≪ E regime).
+
+The plain (p_s = 1) step can additionally run through the fused Pallas
+``frog_step`` kernel (``cfg.step_impl``: ``xla`` | ``pallas`` | ``ref``).
+
 Everything is pure JAX (lax.scan over steps) and runs on CPU.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.blocking import (channel_enum_draw, coin_uniform,
+                                 rejection_blocking_draw,
+                                 rejection_is_profitable)
 from repro.graph.csr import CSRGraph
 
 
@@ -44,6 +59,8 @@ class FrogWildConfig:
     p_s: float = 1.0                  # synchronization probability
     erasure: str = "none"             # none | independent | channel
     num_shards: int = 16              # channel model: destination shards
+    draw: str = "auto"                # auto | rejection | cumsum
+    step_impl: str = "xla"            # xla | pallas | ref (plain-step backend)
 
 
 @dataclasses.dataclass
@@ -59,7 +76,7 @@ def _kept_mask(
     dst_shard: jnp.ndarray,
     cfg: FrogWildConfig,
 ) -> jnp.ndarray:
-    """Per-edge keep mask for one superstep under the configured model."""
+    """Per-edge keep mask for one superstep (cumsum reference path only)."""
     if cfg.erasure == "independent":
         return jax.random.bernoulli(key, cfg.p_s, shape=g.col_idx.shape)
     elif cfg.erasure == "channel":
@@ -68,17 +85,91 @@ def _kept_mask(
         coins = jax.random.bernoulli(
             key, cfg.p_s, shape=(g.n, cfg.num_shards)
         )
-        src = _edge_src(g)
-        return coins[src, dst_shard]
+        return coins[g.edge_src, dst_shard]
     raise ValueError(f"unknown erasure model {cfg.erasure!r}")
 
 
-def _edge_src(g: CSRGraph) -> jnp.ndarray:
-    """int32[nnz] source vertex of each edge (computed once per graph)."""
-    # repeat is cheap relative to the walk; avoid caching device arrays.
-    return jnp.repeat(
-        jnp.arange(g.n, dtype=jnp.int32), g.out_deg, total_repeat_length=g.nnz
+def draw_next_cumsum(
+    g: CSRGraph, cfg: FrogWildConfig, key: jax.Array, pos: jnp.ndarray
+) -> jnp.ndarray:
+    """One blocking-walk scatter draw, O(nnz) reference implementation."""
+    n = g.n
+    row_ptr, col_idx, deg = g.row_ptr, g.col_idx, g.out_deg
+    dst_shard = g.edge_dst_shard(cfg.num_shards)
+    N = pos.shape[0]
+    k_mask, k_force, k_draw = jax.random.split(key, 3)
+    kept = _kept_mask(k_mask, g, dst_shard, cfg)
+    csum = jnp.cumsum(kept.astype(jnp.int32))            # inclusive
+    kept_before = jnp.concatenate([jnp.zeros((1,), jnp.int32), csum])
+    # surviving out-degree per frog's vertex
+    kv = kept_before[row_ptr[pos + 1]] - kept_before[row_ptr[pos]]
+    # Example 10 repair: one forced edge per vertex when all erased.
+    forced_slot = (
+        jax.random.randint(k_force, (n,), 0, 1 << 30, jnp.int32)
+        % jnp.maximum(deg, 1)
     )
+    forced_edge = row_ptr[jnp.arange(n)] + forced_slot
+    # rank among kept edges of the frog's vertex
+    u = jax.random.randint(k_draw, (N,), 0, 1 << 30, jnp.int32)
+    u = u % jnp.maximum(kv, 1)
+    target = kept_before[row_ptr[pos]] + u + 1           # 1-indexed rank
+    edge = jnp.searchsorted(csum, target, side="left").astype(jnp.int32)
+    edge = jnp.where(kv > 0, edge, forced_edge[pos])
+    nxt = col_idx[edge]
+    return jnp.where(deg[pos] > 0, nxt, pos)
+
+
+def draw_next_rejection(
+    g: CSRGraph, cfg: FrogWildConfig, key: jax.Array, pos: jnp.ndarray
+) -> jnp.ndarray:
+    """One blocking-walk scatter draw in O(N) probes, independent of nnz.
+
+    Independent model → edge rejection sampling (O(N · 1/p_s) probes);
+    channel model → exact channel enumeration (O(N · S) probes) — rejection
+    is not skew-safe at channel granularity (see core/blocking.py).
+    """
+    if cfg.erasure == "independent":
+        chan_of = lambda v, e: e                       # one coin per edge
+        edge = rejection_blocking_draw(
+            key, pos, g.row_ptr, g.out_deg, cfg.p_s, chan_of
+        )
+        return jnp.where(g.out_deg[pos] > 0, g.col_idx[edge], pos)
+    elif cfg.erasure == "channel":
+        S = cfg.num_shards
+        col_sorted, chan_cnt, chan_off = g.channel_layout(S)
+        k_coin, k_draw = jax.random.split(key)
+        chan_ids = pos[:, None] * S + jnp.arange(S, dtype=jnp.int32)[None, :]
+        coins_open = coin_uniform(k_coin, chan_ids) < cfg.p_s
+        edge = channel_enum_draw(
+            k_draw, pos, g.row_ptr[pos], g.out_deg[pos],
+            chan_cnt[pos], chan_off[pos], coins_open,
+        )
+        return jnp.where(g.out_deg[pos] > 0, col_sorted[edge], pos)
+    raise ValueError(f"unknown erasure model {cfg.erasure!r}")
+
+
+def draw_next(
+    g: CSRGraph, cfg: FrogWildConfig, key: jax.Array, pos: jnp.ndarray
+) -> jnp.ndarray:
+    """One scatter draw under ``cfg`` (dispatches on ``cfg.draw``).
+
+    ``auto`` picks rejection exactly when its probe budget undercuts the
+    O(nnz) per-edge pass (the paper's N ≪ E regime); both impls remain
+    forcible and are distribution-equivalent (tests/test_blocking_draw.py).
+    Module-level so tests and benchmarks can exercise a single superstep's
+    draw in isolation.
+    """
+    draw = cfg.draw
+    if draw == "auto":
+        nc = cfg.num_shards if cfg.erasure == "channel" else None
+        draw = ("rejection"
+                if rejection_is_profitable(pos.shape[0], g.nnz, cfg.p_s, nc)
+                else "cumsum")
+    if draw == "cumsum":
+        return draw_next_cumsum(g, cfg, key, pos)
+    elif draw == "rejection":
+        return draw_next_rejection(g, cfg, key, pos)
+    raise ValueError(f"unknown draw impl {cfg.draw!r}")
 
 
 def frogwild_run(
@@ -87,18 +178,13 @@ def frogwild_run(
     key: jax.Array,
 ) -> FrogWildResult:
     """Runs the FrogWild! process and returns the stop-counter estimator."""
-    n, nnz = g.n, g.nnz
+    n = g.n
     N, t = cfg.num_frogs, cfg.num_steps
     row_ptr = g.row_ptr
     col_idx = g.col_idx
     deg = g.out_deg
     use_erasure = cfg.erasure != "none" and cfg.p_s < 1.0
-    if use_erasure:
-        src = _edge_src(g)
-        dst_shard = (col_idx.astype(jnp.int32) //
-                     max(1, -(-n // cfg.num_shards)))  # ceil-div shard size
-    else:
-        src = dst_shard = None
+    use_fused = (not use_erasure) and cfg.step_impl != "xla"
 
     k_init, k_loop = jax.random.split(key)
     pos0 = jax.random.randint(k_init, (N,), 0, n, dtype=jnp.int32)
@@ -107,36 +193,32 @@ def frogwild_run(
 
     def plain_move(kmove: jax.Array, pos: jnp.ndarray) -> jnp.ndarray:
         slot = jax.random.randint(kmove, (N,), 0, 1 << 30, dtype=jnp.int32)
-        slot = slot % deg[pos]
-        return col_idx[row_ptr[pos] + slot]
-
-    def erasure_move(kmove: jax.Array, pos: jnp.ndarray) -> jnp.ndarray:
-        k_mask, k_force, k_draw = jax.random.split(kmove, 3)
-        kept = _kept_mask(k_mask, g, dst_shard, cfg)
-        csum = jnp.cumsum(kept.astype(jnp.int32))            # inclusive
-        kept_before = jnp.concatenate([jnp.zeros((1,), jnp.int32), csum])
-        # surviving out-degree per frog's vertex
-        kv = kept_before[row_ptr[pos + 1]] - kept_before[row_ptr[pos]]
-        # Example 10 repair: one forced edge per vertex when all erased.
-        forced_slot = jax.random.randint(k_force, (n,), 0, 1 << 30, jnp.int32) % deg
-        forced_edge = row_ptr[jnp.arange(n)] + forced_slot
-        # rank among kept edges of the frog's vertex
-        u = jax.random.randint(k_draw, (N,), 0, 1 << 30, jnp.int32)
-        u = u % jnp.maximum(kv, 1)
-        target = kept_before[row_ptr[pos]] + u + 1           # 1-indexed rank
-        edge = jnp.searchsorted(csum, target, side="left").astype(jnp.int32)
-        edge = jnp.where(kv > 0, edge, forced_edge[pos])
-        return col_idx[edge]
+        # dangling guard: d_out == 0 ⇒ frog stays put (self-loop convention,
+        # see graph/csr.py) instead of mod-by-zero garbage.
+        slot = slot % jnp.maximum(deg[pos], 1)
+        nxt = col_idx[row_ptr[pos] + slot]
+        return jnp.where(deg[pos] > 0, nxt, pos)
 
     def step(carry, step_key):
         pos, alive, counts = carry
         k_die, k_move = jax.random.split(step_key)
         # apply(): each arriving frog dies w.p. p_T and is tallied here.
         die = jax.random.bernoulli(k_die, cfg.p_T, shape=(N,)) & alive
-        counts = counts.at[pos].add(die.astype(jnp.int32))
+        if use_fused:
+            from repro.kernels import ops
+
+            slot_bits = jax.random.randint(k_move, (N,), 0, 1 << 30, jnp.int32)
+            nxt, death_counts = ops.frog_step(
+                pos, die, slot_bits, row_ptr, col_idx, deg, n,
+                impl=cfg.step_impl,
+            )
+            counts = counts + death_counts
+        else:
+            counts = counts.at[pos].add(die.astype(jnp.int32))
+            # scatter(): survivors traverse one (non-erased) out-edge.
+            nxt = (draw_next(g, cfg, k_move, pos) if use_erasure
+                   else plain_move(k_move, pos))
         alive = alive & ~die
-        # scatter(): survivors traverse one (non-erased) out-edge.
-        nxt = erasure_move(k_move, pos) if use_erasure else plain_move(k_move, pos)
         pos = jnp.where(alive, nxt, pos)
         return (pos, alive, counts), None
 

@@ -34,6 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.blocking import (channel_enum_draw, coin_uniform,
+                                 rejection_is_profitable)
 from repro.graph.csr import CSRGraph
 from repro.graph.partition import partition_graph
 
@@ -46,6 +48,7 @@ class EngineConfig:
     p_s: float = 1.0
     capacity_factor: float = 4.0     # per-channel buffer slack (≥ 1)
     axis_name: str = "vertex"
+    draw: str = "auto"               # auto | rejection | cumsum
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,10 +67,14 @@ class DistributedGraph:
     deg: jnp.ndarray | None = None          # int32[S, shard_size]
     edge_src: jnp.ndarray | None = None     # int32[S, nnz_max] (local source)
     edge_dst_shard: jnp.ndarray | None = None  # int32[S, nnz_max]
-    has_edge_to: jnp.ndarray | None = None  # bool [S, shard_size, num_shards]
-    # has_edge_to[s, v, d] — vertex v (on shard s) has ≥1 out-edge into shard
-    # d: the "mirror" structure. A (v, d) sync message is owed only when v is
-    # active AND the channel opened — the quantity p_s throttles in GraphLab.
+    chan_cnt: jnp.ndarray | None = None     # int32[S, shard_size, num_shards]
+    col_sorted: jnp.ndarray | None = None   # int32[S, nnz_max] (channel-sorted)
+    # chan_cnt[s, v, d] — #out-edges of vertex v (on shard s) into shard d:
+    # the "mirror" structure (has_edge_to ≡ chan_cnt > 0). A (v, d) sync
+    # message is owed only when v is active AND the channel opened — the
+    # quantity p_s throttles in GraphLab. col_sorted is each vertex's CSR
+    # segment reordered by destination shard — the exact channel-enumeration
+    # draw indexes into it via chan_cnt's prefix offsets.
 
     @property
     def n_padded(self) -> int:
@@ -81,12 +88,13 @@ class DistributedGraph:
             jax.ShapeDtypeStruct((S, sz), jnp.int32),
             jax.ShapeDtypeStruct((S, nnz), jnp.int32),
             jax.ShapeDtypeStruct((S, nnz), jnp.int32),
-            jax.ShapeDtypeStruct((S, sz, S), jnp.bool_),
+            jax.ShapeDtypeStruct((S, sz, S), jnp.int32),
+            jax.ShapeDtypeStruct((S, nnz), jnp.int32),
         )
 
     def arrays(self):
         return (self.row_ptr, self.col_idx, self.deg, self.edge_src,
-                self.edge_dst_shard, self.has_edge_to)
+                self.edge_dst_shard, self.chan_cnt, self.col_sorted)
 
 
 @dataclasses.dataclass
@@ -108,25 +116,29 @@ def build_distributed_graph(g: CSRGraph, num_shards: int) -> DistributedGraph:
     nnz_per = [int(gn.row_ptr[(s + 1) * sz] - gn.row_ptr[s * sz]) for s in range(S)]
     nnz_max = max(8, int(np.ceil(max(nnz_per) / 8) * 8))
 
+    # Per-edge source / destination-shard / channel layout come from the
+    # graph's memoized derived arrays (computed once per CSRGraph, shared
+    # with the walker oracle) — each shard block just slices and re-bases.
+    es_global = np.asarray(gp.edge_src)
+    eds_global = np.asarray(gp.edge_dst_shard(num_shards))
+    cs_global, cnt_global, _ = (np.asarray(a)
+                                for a in gp.channel_layout(num_shards))
     row_ptr = np.zeros((S, sz + 1), dtype=np.int32)
     col_idx = np.zeros((S, nnz_max), dtype=np.int32)
     deg = np.zeros((S, sz), dtype=np.int32)
     edge_src = np.zeros((S, nnz_max), dtype=np.int32)
+    edge_dst_shard = np.zeros((S, nnz_max), dtype=np.int32)
+    col_sorted = np.zeros((S, nnz_max), dtype=np.int32)
     for s in range(S):
         lo = int(gn.row_ptr[s * sz])
         hi = int(gn.row_ptr[(s + 1) * sz])
         row_ptr[s] = gn.row_ptr[s * sz : (s + 1) * sz + 1] - lo
         col_idx[s, : hi - lo] = gn.col_idx[lo:hi]
         deg[s] = gn.out_deg[s * sz : (s + 1) * sz]
-        edge_src[s, : hi - lo] = np.repeat(
-            np.arange(sz, dtype=np.int32), deg[s].astype(np.int64)
-        )
-    edge_dst_shard = (col_idx // sz).astype(np.int32)
-    # mirror structure: has_edge_to[s, v, d]
-    has_edge_to = np.zeros((S, sz, S), dtype=bool)
-    for s in range(S):
-        hi = int(row_ptr[s, -1])
-        has_edge_to[s, edge_src[s, :hi], edge_dst_shard[s, :hi]] = True
+        edge_src[s, : hi - lo] = es_global[lo:hi] - s * sz
+        edge_dst_shard[s, : hi - lo] = eds_global[lo:hi]
+        col_sorted[s, : hi - lo] = cs_global[lo:hi]
+    chan_cnt = cnt_global.reshape(S, sz, S).astype(np.int32)
     return DistributedGraph(
         num_shards=S, shard_size=sz, n=g.n, nnz_max=nnz_max,
         row_ptr=jnp.asarray(row_ptr),
@@ -134,7 +146,8 @@ def build_distributed_graph(g: CSRGraph, num_shards: int) -> DistributedGraph:
         deg=jnp.asarray(deg),
         edge_src=jnp.asarray(edge_src),
         edge_dst_shard=jnp.asarray(edge_dst_shard),
-        has_edge_to=jnp.asarray(has_edge_to),
+        chan_cnt=jnp.asarray(chan_cnt),
+        col_sorted=jnp.asarray(col_sorted),
     )
 
 
@@ -172,27 +185,21 @@ def _pack_by_shard(
     return buf, n_sent, valid.sum() - n_sent
 
 
-def _blocking_draw(
+def _blocking_draw_cumsum(
     pos_local: jnp.ndarray,       # int32[B] local vertex (garbage if dead)
     row_ptr: jnp.ndarray,         # int32[shard_size + 1]
     col_idx: jnp.ndarray,         # int32[nnz_max]
     deg: jnp.ndarray,             # int32[shard_size]
     edge_src: jnp.ndarray,        # int32[nnz_max]
     edge_dst_shard: jnp.ndarray,  # int32[nnz_max]
-    coins: jnp.ndarray | None,    # bool[shard_size, S] — open sync channels
-    p_s: float,
+    coins: jnp.ndarray,           # bool[shard_size, S] — open sync channels
     key: jax.Array,
 ) -> jnp.ndarray:
-    """One scatter draw per frog among edges on open channels (Process 19)."""
+    """O(nnz) reference scatter draw (per-edge mask + cumsum + searchsorted)."""
     B = pos_local.shape[0]
     shard_size = deg.shape[0]
     nnz_max = col_idx.shape[0]
     k_force, k_draw = jax.random.split(key)
-
-    if p_s >= 1.0:
-        u = jax.random.randint(k_draw, (B,), 0, 1 << 30, jnp.int32)
-        slot = u % jnp.maximum(deg[pos_local], 1)
-        return col_idx[row_ptr[pos_local] + slot]
 
     real_edge = jnp.arange(nnz_max, dtype=jnp.int32) < row_ptr[-1]
     kept = coins[edge_src, edge_dst_shard] & real_edge
@@ -213,6 +220,51 @@ def _blocking_draw(
     return col_idx[edge]
 
 
+def _blocking_draw(
+    pos_local: jnp.ndarray,       # int32[B] local vertex (garbage if dead)
+    row_ptr: jnp.ndarray,         # int32[shard_size + 1]
+    col_idx: jnp.ndarray,         # int32[nnz_max]
+    deg: jnp.ndarray,             # int32[shard_size]
+    edge_src: jnp.ndarray,        # int32[nnz_max]
+    edge_dst_shard: jnp.ndarray,  # int32[nnz_max]
+    chan_cnt: jnp.ndarray,        # int32[shard_size, S]
+    chan_off: jnp.ndarray,        # int32[shard_size, S]
+    col_sorted: jnp.ndarray,      # int32[nnz_max] (channel-sorted dests)
+    coins: jnp.ndarray | None,    # bool[shard_size, S] — open sync channels
+    p_s: float,
+    key: jax.Array,
+    draw: str = "rejection",
+    alive: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """One scatter draw per frog among edges on open channels (Process 19).
+
+    The default ``rejection`` path never touches per-edge state: each frog
+    enumerates its ≤ S (vertex, mirror) channels against the superstep's
+    coin grid (the same grid the sync accounting charges, so the draw and
+    the wire cost always agree on which channels opened) and samples a kept
+    edge exactly — O(B · S) instead of O(nnz_max), skew-safe
+    (core/blocking.py:channel_enum_draw).
+    """
+    B = pos_local.shape[0]
+    if p_s >= 1.0:
+        u = jax.random.randint(key, (B,), 0, 1 << 30, jnp.int32)
+        slot = u % jnp.maximum(deg[pos_local], 1)
+        return col_idx[row_ptr[pos_local] + slot]
+    if draw == "cumsum":
+        return _blocking_draw_cumsum(
+            pos_local, row_ptr, col_idx, deg, edge_src, edge_dst_shard,
+            coins, key,
+        )
+    if draw != "rejection":
+        raise ValueError(f"unknown draw impl {draw!r}")
+    edge = channel_enum_draw(
+        key, pos_local, row_ptr[pos_local], deg[pos_local],
+        chan_cnt[pos_local], chan_off[pos_local], coins[pos_local],
+        skip=None if alive is None else ~alive,
+    )
+    return col_sorted[edge]
+
+
 def make_shard_body(dg: DistributedGraph, cfg: EngineConfig):
     """The per-shard superstep program (shared by run and dry-run paths).
 
@@ -227,12 +279,20 @@ def make_shard_body(dg: DistributedGraph, cfg: EngineConfig):
     f0 = cfg.num_frogs // S
     if f0 > B:
         raise ValueError(f"buffer too small: {f0} initial frogs > B={B}")
+    draw_mode = cfg.draw
+    if draw_mode == "auto":
+        draw_mode = ("rejection"
+                     if rejection_is_profitable(B, dg.nnz_max, cfg.p_s,
+                                                num_channels=S)
+                     else "cumsum")
 
     def shard_body(row_ptr, col_idx, deg, edge_src, edge_dst_shard,
-                   has_edge_to, key_data):
+                   chan_cnt, col_sorted, key_data):
         row_ptr, col_idx = row_ptr[0], col_idx[0]
         deg, edge_src, edge_dst_shard = deg[0], edge_src[0], edge_dst_shard[0]
-        has_edge_to = has_edge_to[0]
+        chan_cnt, col_sorted = chan_cnt[0], col_sorted[0]
+        has_edge_to = chan_cnt > 0
+        chan_off = jnp.cumsum(chan_cnt, axis=-1) - chan_cnt
         me = jax.lax.axis_index(ax)
         base = me * sz
         n_local = jnp.clip(n - base, 1, sz)
@@ -258,8 +318,16 @@ def make_shard_body(dg: DistributedGraph, cfg: EngineConfig):
             counts = counts.at[jnp.where(die, v_local, sz)].add(1)
             alive = valid & ~die
             # <sync>: one coin per (vertex, mirror shard) — the p_s patch.
+            # The coin is a pure hash of (k_coin, v·S + d): this grid (used
+            # only for sync accounting + the cumsum reference draw) and the
+            # rejection draw's pointwise acceptance checks see identical
+            # coins without sharing any materialized state.
             if cfg.p_s < 1.0:
-                coins = jax.random.bernoulli(k_coin, cfg.p_s, shape=(sz, S))
+                chan_grid = (
+                    jnp.arange(sz, dtype=jnp.int32)[:, None] * S
+                    + jnp.arange(S, dtype=jnp.int32)[None, :]
+                )
+                coins = coin_uniform(k_coin, chan_grid) < cfg.p_s
             else:
                 coins = jnp.ones((sz, S), dtype=bool)
             # GraphLab-faithful sync accounting: a message is owed for every
@@ -271,7 +339,8 @@ def make_shard_body(dg: DistributedGraph, cfg: EngineConfig):
             sync_msgs = (active[:, None] & coins & has_edge_to).sum()
             dest = _blocking_draw(
                 v_local, row_ptr, col_idx, deg, edge_src, edge_dst_shard,
-                coins, cfg.p_s, k_draw,
+                chan_cnt, chan_off, col_sorted, coins, cfg.p_s, k_draw,
+                draw=draw_mode, alive=alive,
             )
             dest = jnp.where(alive, dest, -1)
             buf, n_sent, ovf = _pack_by_shard(dest, S, sz, cap)
@@ -302,7 +371,7 @@ def _sharded_fn(dg: DistributedGraph, cfg: EngineConfig, mesh: Mesh):
     body = make_shard_body(dg, cfg)
     return jax.shard_map(
         body, mesh=mesh,
-        in_specs=(P(ax),) * 6 + (P(),),
+        in_specs=(P(ax),) * 7 + (P(),),
         out_specs=(P(ax), P(ax)),
     )
 
@@ -340,4 +409,4 @@ def frogwild_dryrun_lowered(dg: DistributedGraph, cfg: EngineConfig, mesh: Mesh)
     rep = NamedSharding(mesh, P())
     fn = _sharded_fn(dg, cfg, mesh)
     specs = dg.array_specs() + (jax.ShapeDtypeStruct((2,), jnp.uint32),)
-    return jax.jit(fn, in_shardings=(sh,) * 6 + (rep,)).lower(*specs)
+    return jax.jit(fn, in_shardings=(sh,) * 7 + (rep,)).lower(*specs)

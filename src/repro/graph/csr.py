@@ -14,6 +14,8 @@ shard owns a contiguous row block) want.
 from __future__ import annotations
 
 import dataclasses
+
+import jax
 from typing import Tuple
 
 import jax.numpy as jnp
@@ -29,16 +31,85 @@ class CSRGraph:
       row_ptr:  int32[n + 1]  — CSR offsets into ``col_idx``.
       col_idx:  int32[nnz]    — destination vertex of each out-edge.
       out_deg:  int32[n]      — ``row_ptr[1:] - row_ptr[:-1]`` (cached).
+
+    Derived per-edge arrays (``edge_src``, ``edge_dst_shard``) are computed
+    lazily and memoized on the instance: every ``frogwild_run`` / engine
+    build over the same graph reuses them instead of re-deriving O(nnz)
+    arrays per call.
     """
 
     n: int
     row_ptr: jnp.ndarray
     col_idx: jnp.ndarray
     out_deg: jnp.ndarray
+    _derived: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
 
     @property
     def nnz(self) -> int:
         return int(self.col_idx.shape[0])
+
+    @property
+    def edge_src(self) -> jnp.ndarray:
+        """int32[nnz] — source vertex of each edge (memoized)."""
+        if "edge_src" not in self._derived:
+            # ensure_compile_time_eval: memoized arrays must be concrete even
+            # when first touched inside a jit trace (else the cache would
+            # leak tracers into later traces).
+            with jax.ensure_compile_time_eval():
+                self._derived["edge_src"] = jnp.repeat(
+                    jnp.arange(self.n, dtype=jnp.int32),
+                    self.out_deg,
+                    total_repeat_length=self.nnz,
+                )
+        return self._derived["edge_src"]
+
+    def shard_size(self, num_shards: int) -> int:
+        """Vertices per range shard (ceil division)."""
+        return max(1, -(-self.n // num_shards))
+
+    def edge_dst_shard(self, num_shards: int) -> jnp.ndarray:
+        """int32[nnz] — destination range-shard of each edge (memoized per
+        shard count). This is the channel id granularity of the engine's
+        mirror synchronization."""
+        key = ("edge_dst_shard", num_shards)
+        if key not in self._derived:
+            with jax.ensure_compile_time_eval():
+                self._derived[key] = (
+                    self.col_idx.astype(jnp.int32)
+                    // self.shard_size(num_shards)
+                )
+        return self._derived[key]
+
+    def channel_layout(self, num_shards: int):
+        """Channel-grouped edge layout for the exact blocking draw (memoized).
+
+        Returns ``(col_sorted, chan_cnt, chan_off)``:
+          * ``col_sorted`` int32[nnz] — ``col_idx`` with each vertex's edges
+            stably reordered by destination shard;
+          * ``chan_cnt``  int32[n, S] — edges of v into shard d;
+          * ``chan_off``  int32[n, S] — offset of (v, d)'s first edge within
+            v's CSR segment of ``col_sorted``.
+        """
+        key = ("channel_layout", num_shards)
+        if key not in self._derived:
+            rp = np.asarray(self.row_ptr).astype(np.int64)
+            col = np.asarray(self.col_idx).astype(np.int64)
+            src = np.asarray(self.edge_src).astype(np.int64)
+            ds = col // self.shard_size(num_shards)
+            # stable sort by (source vertex, destination shard)
+            order = np.lexsort((ds, src))
+            cnt = np.zeros((self.n, num_shards), dtype=np.int64)
+            np.add.at(cnt, (src, ds), 1)
+            off = np.cumsum(cnt, axis=1) - cnt
+            with jax.ensure_compile_time_eval():
+                self._derived[key] = (
+                    jnp.asarray(col[order], dtype=jnp.int32),
+                    jnp.asarray(cnt, dtype=jnp.int32),
+                    jnp.asarray(off, dtype=jnp.int32),
+                )
+        return self._derived[key]
 
     @property
     def max_out_deg(self) -> int:
@@ -61,13 +132,24 @@ class CSRGraph:
         )
 
 
-def build_csr(n: int, src: np.ndarray, dst: np.ndarray) -> CSRGraph:
+def build_csr(
+    n: int, src: np.ndarray, dst: np.ndarray, dangling: str = "hash"
+) -> CSRGraph:
     """Builds a CSRGraph from an edge list, fixing dangling vertices.
 
-    Any vertex with zero out-degree receives a single out-edge to a
-    deterministic pseudo-random target (hash of the vertex id), preserving the
-    paper's assumption ``d_out > 0``. Duplicate edges are kept (multi-edges
-    are legal and correspond to proportionally higher transition probability).
+    The ``dangling`` policy restores the paper's assumption ``d_out > 0``:
+
+    * ``"hash"``      — (default) one out-edge to a deterministic
+                        pseudo-random target (hash of the vertex id); the
+                        teleport-like convention every generator uses.
+    * ``"self_loop"`` — one self-loop, so a walker parked on a dangling
+                        vertex stays there until it dies. This matches the
+                        walkers' runtime guard (``plain_move`` holds a frog in
+                        place when ``d_out == 0``), making the guard and the
+                        graph repair two views of the same convention.
+
+    Duplicate edges are kept (multi-edges are legal and correspond to
+    proportionally higher transition probability).
     """
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
@@ -77,13 +159,18 @@ def build_csr(n: int, src: np.ndarray, dst: np.ndarray) -> CSRGraph:
         raise ValueError("edge endpoints out of range")
 
     deg = np.bincount(src, minlength=n)
-    dangling = np.nonzero(deg == 0)[0]
-    if dangling.size:
-        # Deterministic "random" target for reproducibility.
-        fix_dst = (dangling * 2654435761 + 12345) % n
-        # avoid pure self-loops on dangling fixes
-        fix_dst = np.where(fix_dst == dangling, (fix_dst + 1) % n, fix_dst)
-        src = np.concatenate([src, dangling])
+    dangling_v = np.nonzero(deg == 0)[0]
+    if dangling_v.size:
+        if dangling == "hash":
+            # Deterministic "random" target for reproducibility.
+            fix_dst = (dangling_v * 2654435761 + 12345) % n
+            # avoid pure self-loops on dangling fixes
+            fix_dst = np.where(fix_dst == dangling_v, (fix_dst + 1) % n, fix_dst)
+        elif dangling == "self_loop":
+            fix_dst = dangling_v
+        else:
+            raise ValueError(f"unknown dangling policy {dangling!r}")
+        src = np.concatenate([src, dangling_v])
         dst = np.concatenate([dst, fix_dst])
         deg = np.bincount(src, minlength=n)
 

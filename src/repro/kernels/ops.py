@@ -17,6 +17,7 @@ from repro.graph.partition import EllGraph
 from repro.kernels import ref as kref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.frog_scatter import frog_count as _frog_count
+from repro.kernels.frog_step import frog_step as _frog_step
 from repro.kernels.spmv_ell import spmv_ell_slab
 
 
@@ -55,9 +56,20 @@ def spmv(ell: EllGraph, x: jnp.ndarray, impl: str = "pallas",
 def frog_count(dest: jnp.ndarray, n: int, impl: str = "pallas",
                interpret: bool = True, vertex_block: int = 512,
                frog_block: int = 1024) -> jnp.ndarray:
-    """Histogram of frog destinations into n vertex bins (int32)."""
+    """Histogram of frog destinations into n vertex bins (int32).
+
+    * ``pallas`` — compare-and-reduce tile kernel (O(N · n/vertex_block)
+      one-hot work; wins when n is small and the VPU eats the tiles).
+    * ``sort``   — sort + searchsorted segment counts (O((N+n) log N); the
+      scalable path when n is large).
+    * ``ref``    — XLA scatter-add oracle.
+    """
     if impl == "ref":
         return kref.frog_count_ref(dest, n)
+    if impl == "sort":
+        return kref.frog_count_sort(dest, n)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
     vertex_block = min(vertex_block, n)
     n_pad = ((n + vertex_block - 1) // vertex_block) * vertex_block
     # Padded frogs land on bin n_pad-1? No: route them to an existing bin and
@@ -68,6 +80,48 @@ def frog_count(dest: jnp.ndarray, n: int, impl: str = "pallas",
     counts = _frog_count(dest_p, n_pad, vertex_block=vertex_block,
                          frog_block=frog_block, interpret=interpret)
     return counts[:n]
+
+
+def frog_step(
+    pos: jnp.ndarray,
+    die: jnp.ndarray,
+    bits: jnp.ndarray,
+    row_ptr: jnp.ndarray,
+    col_idx: jnp.ndarray,
+    deg: jnp.ndarray,
+    n: int,
+    impl: str = "pallas",
+    interpret: bool = True,
+    vertex_block: int = 512,
+    frog_block: int = 1024,
+):
+    """Fused plain walker superstep → ``(next_pos[N], death_counts[n])``.
+
+    ``pallas`` runs the VMEM-resident fused kernel (interpret mode on CPU);
+    ``ref`` is the pure-jnp oracle. Handles all padding here so callers pass
+    natural shapes.
+    """
+    die = die.astype(jnp.int32)
+    bits = jnp.abs(bits).astype(jnp.int32)
+    if impl == "ref":
+        return kref.frog_step_ref(pos, die, bits, row_ptr, col_idx, deg, n)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+    N = pos.shape[0]
+    vertex_block = min(vertex_block, max(8, n))
+    n_pad = ((n + vertex_block - 1) // vertex_block) * vertex_block
+    frog_block = min(frog_block, max(8, N))
+    # padded frogs: parked on vertex 0, not dying, slot bits 0 — their next
+    # position is discarded by the slice below and they tally nothing.
+    pos_p = _pad_to(pos, frog_block)
+    die_p = _pad_to(die, frog_block)
+    bits_p = _pad_to(bits, frog_block)
+    nxt, counts = _frog_step(
+        pos_p, die_p, bits_p, row_ptr, col_idx, deg, n_pad,
+        vertex_block=vertex_block, frog_block=frog_block,
+        interpret=interpret,
+    )
+    return nxt[:N], counts[:n]
 
 
 def attention(

@@ -41,10 +41,51 @@ def spill_ref(
 
 def frog_count_ref(dest: jnp.ndarray, n: int, weights: Optional[jnp.ndarray] = None
                    ) -> jnp.ndarray:
-    """counts[v] = Σ_f weights[f] · 1{dest[f] == v}. int32 when weights=None."""
+    """counts[v] = Σ_f weights[f] · 1{dest[f] == v}. int32 when weights=None.
+
+    Entries outside [0, n) (padding sentinels like -1) are ignored — the
+    same contract as the sort and pallas implementations (a raw scatter
+    would wrap -1 to n-1 under JAX negative indexing)."""
+    dest = jnp.where((dest >= 0) & (dest < n), dest, n)
     if weights is None:
-        return jnp.zeros((n,), jnp.int32).at[dest].add(1)
-    return jnp.zeros((n,), weights.dtype).at[dest].add(weights)
+        return jnp.zeros((n + 1,), jnp.int32).at[dest].add(1)[:n]
+    return jnp.zeros((n + 1,), weights.dtype).at[dest].add(weights)[:n]
+
+
+def frog_count_sort(dest: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Sort-based histogram: counts[v] = #{f : dest[f] == v}.
+
+    O((N + n) log N) with no scatter and no [N, n/BV] one-hot tiles — the
+    TPU-friendly replacement for the compare-and-reduce histogram when n is
+    large relative to the vertex block.  Entries outside [0, n) (padding
+    sentinels like -1) are ignored.
+    """
+    s = jnp.sort(dest)
+    bounds = jnp.searchsorted(
+        s, jnp.arange(n + 1, dtype=dest.dtype), side="left"
+    )
+    return (bounds[1:] - bounds[:-1]).astype(jnp.int32)
+
+
+def frog_step_ref(
+    pos: jnp.ndarray,        # int32[N]
+    die: jnp.ndarray,        # int32[N] — 1 where the frog dies this step
+    bits: jnp.ndarray,       # int32[N] — uniform bits for the slot draw
+    row_ptr: jnp.ndarray,    # int32[n + 1]
+    col_idx: jnp.ndarray,    # int32[nnz]
+    deg: jnp.ndarray,        # int32[n]
+    n: int,
+):
+    """Oracle for the fused walker step: (next_pos, death_counts).
+
+    next = col_idx[row_ptr[pos] + bits % deg[pos]] (stay put when d_out = 0);
+    counts tallies the died frogs at their current vertex.
+    """
+    d = deg[pos]
+    slot = bits % jnp.maximum(d, 1)
+    nxt = jnp.where(d > 0, col_idx[row_ptr[pos] + slot], pos)
+    counts = jnp.zeros((n,), jnp.int32).at[pos].add(die.astype(jnp.int32))
+    return nxt.astype(jnp.int32), counts
 
 
 def attention_ref(

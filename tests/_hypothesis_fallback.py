@@ -1,0 +1,110 @@
+"""Minimal deterministic stand-in for `hypothesis` (used when the real
+package is absent — this container has no network and no wheel baked in).
+
+Supports exactly the subset this suite uses:
+
+  * ``strategies.integers(lo, hi)`` / ``floats(lo, hi)`` / ``sampled_from(xs)``
+  * ``@given(...)`` with positional or keyword strategies
+  * ``@settings(max_examples=..., deadline=...)`` as a decorator, plus
+    ``settings.register_profile`` / ``settings.load_profile``
+
+Example generation is deterministic: each test draws from a ``random.Random``
+seeded by the test's qualified name, and the first example always pins every
+integer/float strategy to its lower bound (a cheap "shrunk" case). This is
+NOT property-based testing — just a reproducible example sweep so the suite
+runs unchanged without the dependency.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import types
+
+
+class _Strategy:
+    def __init__(self, draw, lo_example=None):
+        self._draw = draw
+        self._lo = lo_example
+
+    def example(self, rng, first: bool):
+        if first and self._lo is not None:
+            return self._lo
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value), min_value)
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value), min_value)
+
+
+def sampled_from(elements) -> _Strategy:
+    xs = list(elements)
+    return _Strategy(lambda rng: rng.choice(xs), xs[0])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5, False)
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rng: value, value)
+
+
+class settings:  # noqa: N801 — mirrors hypothesis' public name
+    _profiles: dict = {}
+    _active: dict = {"max_examples": 20}
+
+    def __init__(self, max_examples: int = None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        if self.max_examples is not None:
+            fn._fallback_max_examples = self.max_examples
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, max_examples: int = 20, **_kw):
+        cls._profiles[name] = {"max_examples": max_examples}
+
+    @classmethod
+    def load_profile(cls, name: str):
+        cls._active = dict(cls._profiles.get(name, cls._active))
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*fixture_args, **fixture_kw):
+            n = getattr(fn, "_fallback_max_examples", None)
+            if n is None:
+                n = settings._active.get("max_examples", 20)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for i in range(n):
+                first = i == 0
+                args = [s.example(rng, first) for s in arg_strats]
+                kw = {k: s.example(rng, first) for k, s in kw_strats.items()}
+                fn(*fixture_args, *args, **fixture_kw, **kw)
+
+        # hide the strategy params from pytest's fixture resolution
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def install() -> types.ModuleType:
+    """Registers this shim as ``hypothesis`` (+``hypothesis.strategies``)."""
+    mod = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "booleans", "just"):
+        setattr(strat, name, globals()[name])
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strat
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strat
+    return mod

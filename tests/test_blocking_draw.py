@@ -1,0 +1,240 @@
+"""Distribution equivalence: rejection-sampled blocking draw vs the O(nnz)
+cumsum/searchsorted reference (paper Process 19 / Definition 8).
+
+The two implementations share no randomness, so equality is statistical: for
+every source vertex we compare the empirical next-vertex distributions over
+many fixed seeds and require the total-variation distance to sit within the
+sampling-noise tolerance. Covered:
+
+  * independent and channel erasure models (core oracle),
+  * the all-edges-blocked Example-10 forced-edge repair path,
+  * the engine's shard-local ``_blocking_draw`` (rejection vs cumsum with a
+    shared fold_in coin grid),
+  * dangling-vertex guards (the self-loop convention).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.frogwild import FrogWildConfig, draw_next
+from repro.core.blocking import coin_uniform, num_rounds_for
+from repro.graph import uniform_random
+from repro.graph.csr import CSRGraph
+
+
+def _transition_counts(draw_fn, n, num_keys, batch=500, seed0=0):
+    """Empirical next-vertex histogram per source vertex: int64[n, n].
+
+    One frog per vertex per key (coins are shared within a superstep, so
+    multiple frogs on a vertex would be correlated samples and inflate the
+    test's variance); keys are vmapped in batches for speed.
+    """
+    pos = jnp.arange(n, dtype=jnp.int32)
+    fn = jax.jit(jax.vmap(lambda k: draw_fn(k, pos)))
+    counts = np.zeros((n, n), dtype=np.int64)
+    src = np.broadcast_to(np.arange(n), (batch, n))
+    done = 0
+    while done < num_keys:
+        keys = jax.vmap(jax.random.PRNGKey)(
+            seed0 + done + jnp.arange(batch)
+        )
+        nxt = np.asarray(fn(keys))
+        np.add.at(counts, (src, nxt), 1)
+        done += batch
+    return counts
+
+
+def _max_tv(a: np.ndarray, b: np.ndarray) -> float:
+    """Max over source vertices of TV(row_a, row_b) (rows are histograms)."""
+    pa = a / np.maximum(a.sum(axis=1, keepdims=True), 1)
+    pb = b / np.maximum(b.sum(axis=1, keepdims=True), 1)
+    return float(0.5 * np.abs(pa - pb).sum(axis=1).max())
+
+
+def _chi2_two_sample(a: np.ndarray, b: np.ndarray):
+    """Pooled two-sample chi-square over all (vertex, successor) cells.
+
+    Returns (statistic, df, loose_threshold) with the threshold at roughly
+    the 1e-4 tail via the normal approximation χ²_df ≈ df + z·sqrt(2·df).
+    """
+    support = (a + b) > 0
+    x2 = float((((a - b) ** 2) / np.maximum(a + b, 1))[support].sum())
+    df = int(support.sum(axis=1).clip(min=1).sum() - a.shape[0])
+    thresh = df + 4.0 * np.sqrt(2 * df)
+    return x2, df, thresh
+
+
+@pytest.mark.parametrize("erasure,p_s", [
+    ("independent", 0.7), ("independent", 0.35),
+    ("channel", 0.7), ("channel", 0.35),
+])
+def test_rejection_matches_cumsum(erasure, p_s):
+    g = uniform_random(30, avg_out_deg=4, seed=7)
+    counts = {}
+    for draw in ("rejection", "cumsum"):
+        cfg = FrogWildConfig(p_s=p_s, erasure=erasure, num_shards=4, draw=draw)
+        counts[draw] = _transition_counts(
+            lambda k, pos, c=cfg: draw_next(g, c, k, pos),
+            g.n, num_keys=3000,
+        )
+    x2, df, thresh = _chi2_two_sample(counts["rejection"], counts["cumsum"])
+    assert x2 < thresh, (erasure, p_s, x2, df, thresh)
+    # 3000 iid samples/vertex over ≤ ~8 support points ⇒ TV noise ≲ 0.04
+    tv = _max_tv(counts["rejection"], counts["cumsum"])
+    assert tv < 0.08, (erasure, p_s, tv)
+    # conservation: every draw produced a real successor for every frog
+    assert counts["rejection"].sum() == counts["cumsum"].sum()
+
+
+def test_forced_repair_path_matches():
+    """p_s ≈ 0 with one channel per vertex ⇒ nearly every draw goes through
+    the Example-10 forced edge. Both impls must degrade to the same
+    (uniform-over-out-edges) distribution."""
+    g = uniform_random(24, avg_out_deg=3, seed=11)
+    counts = {}
+    for draw in ("rejection", "cumsum"):
+        cfg = FrogWildConfig(p_s=0.02, erasure="channel", num_shards=1,
+                             draw=draw)
+        counts[draw] = _transition_counts(
+            lambda k, pos, c=cfg: draw_next(g, c, k, pos),
+            g.n, num_keys=2000,
+        )
+    x2, df, thresh = _chi2_two_sample(counts["rejection"], counts["cumsum"])
+    assert x2 < thresh, (x2, df, thresh)
+    tv = _max_tv(counts["rejection"], counts["cumsum"])
+    assert tv < 0.09, tv
+    # and both match the plain uniform walk marginally
+    probs = counts["rejection"] / counts["rejection"].sum(axis=1, keepdims=True)
+    for v in range(g.n):
+        succ, mult = np.unique(g.successors(v), return_counts=True)
+        want = np.zeros(g.n)
+        want[succ] = mult / mult.sum()
+        assert 0.5 * np.abs(probs[v] - want).sum() < 0.08, v
+
+
+def test_engine_blocking_draw_matches_cumsum():
+    """Shard-local engine draw: channel enumeration vs the cumsum reference
+    over the *same* coin grid."""
+    from repro.engine.gas import _blocking_draw
+
+    g = uniform_random(32, avg_out_deg=4, seed=3)
+    S = 4
+    p_s = 0.4
+    deg = g.out_deg
+    row_ptr = g.row_ptr
+    edge_src = g.edge_src
+    edge_dst_shard = g.edge_dst_shard(S)
+    col_sorted, chan_cnt, chan_off = g.channel_layout(S)
+
+    def draw(k, pos, mode):
+        k_coin, k_draw = jax.random.split(k)
+        chan_grid = (jnp.arange(g.n, dtype=jnp.int32)[:, None] * S
+                     + jnp.arange(S, dtype=jnp.int32)[None, :])
+        coins = coin_uniform(k_coin, chan_grid) < p_s
+        return _blocking_draw(
+            pos, row_ptr, g.col_idx, deg, edge_src, edge_dst_shard,
+            chan_cnt, chan_off, col_sorted, coins, p_s, k_draw, draw=mode,
+        )
+
+    counts = {
+        mode: _transition_counts(
+            lambda k, pos, m=mode: draw(k, pos, m), g.n, num_keys=3000,
+        )
+        for mode in ("rejection", "cumsum")
+    }
+    x2, df, thresh = _chi2_two_sample(counts["rejection"], counts["cumsum"])
+    assert x2 < thresh, (x2, df, thresh)
+    tv = _max_tv(counts["rejection"], counts["cumsum"])
+    assert tv < 0.08, tv
+
+
+def test_channel_skew_hub_matches_cumsum():
+    """Regression: a hub with 99 edges on one channel and 1 on another must
+    not be misrouted through the forced edge when the big channel closes —
+    the failure mode of naive edge-rejection at channel granularity."""
+    from repro.graph.csr import build_csr
+
+    n = 200
+    hub_dst = np.concatenate([np.arange(1, 100), [150]])   # shard 0 ×99, 1 ×1
+    src = np.concatenate([np.zeros(100, np.int64), np.arange(1, n)])
+    dst = np.concatenate([hub_dst, (np.arange(1, n) + 1) % n])
+    g = build_csr(n, src, dst)
+    pos = jnp.zeros((1,), jnp.int32)                        # frog on the hub
+    hits = {}
+    for draw in ("rejection", "cumsum"):
+        cfg = FrogWildConfig(p_s=0.5, erasure="channel", num_shards=2,
+                             draw=draw)
+        fn = jax.jit(jax.vmap(lambda k: draw_next(g, cfg, k, pos)[0]))
+        h = 0
+        for b in range(0, 12_000, 2000):
+            keys = jax.vmap(jax.random.PRNGKey)(b + jnp.arange(2000))
+            h += int((np.asarray(fn(keys)) == 150).sum())
+        hits[draw] = h / 12_000
+    # exact value: p_s·(1-p_s)·(1/1) + p_s²·(1/100) + (1-p_s)²·(1/100) ≈ 0.2575
+    assert abs(hits["rejection"] - hits["cumsum"]) < 0.03, hits
+    assert abs(hits["rejection"] - 0.2575) < 0.03, hits
+
+
+def test_num_rounds_budget():
+    # residual (1 - p_s)^K stays below the statistical tolerance everywhere
+    for p_s in (0.1, 0.3, 0.7, 0.95):
+        K = num_rounds_for(p_s)
+        assert (1 - p_s) ** K <= 1.1e-4, (p_s, K)
+    assert num_rounds_for(0.001) == 256          # capped
+
+
+def test_dangling_vertex_guards():
+    """d_out == 0 must neither crash nor lose the frog: the walker parks on
+    the vertex (self-loop convention) for plain and erasure draws alike."""
+    # hand-built CSR with vertex 2 dangling (build_csr would repair it)
+    row_ptr = jnp.asarray([0, 2, 4, 4], jnp.int32)
+    col_idx = jnp.asarray([1, 2, 0, 2], jnp.int32)
+    deg = jnp.asarray([2, 2, 0], jnp.int32)
+    g = CSRGraph(n=3, row_ptr=row_ptr, col_idx=col_idx, out_deg=deg)
+    pos = jnp.asarray([0, 1, 2, 2], jnp.int32)
+    for cfg in (
+        FrogWildConfig(p_s=1.0, erasure="none"),
+        FrogWildConfig(p_s=0.5, erasure="channel", num_shards=2),
+        FrogWildConfig(p_s=0.5, erasure="channel", num_shards=2,
+                       draw="cumsum"),
+        FrogWildConfig(p_s=0.5, erasure="independent"),
+    ):
+        if cfg.erasure == "none":
+            from repro.core.frogwild import frogwild_run  # noqa: F401
+            # plain_move is internal; exercise via a tiny full run below
+            continue
+        nxt = np.asarray(draw_next(g, cfg, jax.random.PRNGKey(0), pos))
+        assert (nxt[2:] == 2).all(), nxt          # dangling frogs stay put
+        assert ((nxt >= 0) & (nxt < 3)).all()
+    # plain path end-to-end: all frogs tallied despite the dangling vertex
+    from repro.core import frogwild
+
+    res = frogwild(g, FrogWildConfig(num_frogs=500, num_steps=3), seed=0)
+    assert int(res.counts.sum()) == 500
+
+
+def test_build_csr_self_loop_policy():
+    from repro.graph.csr import build_csr
+
+    src = np.asarray([0, 1])
+    dst = np.asarray([1, 0])
+    g = build_csr(4, src, dst, dangling="self_loop")
+    assert g.successors(2).tolist() == [2]
+    assert g.successors(3).tolist() == [3]
+    g2 = build_csr(4, src, dst)                   # default hash policy
+    assert g2.successors(2).tolist() != [2]
+
+
+def test_coin_uniform_is_uniform_and_consistent():
+    key = jax.random.PRNGKey(5)
+    idx = jnp.arange(20_000, dtype=jnp.int32)
+    u = np.asarray(coin_uniform(key, idx))
+    assert 0.0 <= u.min() and u.max() < 1.0
+    assert abs(u.mean() - 0.5) < 0.01
+    # deterministic per (key, idx): repeated evaluation returns same coins
+    u2 = np.asarray(coin_uniform(key, idx))
+    assert (u == u2).all()
+    # and different keys decorrelate
+    u3 = np.asarray(coin_uniform(jax.random.PRNGKey(6), idx))
+    assert abs(np.corrcoef(u, u3)[0, 1]) < 0.03

@@ -63,6 +63,66 @@ def test_frog_count_skewed():
     assert int(c[0]) == 4096 and int(c.sum()) == 4096
 
 
+@given(
+    n=st.integers(8, 2000),
+    N=st.integers(1, 5000),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=10)
+def test_frog_count_sort_matches_ref(n, N, seed):
+    dest = jnp.asarray(
+        np.random.default_rng(seed).integers(0, n, size=N), dtype=jnp.int32)
+    a = ops.frog_count(dest, n, impl="sort")
+    b = ops.frog_count(dest, n, impl="ref")
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_frog_count_sort_ignores_padding():
+    dest = jnp.asarray([-1, 0, 3, 3, -1, 7], jnp.int32)
+    c = np.asarray(ops.frog_count(dest, 8, impl="sort"))
+    assert c.tolist() == [1, 0, 0, 2, 0, 0, 0, 1]
+
+
+# ---------------------------------------------------------------------------
+# fused frog_step (plain walker superstep)
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.integers(16, 800),
+    N=st.integers(8, 4000),
+    seed=st.integers(0, 50),
+)
+@settings(max_examples=10)
+def test_frog_step_matches_ref(n, N, seed):
+    g = uniform_random(n, avg_out_deg=5, seed=seed)
+    rng = np.random.default_rng(seed)
+    pos = jnp.asarray(rng.integers(0, n, N), jnp.int32)
+    die = jnp.asarray(rng.random(N) < 0.2, jnp.int32)
+    bits = jnp.asarray(rng.integers(0, 1 << 30, N), jnp.int32)
+    nxt_p, cnt_p = ops.frog_step(
+        pos, die, bits, g.row_ptr, g.col_idx, g.out_deg, g.n, impl="pallas")
+    nxt_r, cnt_r = ops.frog_step(
+        pos, die, bits, g.row_ptr, g.col_idx, g.out_deg, g.n, impl="ref")
+    assert (np.asarray(nxt_p) == np.asarray(nxt_r)).all()
+    assert (np.asarray(cnt_p) == np.asarray(cnt_r)).all()
+    assert int(cnt_p.sum()) == int(die.sum())
+
+
+def test_frog_step_dangling_stays_put():
+    # vertex 1 dangling: frogs there must not move or crash
+    row_ptr = jnp.asarray([0, 1, 1], jnp.int32)
+    col_idx = jnp.asarray([1], jnp.int32)
+    deg = jnp.asarray([1, 0], jnp.int32)
+    pos = jnp.asarray([0, 1, 1, 0], jnp.int32)
+    die = jnp.zeros((4,), jnp.int32)
+    bits = jnp.asarray([5, 9, 13, 2], jnp.int32)
+    for impl in ("pallas", "ref"):
+        nxt, cnt = ops.frog_step(pos, die, bits, row_ptr, col_idx, deg, 2,
+                                 impl=impl)
+        assert np.asarray(nxt).tolist() == [1, 1, 1, 1], impl
+        assert int(cnt.sum()) == 0
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
