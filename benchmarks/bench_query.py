@@ -1,0 +1,147 @@
+"""Query-serving benchmark: indexed stitching vs from-scratch restart.
+
+Serves a batch of (ε, δ)-planned top-k and PPR queries two ways over the
+same graph and the same per-query walk budgets:
+
+* **indexed** — the walk-index query engine: one offline segment-index
+  build (amortized across all queries), then the continuous-batching
+  ``QueryScheduler`` stitching ``⌊t/L⌋`` segment gathers + ``t mod L``
+  residual steps per walk, many queries per device wave.
+* **restart** — the pre-index serving story: every query reruns the full
+  ``t``-superstep walk from scratch (``frogwild_run`` for global top-k, a
+  masked direct walk for PPR), one query at a time.
+
+Emits ``BENCH_query.json`` with queries/sec and p50/p99 latency for both,
+plus the index build cost — machine-readable trajectory for later PRs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, emit_json
+from repro.core import FrogWildConfig, frogwild_run
+from repro.graph import chung_lu_powerlaw
+from repro.kernels import ops
+from repro.query import (QueryRequest, QueryScheduler, WalkIndexConfig,
+                         build_walk_index, plan_query)
+from repro.query.engine import _plain_steps, sample_walk_lengths
+
+N_GRAPH = 32_768
+NUM_QUERIES = 24
+EPSILON, DELTA, K = 0.3, 0.1, 10
+
+
+def _requests():
+    reqs = []
+    for i in range(NUM_QUERIES):
+        if i % 3 == 2:
+            reqs.append(QueryRequest(rid=i, kind="ppr", source=17 * i + 1,
+                                     k=K, epsilon=EPSILON, delta=DELTA))
+        else:
+            reqs.append(QueryRequest(rid=i, kind="topk", k=K,
+                                     epsilon=EPSILON, delta=DELTA))
+    return reqs
+
+
+def _restart_latencies(g, plan, reqs, p_T=0.15):
+    """One full from-scratch walk program per query (the no-index baseline)."""
+    cfg = FrogWildConfig(num_frogs=plan.num_walks, num_steps=plan.num_steps,
+                         p_T=p_T)
+    topk_run = jax.jit(lambda k: frogwild_run(g, cfg, k).counts)
+
+    def ppr_counts(source, key):
+        k_tau, k_walk = jax.random.split(key)
+        pos0 = jnp.full((plan.num_walks,), source, jnp.int32)
+        tau = sample_walk_lengths(k_tau, plan.num_walks, p_T, plan.num_steps)
+        pos = _plain_steps(g.row_ptr, g.col_idx, g.out_deg, pos0, tau,
+                           k_walk, plan.num_steps)
+        return ops.frog_count(pos, g.n, impl="ref")
+
+    ppr_run = jax.jit(ppr_counts)
+    # warm both programs so the measured latencies are steady-state
+    jax.block_until_ready(topk_run(jax.random.PRNGKey(0)))
+    jax.block_until_ready(ppr_run(jnp.int32(1), jax.random.PRNGKey(0)))
+
+    lat = []
+    for i, r in enumerate(reqs):
+        key = jax.random.PRNGKey(100 + i)
+        t0 = time.perf_counter()
+        if r.kind == "ppr":
+            counts = ppr_run(jnp.int32(r.source), key)
+        else:
+            counts = topk_run(key)
+        counts = np.asarray(counts)
+        np.argsort(-counts, kind="stable")[:K]       # same finalize work
+        lat.append(time.perf_counter() - t0)
+    return np.asarray(lat)
+
+
+def main():
+    rows = []
+    g = chung_lu_powerlaw(n=N_GRAPH, avg_out_deg=12, seed=0)
+    plan = plan_query(K, EPSILON, DELTA)
+
+    icfg = WalkIndexConfig(segments_per_vertex=8, segment_len=4, num_shards=8)
+    t0 = time.perf_counter()
+    index = build_walk_index(g, icfg)
+    build_s = time.perf_counter() - t0
+    rows.append(("query/index_build", build_s * 1e6,
+                 f"n={g.n} R={icfg.segments_per_vertex} "
+                 f"L={icfg.segment_len} slab_mb="
+                 f"{index.endpoints.nbytes / 1e6:.1f}"))
+
+    # one scheduler for warmup + measurement: its wave program compiles once
+    # and every later wave reuses it (the steady-state serving regime).
+    sched = QueryScheduler(g, index, max_walks=16_384, max_queries=12,
+                           max_steps=plan.num_steps)
+
+    def serve_indexed():
+        for r in _requests():
+            sched.submit(r)
+        out = sched.run()
+        sched.finished = []
+        return out
+
+    serve_indexed()                                  # warm the wave program
+    t0 = time.perf_counter()
+    results = serve_indexed()
+    dt_idx = time.perf_counter() - t0
+    lat_idx = np.asarray([r.latency_s for r in results])
+    qps_idx = NUM_QUERIES / dt_idx
+    rows.append(("query/indexed_serve", dt_idx * 1e6 / NUM_QUERIES,
+                 f"qps={qps_idx:.1f} p50_ms={np.percentile(lat_idx, 50) * 1e3:.1f} "
+                 f"p99_ms={np.percentile(lat_idx, 99) * 1e3:.1f}"))
+
+    t0 = time.perf_counter()
+    lat_rst = _restart_latencies(g, plan, _requests())
+    dt_rst = time.perf_counter() - t0
+    qps_rst = NUM_QUERIES / dt_rst
+    rows.append(("query/restart_serve", dt_rst * 1e6 / NUM_QUERIES,
+                 f"qps={qps_rst:.1f} p50_ms={np.percentile(lat_rst, 50) * 1e3:.1f} "
+                 f"p99_ms={np.percentile(lat_rst, 99) * 1e3:.1f}"))
+
+    speedup = qps_idx / qps_rst
+    rows.append(("query/indexed_vs_restart", 0.0,
+                 f"speedup={speedup:.2f}x walks/query={plan.num_walks} "
+                 f"t={plan.num_steps} rounds={plan.num_rounds(icfg.segment_len)}"))
+    emit(rows)
+    emit_json("query", rows, extra={
+        "num_queries": NUM_QUERIES,
+        "epsilon": EPSILON, "delta": DELTA, "k": K,
+        "qps_indexed": round(qps_idx, 2),
+        "qps_restart": round(qps_rst, 2),
+        "p50_ms_indexed": round(float(np.percentile(lat_idx, 50)) * 1e3, 2),
+        "p99_ms_indexed": round(float(np.percentile(lat_idx, 99)) * 1e3, 2),
+        "p50_ms_restart": round(float(np.percentile(lat_rst, 50)) * 1e3, 2),
+        "p99_ms_restart": round(float(np.percentile(lat_rst, 99)) * 1e3, 2),
+        "index_build_s": round(build_s, 3),
+        "speedup": round(speedup, 2),
+    })
+
+
+if __name__ == "__main__":
+    main()

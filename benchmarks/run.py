@@ -14,6 +14,7 @@ from benchmarks import (
     bench_iteration_cost,
     bench_kernels,
     bench_network,
+    bench_query,
     bench_sparsify,
     bench_theory,
     bench_tradeoff,
@@ -29,6 +30,7 @@ ALL = {
     "fig8_network": bench_network,
     "thm1_theory": bench_theory,
     "kernels": bench_kernels,
+    "query_serving": bench_query,
 }
 
 

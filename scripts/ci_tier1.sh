@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Canonical tier-1 verification — the one command builders and CI invoke.
+# Extra pytest args pass through, e.g. scripts/ci_tier1.sh -k query
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -1,0 +1,10 @@
+"""FrogWild! reproduction package.
+
+Importing ``repro`` (any submodule) installs the jax version-compat shims —
+the codebase targets the jax ≥ 0.5 public API (``jax.shard_map``,
+``jax.sharding.AxisType``, ``make_mesh(axis_types=)``) and
+``distributed/compat.py`` back-fills those names on older containers.
+"""
+from repro.distributed.compat import install as _install_jax_compat
+
+_install_jax_compat()

@@ -48,7 +48,7 @@ import jax.numpy as jnp
 from repro.core.blocking import (channel_enum_draw, coin_uniform,
                                  rejection_blocking_draw,
                                  rejection_is_profitable)
-from repro.graph.csr import CSRGraph
+from repro.graph.csr import CSRGraph, uniform_successor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -192,12 +192,8 @@ def frogwild_run(
     counts0 = jnp.zeros((n,), dtype=jnp.int32)
 
     def plain_move(kmove: jax.Array, pos: jnp.ndarray) -> jnp.ndarray:
-        slot = jax.random.randint(kmove, (N,), 0, 1 << 30, dtype=jnp.int32)
-        # dangling guard: d_out == 0 ⇒ frog stays put (self-loop convention,
-        # see graph/csr.py) instead of mod-by-zero garbage.
-        slot = slot % jnp.maximum(deg[pos], 1)
-        nxt = col_idx[row_ptr[pos] + slot]
-        return jnp.where(deg[pos] > 0, nxt, pos)
+        bits = jax.random.randint(kmove, (N,), 0, 1 << 30, dtype=jnp.int32)
+        return uniform_successor(row_ptr, col_idx, deg, pos, bits)
 
     def step(carry, step_key):
         pos, alive, counts = carry

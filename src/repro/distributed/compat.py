@@ -1,0 +1,105 @@
+"""jax version-compat shims (container jax 0.4.37 vs jax ≥ 0.5 API).
+
+The engine, training, and multidevice tests are written against the modern
+public surface:
+
+  * ``jax.shard_map``                 — promoted from ``jax.experimental``
+  * ``jax.sharding.AxisType``         — mesh axis types (``Auto``/…)
+  * ``jax.make_mesh(..., axis_types=)`` — the kwarg carrying them
+  * ``shard_map(..., check_vma=)``    — renamed from ``check_rep``
+
+On jax 0.4.37 none of these exist. :func:`install` back-fills each missing
+piece from its 0.4-era equivalent (``jax.experimental.shard_map``, a
+placeholder enum, a kwarg-dropping ``make_mesh`` wrapper) so the same source
+runs on both versions. It is idempotent, a no-op on new jax, and invoked
+from ``repro/__init__.py`` — importing any ``repro`` module is enough.
+
+Only *additive* patches are made: nothing native is ever overwritten, so on
+jax ≥ 0.5 this module does exactly nothing.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+
+
+def _shim_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        """Placeholder for jax ≥ 0.5 mesh axis types. 0.4 meshes have no
+        axis-type concept (everything behaves like ``Auto``), so the values
+        only need to exist and compare."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _shim_make_mesh() -> None:
+    native = jax.make_mesh
+    try:
+        import inspect
+
+        accepts = "axis_types" in inspect.signature(native).parameters
+    except (TypeError, ValueError):  # pragma: no cover — exotic wrappers
+        accepts = True
+    if accepts:
+        return
+
+    @functools.wraps(native)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+        # 0.4 meshes are implicitly Auto on every axis — dropping the kwarg
+        # is semantically faithful for Auto; other types have no 0.4
+        # equivalent and still get the (Auto-like) legacy behaviour.
+        return native(axis_shapes, axis_names, **kwargs)
+
+    jax.make_mesh = make_mesh
+
+
+def _shim_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def shard_map(f, /, *, mesh, in_specs, out_specs, check_vma=None,
+                  check_rep=None, axis_names=None, **kwargs):
+        # jax ≥ 0.5 renamed check_rep → check_vma; translate either spelling
+        # onto the 0.4 kwarg.
+        if check_vma is None:
+            check_vma = True if check_rep is None else check_rep
+        if axis_names is not None:
+            # ≥ 0.5 names the *manual* axes; 0.4's ``auto`` names the
+            # complement.
+            kwargs["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma, **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def _shim_pcast() -> None:
+    if hasattr(jax.lax, "pcast"):
+        return
+
+    def pcast(x, axes=None, *, to=None):
+        # ≥ 0.5 tracks varying-manual-axes (VMA) types inside shard_map and
+        # ``pcast`` converts between them. 0.4 has no VMA tracking, so the
+        # cast is the identity.
+        return x
+
+    jax.lax.pcast = pcast
+
+
+def install() -> None:
+    """Installs every missing shim (idempotent; no-op on jax ≥ 0.5)."""
+    _shim_axis_type()
+    _shim_make_mesh()
+    _shim_shard_map()
+    _shim_pcast()

@@ -4,7 +4,8 @@ Graphs are immutable, host-generated (numpy) and converted to device arrays
 once. All downstream code (core walkers, distributed engine, kernels) consumes
 the :class:`~repro.graph.csr.CSRGraph` container.
 """
-from repro.graph.csr import CSRGraph, build_csr, transition_edges
+from repro.graph.csr import (CSRGraph, build_csr, transition_edges,
+                             uniform_successor)
 from repro.graph.generators import (
     barabasi_albert,
     chung_lu_powerlaw,
@@ -17,6 +18,7 @@ __all__ = [
     "CSRGraph",
     "build_csr",
     "transition_edges",
+    "uniform_successor",
     "barabasi_albert",
     "chung_lu_powerlaw",
     "uniform_random",

@@ -186,6 +186,27 @@ def build_csr(
     )
 
 
+def uniform_successor(
+    row_ptr: jnp.ndarray,
+    col_idx: jnp.ndarray,
+    deg: jnp.ndarray,
+    pos: jnp.ndarray,
+    bits: jnp.ndarray,
+) -> jnp.ndarray:
+    """One uniform out-edge hop per walker, vectorized over ``pos``.
+
+    ``next = col_idx[row_ptr[pos] + bits % d_out(pos)]``, with the dangling
+    guard: ``d_out == 0`` ⇒ the walker stays put (the self-loop convention,
+    see :func:`build_csr`). The single definition of the plain walker hop —
+    used by the core oracle's ``plain_move``, the walk-index build, and the
+    query engine's residual steps, so the dangling policy can never diverge
+    between offline and online walks.
+    """
+    slot = bits % jnp.maximum(deg[pos], 1)
+    nxt = col_idx[row_ptr[pos] + slot]
+    return jnp.where(deg[pos] > 0, nxt, pos)
+
+
 def transition_edges(g: CSRGraph) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Returns ``(src, dst, weight)`` per edge with ``weight = 1/d_out(src)``.
 

@@ -19,6 +19,7 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.frog_scatter import frog_count as _frog_count
 from repro.kernels.frog_step import frog_step as _frog_step
 from repro.kernels.spmv_ell import spmv_ell_slab
+from repro.kernels.stitch import stitch_step as _stitch_step
 
 
 def _pad_to(x: jnp.ndarray, m: int, axis: int = 0, value=0):
@@ -122,6 +123,49 @@ def frog_step(
         interpret=interpret,
     )
     return nxt[:N], counts[:n]
+
+
+def stitch_step(
+    pos: jnp.ndarray,
+    stop: jnp.ndarray,
+    bits: jnp.ndarray,
+    endpoints: jnp.ndarray,  # int32[n, R] — walk-segment endpoint slab
+    n: int,
+    impl: str = "pallas",
+    interpret: bool = True,
+    vertex_block: int = 512,
+    walk_block: int = 1024,
+):
+    """Fused query stitch round → ``(next_pos[W], stop_counts[n])``.
+
+    One round replaces ``segment_len`` walker supersteps: gather a uniformly
+    chosen precomputed segment endpoint per walk and tally the walks whose
+    budget ran out. ``pallas`` runs the VMEM-resident fused kernel
+    (interpret mode on CPU); ``ref`` is the pure-jnp oracle. Padding is
+    handled here so callers pass natural shapes.
+    """
+    stop = stop.astype(jnp.int32)
+    bits = jnp.abs(bits).astype(jnp.int32)
+    if impl == "ref":
+        return kref.stitch_step_ref(pos, stop, bits, endpoints, n)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+    W = pos.shape[0]
+    R = endpoints.shape[1]
+    vertex_block = min(vertex_block, max(8, n))
+    n_pad = ((n + vertex_block - 1) // vertex_block) * vertex_block
+    walk_block = min(walk_block, max(8, W))
+    # padded walks: parked on vertex 0, not stopping, slot bits 0 — their
+    # next position is discarded by the slice below and they tally nothing.
+    pos_p = _pad_to(pos, walk_block)
+    stop_p = _pad_to(stop, walk_block)
+    bits_p = _pad_to(bits, walk_block)
+    nxt, counts = _stitch_step(
+        pos_p, stop_p, bits_p, endpoints.reshape(-1), R, n_pad,
+        vertex_block=vertex_block, walk_block=walk_block,
+        interpret=interpret,
+    )
+    return nxt[:W], counts[:n]
 
 
 def attention(

@@ -88,6 +88,24 @@ def frog_step_ref(
     return nxt.astype(jnp.int32), counts
 
 
+def stitch_step_ref(
+    pos: jnp.ndarray,        # int32[W]
+    stop: jnp.ndarray,       # int32[W] — 1 where the walk halts this round
+    bits: jnp.ndarray,       # int32[W] — uniform bits for the segment slot
+    endpoints: jnp.ndarray,  # int32[n, R] — walk-segment endpoint slab
+    n: int,
+):
+    """Oracle for the fused stitch round: (next_pos, stop_counts).
+
+    next = endpoints[pos, bits % R]; counts tallies the halting walks at
+    their current vertex.
+    """
+    R = endpoints.shape[1]
+    nxt = endpoints[pos, bits % R]
+    counts = jnp.zeros((n,), jnp.int32).at[pos].add(stop.astype(jnp.int32))
+    return nxt.astype(jnp.int32), counts
+
+
 def attention_ref(
     q: jnp.ndarray,                    # [B, Hq, Sq, D]
     k: jnp.ndarray,                    # [B, Hkv, Skv, D]

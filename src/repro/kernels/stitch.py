@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: fused walk-segment gather-and-tally (query stitch).
+
+The online query engine (``repro/query``) composes precomputed length-L walk
+segments: one stitch round replaces L walker supersteps with a single gather
+from the dense endpoint slab ``endpoints[n, R]`` — ``next = endpoints[pos,
+slot]`` for a uniform segment slot — and walks whose step budget is exhausted
+are tallied into the per-vertex counter. Written as separate XLA ops that is
+a gather, a modulo, and a scatter-add with an HBM round-trip between each;
+this kernel fuses them into one VMEM-resident pass, structurally the twin of
+``frog_step.py``:
+
+  per (vertex-block, walk-block) tile:
+    the flat endpoint slab stays resident in VMEM (bench-/shard-sized
+    slabs, same budget assumption as frog_step's graph block),
+    slot = bits % R → gather endpoints[pos · R + slot] → one-hot-reduce the
+    stopped walks into the counts tile (walk axis is the innermost
+    sequential grid dimension, so the counts tile never leaves VMEM).
+
+Random bits come from the caller (``jax.random`` outside the kernel), so the
+kernel is deterministic and byte-for-byte testable against
+``ref.stitch_step_ref``; on real TPU the bits input can be swapped for
+``pltpu.prng_random_bits`` without touching the stitch semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_VERTEX_BLOCK = 512
+DEFAULT_WALK_BLOCK = 1024
+
+
+def _stitch_kernel(
+    pos_ref, stop_ref, bits_ref, endpoints_ref,
+    counts_ref, next_ref, *, vertex_block: int, R: int,
+):
+    iv, jw = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(jw == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    pos = pos_ref[...]                                          # [BW]
+    stop = stop_ref[...]                                        # [BW] 0/1
+
+    # --- stitch: draw a segment slot, gather its endpoint (slab resident).
+    # Only the tally below depends on the vertex-block index; the gather is
+    # done once per walk block (its tile is first visited at iv == 0 and the
+    # written block round-trips through HBM across later iv revisits, the
+    # same read-modify-write contract the counts accumulation relies on).
+    @pl.when(iv == 0)
+    def _gather():
+        slot = bits_ref[...] % R
+        nxt = jnp.take(endpoints_ref[...], pos * R + slot, axis=0)
+        next_ref[...] = nxt.astype(jnp.int32)
+    # --- tally: stopped walks accumulate into the resident counts tile ---
+    v0 = iv * vertex_block
+    local = jnp.where(stop > 0, pos - v0, -1)
+    onehot = local[:, None] == jnp.arange(vertex_block)[None, :]  # [BW, BV]
+    counts_ref[...] += onehot.sum(axis=0).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("R", "n_pad", "vertex_block", "walk_block", "interpret"),
+)
+def stitch_step(
+    pos: jnp.ndarray,        # int32[W] — current vertex per walk
+    stop: jnp.ndarray,       # int32[W] — 1 where the walk halts this round
+    bits: jnp.ndarray,       # int32[W] — uniform random bits for the slot draw
+    endpoints: jnp.ndarray,  # int32[n · R] — flat walk-segment endpoint slab
+    R: int,                  # segments per vertex
+    n_pad: int,              # counts bins, multiple of vertex_block
+    vertex_block: int = DEFAULT_VERTEX_BLOCK,
+    walk_block: int = DEFAULT_WALK_BLOCK,
+    interpret: bool = True,
+):
+    """Returns ``(next_pos int32[W], stop_counts int32[n_pad])``."""
+    (W,) = pos.shape
+    if n_pad % vertex_block != 0:
+        raise ValueError(f"n_pad={n_pad} not a multiple of {vertex_block}")
+    if W % walk_block != 0:
+        raise ValueError(f"W={W} not a multiple of {walk_block}")
+    nR = endpoints.shape[0]
+    grid = (n_pad // vertex_block, W // walk_block)
+    kernel = functools.partial(
+        _stitch_kernel, vertex_block=vertex_block, R=R)
+    counts, nxt = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((walk_block,), lambda iv, jw: (jw,)),   # pos
+            pl.BlockSpec((walk_block,), lambda iv, jw: (jw,)),   # stop
+            pl.BlockSpec((walk_block,), lambda iv, jw: (jw,)),   # bits
+            pl.BlockSpec((nR,), lambda iv, jw: (0,)),            # endpoints
+        ],
+        out_specs=(
+            pl.BlockSpec((vertex_block,), lambda iv, jw: (iv,)),
+            pl.BlockSpec((walk_block,), lambda iv, jw: (jw,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((W,), jnp.int32),
+        ),
+        interpret=interpret,
+    )(pos, stop, bits, endpoints)
+    return nxt, counts

@@ -1,0 +1,51 @@
+"""Walk-index query engine: FrogWild as an online serving primitive.
+
+The batch reproduction answers one offline top-k question per
+``frogwild_run``. This subsystem turns the same random-walk machinery into a
+*query* primitive (PowerWalk-style):
+
+* ``index.py``     — offline walk-segment index: for every vertex, ``R``
+                     precomputed length-``L`` plain-walk endpoints stored as
+                     a dense ``int32[n, R]`` slab (built shard-by-shard via
+                     ``graph/partition.py``, persisted through
+                     ``checkpoint/``).
+* ``engine.py``    — online stitching: a query walk of Geometric(p_T) total
+                     length is composed from ``⌊τ/L⌋`` index segments plus
+                     ``τ mod L`` direct steps; Theorem-1 bounds invert into
+                     per-query ``(ε, δ)`` → walk-count/step plans.
+* ``scheduler.py`` — host-side continuous batching: many concurrent top-k /
+                     personalized-PageRank queries share one fixed-shape
+                     device program (fixed walk slots × fixed query slots,
+                     the ``serving/scheduler.py`` design).
+"""
+from repro.query.index import (
+    WalkIndex,
+    WalkIndexConfig,
+    build_walk_index,
+    load_walk_index,
+    save_walk_index,
+)
+from repro.query.engine import (
+    QueryPlan,
+    plan_query,
+    query_counts,
+    sample_walk_lengths,
+    walk_wave,
+)
+from repro.query.scheduler import QueryRequest, QueryResult, QueryScheduler
+
+__all__ = [
+    "WalkIndex",
+    "WalkIndexConfig",
+    "build_walk_index",
+    "load_walk_index",
+    "save_walk_index",
+    "QueryPlan",
+    "plan_query",
+    "query_counts",
+    "sample_walk_lengths",
+    "walk_wave",
+    "QueryRequest",
+    "QueryResult",
+    "QueryScheduler",
+]

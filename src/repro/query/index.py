@@ -1,0 +1,173 @@
+"""Offline walk-segment index (the PowerWalk precompute, FrogWild flavour).
+
+For every vertex ``v`` the index stores ``R`` independent endpoints of plain
+(p_s = 1, no-death) random walks of exactly ``L`` steps started at ``v`` —
+a dense ``int32[n, R]`` slab. Each stored endpoint is an exact sample of
+the L-step transition kernel ``P^L(· | v)``, so the online engine can
+replace L walker supersteps with one gather from row ``v``. Sizing note:
+pick ``R ≥ t/L`` (stitches per walk) — the engine's slot rotation then
+guarantees a walk never rereads a cell and its composed marginal is exact;
+cell sharing across walks only adds variance (tests/test_query.py checks
+the distribution statistically).
+
+Build is sharded via ``graph/partition.py``: one fixed-shape jitted program
+walks ``shard_size · R`` frogs for ``L`` steps, invoked once per range shard
+(the shard loop is the host-side analogue of the engine's vertex sharding —
+peak device memory is one shard's walk batch, not ``n · R``). The inner step
+is a batched variant of the walker superstep and can run through the fused
+Pallas ``frog_step`` kernel (``step_impl="pallas"``).
+
+Persistence goes through ``checkpoint/`` (atomic step directories), so index
+builds inherit the crash-safety and GC story of model checkpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.graph.csr import CSRGraph, uniform_successor
+from repro.graph.partition import partition_graph
+
+
+@dataclasses.dataclass(frozen=True)
+class WalkIndexConfig:
+    segments_per_vertex: int = 16     # R — endpoints stored per vertex
+    segment_len: int = 4              # L — steps per precomputed segment
+    num_shards: int = 8               # build sharding (graph/partition.py)
+    step_impl: str = "xla"            # xla | pallas | ref — walk-step backend
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class WalkIndex:
+    """Dense per-vertex walk-segment endpoints.
+
+    Attributes:
+      endpoints:   int32[n, R] — ``endpoints[v, r] ~ P^L(· | v)`` i.i.d.
+      segment_len: L, the number of steps each stored segment advanced.
+      seed:        build seed (provenance; queries use their own keys).
+    """
+
+    endpoints: jnp.ndarray
+    segment_len: int
+    seed: int
+
+    @property
+    def n(self) -> int:
+        return int(self.endpoints.shape[0])
+
+    @property
+    def segments_per_vertex(self) -> int:
+        return int(self.endpoints.shape[1])
+
+
+@dataclasses.dataclass(frozen=True)
+class _ShardWalker:
+    """One fixed-shape compiled program reused for every shard's build."""
+
+    row_ptr: jnp.ndarray
+    col_idx: jnp.ndarray
+    deg: jnp.ndarray
+    n: int
+    shard_size: int
+    cfg: WalkIndexConfig
+
+    def __call__(self, lo: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+        R, L = self.cfg.segments_per_vertex, self.cfg.segment_len
+        pos0 = lo + jnp.repeat(
+            jnp.arange(self.shard_size, dtype=jnp.int32), R,
+            total_repeat_length=self.shard_size * R,
+        )
+
+        def step(pos, k):
+            bits = jax.random.randint(k, pos.shape, 0, 1 << 30, jnp.int32)
+            if self.cfg.step_impl == "xla":
+                nxt = uniform_successor(
+                    self.row_ptr, self.col_idx, self.deg, pos, bits)
+            else:
+                from repro.kernels import ops
+
+                # batched frog step with no deaths: the death tally is all
+                # zeros and discarded — the segment walk is the p_T = 0,
+                # p_s = 1 corner of the walker superstep.
+                nxt, _ = ops.frog_step(
+                    pos, jnp.zeros_like(pos), bits,
+                    self.row_ptr, self.col_idx, self.deg, self.n,
+                    impl=self.cfg.step_impl,
+                )
+            return nxt, None
+
+        pos, _ = jax.lax.scan(step, pos0, jax.random.split(key, L))
+        return pos.reshape(self.shard_size, R)
+
+
+def build_walk_index(
+    g: CSRGraph, cfg: WalkIndexConfig, key: Optional[jax.Array] = None
+) -> WalkIndex:
+    """Builds the ``int32[n, R]`` endpoint slab, one range shard at a time."""
+    if cfg.segment_len < 1:
+        raise ValueError(f"segment_len must be ≥ 1, got {cfg.segment_len}")
+    if key is None:
+        key = jax.random.PRNGKey(cfg.seed)
+    gp, part = partition_graph(g, cfg.num_shards)
+    walker = _ShardWalker(
+        row_ptr=gp.row_ptr, col_idx=gp.col_idx, deg=gp.out_deg, n=gp.n,
+        shard_size=part.shard_size, cfg=cfg,
+    )
+    run = jax.jit(walker.__call__)
+    blocks = []
+    for s in range(cfg.num_shards):
+        lo, _ = part.bounds(s)
+        blocks.append(np.asarray(run(jnp.int32(lo), jax.random.fold_in(key, s))))
+    endpoints = np.concatenate(blocks, axis=0)[: g.n]
+    return WalkIndex(
+        endpoints=jnp.asarray(endpoints, dtype=jnp.int32),
+        segment_len=cfg.segment_len,
+        seed=cfg.seed,
+    )
+
+
+# --- persistence (checkpoint/ atomic step directories) ----------------------
+
+
+def _index_tree(index: WalkIndex) -> dict:
+    return {
+        "endpoints": index.endpoints,
+        "segment_len": jnp.int32(index.segment_len),
+        "seed": jnp.int32(index.seed),
+    }
+
+
+def save_walk_index(directory: str, index: WalkIndex, step: int = 0) -> str:
+    """Atomic save under ``<directory>/step_<k>/`` (checkpoint layout)."""
+    return save_checkpoint(directory, step, _index_tree(index))
+
+
+def load_walk_index(directory: str, step: Optional[int] = None) -> WalkIndex:
+    """Restores the latest (or given) index build from ``directory``."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no walk index under {directory!r}")
+    # Reconstruct the restore template from the checkpoint's own metadata —
+    # the index is self-describing, callers need not know (n, R) up front.
+    with open(os.path.join(directory, f"step_{step:08d}", "tree.json")) as f:
+        meta = json.load(f)
+    like = {
+        path: np.zeros(shape, dtype=np.dtype(dtype))
+        for path, shape, dtype in zip(
+            meta["paths"], meta["shapes"], meta["dtypes"])
+    }
+    tree = restore_checkpoint(directory, step, like)
+    return WalkIndex(
+        endpoints=tree["endpoints"],
+        segment_len=int(tree["segment_len"]),
+        seed=int(tree["seed"]),
+    )

@@ -1,0 +1,243 @@
+"""Host-side continuous-batching query scheduler (fixed-slot design).
+
+The device program is one fixed shape — ``max_walks`` walk slots ×
+``max_queries`` query slots — and scheduling is pure host logic, exactly the
+``serving/scheduler.py`` contract. Each wave:
+
+  admit     queued queries claim free query slots;
+  allocate  walk slots are split fairly among active queries (equal shares,
+            leftovers greedily), so a million-walk query cannot starve a
+            cheap PPR probe — continuous batching, not generational: a query
+            spanning several waves keeps its slot while finished queries
+            free theirs mid-flight;
+  execute   one jitted wave program advances all walks (residual steps +
+            index stitching, ``query/engine.py``) and histograms endpoints
+            into per-query-slot bins with a single sort-based
+            ``frog_count`` over ``(Q + 1) · n`` bins (row Q discards idle
+            slots);
+  retire    queries whose walk budget completed finalize top-k from their
+            accumulated counters and release the slot.
+
+Different queries in one wave may have different planned truncations ``t``
+(per-walk ``t_cap``) and different kinds (global top-k draws uniform starts,
+personalized PageRank pins the start vertex) — the program shape never
+changes, so XLA compiles exactly once per scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+from repro.kernels import ops
+from repro.query.engine import (check_segment_budget, plan_query,
+                                sample_walk_lengths, walk_wave)
+from repro.query.index import WalkIndex
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    rid: int
+    kind: str = "topk"               # "topk" | "ppr"
+    k: int = 10
+    source: int = 0                  # PPR start vertex (ignored for topk)
+    epsilon: float = 0.3
+    delta: float = 0.1
+    num_walks: Optional[int] = None  # override the (ε, δ) plan's walk count
+    t_submit: Optional[float] = None # stamped by QueryScheduler.submit()
+
+
+@dataclasses.dataclass
+class QueryResult:
+    rid: int
+    kind: str
+    vertices: np.ndarray             # int64[k] — estimated top-k
+    scores: np.ndarray               # f64[k]  — π̂ / PPR estimates
+    num_walks: int
+    num_steps: int
+    waves: int                       # device waves this query spanned
+    latency_s: float
+
+
+@dataclasses.dataclass
+class _Active:
+    req: QueryRequest
+    num_steps: int
+    remaining: int
+    total_walks: int
+    counts: np.ndarray               # int64[n] accumulator
+    waves: int
+    t_submit: float
+
+
+class QueryScheduler:
+    def __init__(
+        self,
+        g: CSRGraph,
+        index: WalkIndex,
+        max_walks: int = 8192,
+        max_queries: int = 8,
+        max_steps: int = 32,
+        p_T: float = 0.15,
+        impl: str = "xla",
+        tally_impl: str = "ref",
+        seed: int = 0,
+    ):
+        self.g = g
+        self.index = index
+        self.max_walks = max_walks
+        self.max_queries = max_queries
+        self.max_steps = max_steps
+        self.p_T = p_T
+        self.impl = impl
+        self.tally_impl = tally_impl
+        check_segment_budget(index.segments_per_vertex,
+                             max_steps // index.segment_len)
+        self.queue: List[QueryRequest] = []
+        self.active: Dict[int, _Active] = {}
+        self.finished: List[QueryResult] = []
+        self._key = jax.random.PRNGKey(seed)
+        self._wave_fn = self._build_wave_fn()
+
+    # --- device program (compiled once) ---------------------------------
+
+    def _build_wave_fn(self):
+        g, index = self.g, self.index
+        n, W, Q = g.n, self.max_walks, self.max_queries
+        L = index.segment_len
+        q_max = self.max_steps // L
+        p_T, impl = self.p_T, self.impl
+        row_ptr, col_idx, deg = g.row_ptr, g.col_idx, g.out_deg
+        endpoints = index.endpoints
+
+        def wave(start, uniform, qid, t_cap, key):
+            k_start, k_tau, k_walk = jax.random.split(key, 3)
+            pos0 = jnp.where(
+                uniform,
+                jax.random.randint(k_start, (W,), 0, n, dtype=jnp.int32),
+                start,
+            )
+            tau = sample_walk_lengths(k_tau, W, p_T, t_cap)
+            pos, _ = walk_wave(
+                row_ptr, col_idx, deg, endpoints, pos0, tau, k_walk,
+                L, q_max, impl=impl,
+            )
+            # one histogram for the whole wave: vertex id offset by the
+            # walk's query slot; row Q is the idle-slot discard bin.
+            # ``tally_impl``: "ref" (XLA scatter-add — fastest on CPU) or
+            # "sort" (segment counts — the TPU-friendly scatter-free path).
+            counts = ops.frog_count(pos + qid * n, (Q + 1) * n,
+                                    impl=self.tally_impl)
+            return counts.reshape(Q + 1, n)[:Q]
+
+        return jax.jit(wave)
+
+    # --- host scheduling --------------------------------------------------
+
+    def submit(self, req: QueryRequest) -> None:
+        if req.num_walks is not None and req.num_walks <= 0:
+            raise ValueError(
+                f"request {req.rid}: num_walks must be positive, got "
+                f"{req.num_walks}")
+        if req.kind == "ppr" and not (0 <= req.source < self.g.n):
+            raise ValueError(
+                f"request {req.rid}: ppr source {req.source} outside "
+                f"[0, {self.g.n})")
+        if req.kind not in ("topk", "ppr"):
+            raise ValueError(f"request {req.rid}: unknown kind {req.kind!r}")
+        # latency clock starts here, so queue wait counts toward latency_s
+        if req.t_submit is None:
+            req.t_submit = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        free = [s for s in range(self.max_queries) if s not in self.active]
+        while self.queue and free:
+            req = self.queue.pop(0)
+            plan = plan_query(req.k, req.epsilon, req.delta, p_T=self.p_T,
+                              max_steps=self.max_steps)
+            walks = req.num_walks if req.num_walks is not None else plan.num_walks
+            self.active[free.pop(0)] = _Active(
+                req=req, num_steps=plan.num_steps, remaining=walks,
+                total_walks=walks, counts=np.zeros(self.g.n, np.int64),
+                waves=0, t_submit=req.t_submit,
+            )
+
+    def _allocate(self) -> Dict[int, int]:
+        """Fair-share walk-slot split: {query slot: walks this wave}."""
+        slots = {}
+        budget = self.max_walks
+        order = sorted(self.active)
+        share = max(1, budget // max(1, len(order)))
+        for s in order:
+            take = min(self.active[s].remaining, share, budget)
+            slots[s] = take
+            budget -= take
+        for s in order:                      # leftovers, greedy
+            if budget == 0:
+                break
+            extra = min(self.active[s].remaining - slots[s], budget)
+            slots[s] += extra
+            budget -= extra
+        return {s: w for s, w in slots.items() if w > 0}
+
+    def step_wave(self) -> bool:
+        """Runs one device wave; returns False when nothing is in flight."""
+        self._admit()
+        if not self.active:
+            return False
+        alloc = self._allocate()
+        W, Q = self.max_walks, self.max_queries
+        start = np.zeros(W, np.int32)
+        uniform = np.zeros(W, bool)
+        qid = np.full(W, Q, np.int32)        # default: discard bin
+        t_cap = np.zeros(W, np.int32)
+        cursor = 0
+        for s, w in alloc.items():
+            a = self.active[s]
+            sl = slice(cursor, cursor + w)
+            qid[sl] = s
+            t_cap[sl] = a.num_steps
+            if a.req.kind == "ppr":
+                start[sl] = a.req.source
+            else:
+                uniform[sl] = True
+            cursor += w
+
+        self._key, k_wave = jax.random.split(self._key)
+        counts = np.asarray(self._wave_fn(
+            jnp.asarray(start), jnp.asarray(uniform), jnp.asarray(qid),
+            jnp.asarray(t_cap), k_wave))
+
+        now = time.perf_counter()
+        for s, w in alloc.items():
+            a = self.active[s]
+            a.counts += counts[s]
+            a.remaining -= w
+            a.waves += 1
+            if a.remaining == 0:
+                self.finished.append(self._finalize(a, now))
+                del self.active[s]
+        return True
+
+    def _finalize(self, a: _Active, now: float) -> QueryResult:
+        scores = a.counts / float(a.total_walks)
+        k = min(a.req.k, self.g.n)
+        top = np.argsort(-scores, kind="stable")[:k]
+        return QueryResult(
+            rid=a.req.rid, kind=a.req.kind, vertices=top,
+            scores=scores[top], num_walks=a.total_walks,
+            num_steps=a.num_steps, waves=a.waves,
+            latency_s=now - a.t_submit,
+        )
+
+    def run(self) -> List[QueryResult]:
+        """Drains queue + in-flight queries; returns results in finish order."""
+        while self.step_wave():
+            pass
+        return self.finished

@@ -1,0 +1,71 @@
+"""Unit coverage for the ``engine/netcost.py`` wire-byte cost models backing
+the Fig-1c / Fig-8 reproductions: measured-counter accounting, the analytic
+frog model's decay and open-channel scaling, and the dense GraphLab-PR
+baseline it is contrasted against.
+"""
+import numpy as np
+import pytest
+
+from repro.engine.netcost import (FROG_PAYLOAD_BYTES, RANK_BYTES,
+                                  SYNC_MSG_BYTES, BytesReport,
+                                  frogwild_bytes_measured,
+                                  frogwild_bytes_model, pagerank_bytes_model)
+
+
+def test_measured_bytes_exact_accounting():
+    sent = np.array([100, 50, 25])
+    syncs = np.array([40, 20, 10])
+    rep = frogwild_bytes_measured(sent, syncs)
+    want = sent * FROG_PAYLOAD_BYTES + syncs * SYNC_MSG_BYTES
+    assert np.allclose(rep.per_step, want)
+    assert rep.total == pytest.approx(want.sum())
+    assert len(rep.per_step) == 3
+    assert "MB total" in str(rep) and "(3 steps)" in str(rep)
+
+
+def test_model_alive_decay_and_first_step():
+    N, t, p_T, p_s, S, m = 10_000, 6, 0.15, 0.7, 16, 3.0
+    rep = frogwild_bytes_model(N, t, p_T, p_s, S, avg_mirrors=m)
+    assert len(rep.per_step) == t
+    alive0 = N * (1 - p_T)
+    want0 = alive0 * FROG_PAYLOAD_BYTES + alive0 * p_s * m * SYNC_MSG_BYTES
+    assert rep.per_step[0] == pytest.approx(want0)
+    # alive frogs decay geometrically ⇒ per-step bytes do too
+    ratios = rep.per_step[1:] / rep.per_step[:-1]
+    assert np.allclose(ratios, 1 - p_T)
+
+
+def test_model_open_channel_accounting_scales_with_p_s():
+    """p_s throttles exactly the sync-message term: the payload term is
+    p_s-independent and the sync term is linear in p_s."""
+    N, t, p_T, S = 50_000, 5, 0.15, 8
+    full = frogwild_bytes_model(N, t, p_T, 1.0, S)
+    half = frogwild_bytes_model(N, t, p_T, 0.5, S)
+    none = frogwild_bytes_model(N, t, p_T, 0.0, S)
+    payload = none.total                       # p_s = 0 ⇒ payload only
+    sync_full = full.total - payload
+    sync_half = half.total - payload
+    assert sync_full > 0
+    assert sync_half == pytest.approx(0.5 * sync_full)
+
+
+def test_pagerank_dense_baseline_formula():
+    n, iters, S = 100_000, 12, 16
+    rep = pagerank_bytes_model(n, iters, S)
+    per_iter = 2.0 * (S - 1) * n * RANK_BYTES
+    assert np.allclose(rep.per_step, per_iter)
+    assert rep.total == pytest.approx(iters * per_iter)
+
+
+def test_frogwild_beats_dense_sync_at_paper_scale():
+    """Fig 1c's qualitative claim: frog traffic (N ≪ n walkers, p_s < 1) is
+    orders of magnitude below dense per-iteration rank synchronization."""
+    n, S = 4_847_571, 16                      # LiveJournal-scale
+    frog = frogwild_bytes_model(N=800_000, t=4, p_T=0.15, p_s=0.7, S=S)
+    dense = pagerank_bytes_model(n, num_iters=10, S=S)
+    assert frog.total < dense.total / 10
+
+
+def test_bytes_report_is_plain_dataclass():
+    rep = BytesReport(total=2.5e6, per_step=np.array([2.5e6]))
+    assert str(rep).startswith("2.500 MB total")

@@ -1,0 +1,307 @@
+"""Walk-index query engine: build/persist correctness, fused stitch kernel
+vs oracle, and the statistical acceptance test — the index-stitched walk
+endpoint distribution must match the direct-walk distribution (chi-square +
+TV, same style as tests/test_blocking_draw.py).
+
+Stitching is only sound if a composed walk (``r`` direct steps + ``q``
+uniformly-drawn precomputed segments) has exactly the τ-step transition
+marginal; the index is regenerated per key so the comparison samples the
+true marginal, not one fixed slab's conditional.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import normalized_mass_captured, power_iteration, theory
+from repro.graph import build_csr, chung_lu_powerlaw, uniform_random
+from repro.kernels import ops
+from repro.query import (QueryRequest, QueryScheduler, WalkIndex,
+                         WalkIndexConfig, build_walk_index, load_walk_index,
+                         plan_query, query_counts, sample_walk_lengths,
+                         save_walk_index)
+from repro.query.engine import _plain_steps, walk_wave
+from repro.query.index import _ShardWalker
+
+
+def _max_tv(a: np.ndarray, b: np.ndarray) -> float:
+    pa = a / np.maximum(a.sum(axis=1, keepdims=True), 1)
+    pb = b / np.maximum(b.sum(axis=1, keepdims=True), 1)
+    return float(0.5 * np.abs(pa - pb).sum(axis=1).max())
+
+
+def _chi2_two_sample(a: np.ndarray, b: np.ndarray):
+    support = (a + b) > 0
+    x2 = float((((a - b) ** 2) / np.maximum(a + b, 1))[support].sum())
+    df = int(support.sum(axis=1).clip(min=1).sum() - a.shape[0])
+    thresh = df + 4.0 * np.sqrt(2 * df)
+    return x2, df, thresh
+
+
+def _transition_counts(draw_fn, n, num_keys, batch=500, seed0=0):
+    """Empirical endpoint histogram per start vertex: int64[n, n]."""
+    pos = jnp.arange(n, dtype=jnp.int32)
+    fn = jax.jit(jax.vmap(lambda k: draw_fn(k, pos)))
+    counts = np.zeros((n, n), dtype=np.int64)
+    src = np.broadcast_to(np.arange(n), (batch, n))
+    done = 0
+    while done < num_keys:
+        keys = jax.vmap(jax.random.PRNGKey)(seed0 + done + jnp.arange(batch))
+        np.add.at(counts, (src, np.asarray(fn(keys))), 1)
+        done += batch
+    return counts
+
+
+# --- index build + persistence ----------------------------------------------
+
+
+def test_index_build_ring_exact():
+    """On a directed ring every walk is deterministic: endpoint = v + L."""
+    n, R, L = 64, 4, 5
+    g = build_csr(n, np.arange(n), (np.arange(n) + 1) % n)
+    idx = build_walk_index(g, WalkIndexConfig(
+        segments_per_vertex=R, segment_len=L, num_shards=4))
+    assert idx.endpoints.shape == (n, R)
+    want = (np.arange(n)[:, None] + L) % n
+    assert (np.asarray(idx.endpoints) == want).all()
+
+
+def test_index_build_range_and_sharding_invariance():
+    g = uniform_random(100, avg_out_deg=5, seed=3)
+    for shards in (1, 4, 7):
+        idx = build_walk_index(g, WalkIndexConfig(
+            segments_per_vertex=6, segment_len=3, num_shards=shards))
+        e = np.asarray(idx.endpoints)
+        assert e.shape == (100, 6)
+        assert e.min() >= 0 and e.max() < g.n
+
+
+def test_index_checkpoint_roundtrip(tmp_path):
+    g = uniform_random(50, avg_out_deg=4, seed=1)
+    idx = build_walk_index(g, WalkIndexConfig(
+        segments_per_vertex=5, segment_len=2, num_shards=2, seed=9))
+    d = os.path.join(str(tmp_path), "walk_index")
+    save_walk_index(d, idx)
+    idx2 = load_walk_index(d)
+    assert isinstance(idx2, WalkIndex)
+    assert (np.asarray(idx2.endpoints) == np.asarray(idx.endpoints)).all()
+    assert idx2.segment_len == idx.segment_len
+    assert idx2.seed == 9
+    with pytest.raises(FileNotFoundError):
+        load_walk_index(os.path.join(str(tmp_path), "nowhere"))
+
+
+# --- fused stitch kernel -----------------------------------------------------
+
+
+@pytest.mark.parametrize("W,n,R", [(1000, 300, 8), (128, 50, 3), (4096, 1024, 16)])
+def test_stitch_kernel_matches_ref(W, n, R):
+    rng = np.random.default_rng(W + n)
+    pos = jnp.asarray(rng.integers(0, n, W), jnp.int32)
+    stop = jnp.asarray(rng.integers(0, 2, W), jnp.int32)
+    bits = jnp.asarray(rng.integers(0, 1 << 30, W), jnp.int32)
+    endpoints = jnp.asarray(rng.integers(0, n, (n, R)), jnp.int32)
+    n1, c1 = ops.stitch_step(pos, stop, bits, endpoints, n, impl="pallas")
+    n2, c2 = ops.stitch_step(pos, stop, bits, endpoints, n, impl="ref")
+    assert (np.asarray(n1) == np.asarray(n2)).all()
+    assert (np.asarray(c1) == np.asarray(c2)).all()
+    assert int(c1.sum()) == int(stop.sum())
+
+
+def test_walk_wave_fused_tally_equals_final_histogram():
+    """The fused per-round tally must equal one histogram of the final
+    positions (a stopped walk's position never changes)."""
+    g = uniform_random(200, avg_out_deg=5, seed=5)
+    idx = build_walk_index(g, WalkIndexConfig(
+        segments_per_vertex=6, segment_len=3, num_shards=2))
+    W = 3000
+    key = jax.random.PRNGKey(3)
+    k_pos, k_tau, k_run = jax.random.split(key, 3)
+    pos0 = jax.random.randint(k_pos, (W,), 0, g.n, jnp.int32)
+    tau = sample_walk_lengths(k_tau, W, 0.15, 17)
+    pos, counts = walk_wave(
+        g.row_ptr, g.col_idx, g.out_deg, idx.endpoints, pos0, tau, k_run,
+        idx.segment_len, 17 // idx.segment_len, impl="ref")
+    assert int(counts.sum()) == W                       # conservation
+    want = np.bincount(np.asarray(pos), minlength=g.n)
+    assert (np.asarray(counts) == want).all()
+
+
+# --- the acceptance test: stitched == direct distribution --------------------
+
+
+def test_stitched_distribution_matches_direct():
+    """Endpoints of index-stitched walks vs direct walks of the same length,
+    per start vertex. τ varies with the vertex (v mod 6 ∈ {0..5}) so every
+    (q, r) decomposition of L = 2 is exercised, including τ = 0 and pure-
+    residual / pure-stitch cases. The index is rebuilt per key so the test
+    samples the true stitched marginal."""
+    g = uniform_random(30, avg_out_deg=4, seed=7)
+    n, R, L = g.n, 4, 2
+    tau = jnp.arange(n, dtype=jnp.int32) % 6
+    t_max = 5
+    walker = _ShardWalker(
+        row_ptr=g.row_ptr, col_idx=g.col_idx, deg=g.out_deg, n=n,
+        shard_size=n,
+        cfg=WalkIndexConfig(segments_per_vertex=R, segment_len=L,
+                            num_shards=1))
+
+    def stitched(k, pos, impl):
+        k_build, k_walk = jax.random.split(k)
+        endpoints = walker(jnp.int32(0), k_build)
+        out, _ = walk_wave(g.row_ptr, g.col_idx, g.out_deg, endpoints,
+                           pos, tau, k_walk, L, t_max // L, impl=impl)
+        return out
+
+    def direct(k, pos):
+        return _plain_steps(g.row_ptr, g.col_idx, g.out_deg, pos, tau, k,
+                            t_max)
+
+    # 5-step walks spread over ~25 support vertices, so per-vertex TV noise
+    # is ≈ √(support / 2N); 6000 keys keeps the max over 30 rows under 0.08.
+    num_keys = 6000
+    counts = {
+        "direct": _transition_counts(direct, n, num_keys),
+        "xla": _transition_counts(
+            lambda k, p: stitched(k, p, "xla"), n, num_keys, seed0=50_000),
+        "fused": _transition_counts(
+            lambda k, p: stitched(k, p, "ref"), n, num_keys, seed0=90_000),
+    }
+    for name in ("xla", "fused"):
+        x2, df, thresh = _chi2_two_sample(counts[name], counts["direct"])
+        assert x2 < thresh, (name, x2, df, thresh)
+        tv = _max_tv(counts[name], counts["direct"])
+        assert tv < 0.08, (name, tv)
+        assert counts[name].sum() == counts["direct"].sum()
+    # τ = 0 vertices never move in either implementation
+    for v in range(n):
+        if v % 6 == 0:
+            assert counts["xla"][v, v] == num_keys
+
+
+def test_walk_length_distribution():
+    """τ ~ min(Geometric(p_T), t): empirical pmf matches the truncated
+    geometric within chi-square tolerance."""
+    p_T, t, W = 0.3, 6, 200_000
+    tau = np.asarray(sample_walk_lengths(jax.random.PRNGKey(0), W, p_T, t))
+    obs = np.bincount(tau, minlength=t + 1).astype(np.float64)
+    want = np.array([p_T * (1 - p_T) ** m for m in range(t)]
+                    + [(1 - p_T) ** t]) * W
+    x2 = float(((obs - want) ** 2 / want).sum())
+    assert x2 < len(want) + 4 * np.sqrt(2 * len(want)), (x2, obs, want)
+
+
+# --- planning + end-to-end serving ------------------------------------------
+
+
+def test_plan_query_inverts_theorem1():
+    for eps in (0.5, 0.25, 0.1):
+        plan = plan_query(k=10, epsilon=eps, delta=0.1)
+        bound = theory.epsilon_bound(
+            0.15, plan.num_steps, 10, 0.1, plan.num_walks, 1.0, 0.0)
+        assert bound <= eps + 1e-9, (eps, plan, bound)
+        assert plan.epsilon_bound == pytest.approx(bound)
+    # tighter ε ⇒ monotonically more work
+    p1 = plan_query(10, 0.4)
+    p2 = plan_query(10, 0.1)
+    assert p2.num_walks > p1.num_walks and p2.num_steps >= p1.num_steps
+    assert plan_query(10, 0.1, max_walks=500).num_walks == 500
+    assert plan_query(10, 0.2, max_steps=7).num_steps == 7
+    assert plan_query(10, 0.2).num_rounds(4) == plan_query(10, 0.2).num_steps // 4
+    # a binding cap is visible: the achieved bound exceeds the request
+    capped = plan_query(10, 0.2, max_steps=5)
+    assert capped.epsilon_bound > capped.epsilon
+
+
+def test_segment_budget_warning():
+    from repro.query.engine import check_segment_budget
+
+    with pytest.warns(UserWarning, match="reread segments"):
+        check_segment_budget(segments_per_vertex=4, num_rounds=8)
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")             # R ≥ rounds must stay silent
+        check_segment_budget(segments_per_vertex=8, num_rounds=8)
+
+
+def test_query_counts_conservation_and_accuracy():
+    g = chung_lu_powerlaw(n=2048, avg_out_deg=10, seed=1)
+    # R = 16 ≥ the ε = 0.3 plan's ⌊t/L⌋ = 11 stitch rounds (reuse-free)
+    idx = build_walk_index(g, WalkIndexConfig(
+        segments_per_vertex=16, segment_len=3, num_shards=4))
+    plan = plan_query(k=10, epsilon=0.3, delta=0.1)
+    counts = query_counts(g, idx, plan, jax.random.PRNGKey(0))
+    assert int(counts.sum()) == plan.num_walks
+    pi = power_iteration(g, num_iters=60)
+    pi_hat = counts.astype(jnp.float32) / plan.num_walks
+    assert float(normalized_mass_captured(pi_hat, pi, 10)) > 0.8
+
+
+def test_scheduler_continuous_batching_end_to_end():
+    """More queries than query slots, walk budgets spanning several waves:
+    every query finishes, top-k answers track exact PageRank, PPR ranks its
+    source first."""
+    g = chung_lu_powerlaw(n=1024, avg_out_deg=10, seed=2)
+    idx = build_walk_index(g, WalkIndexConfig(
+        segments_per_vertex=8, segment_len=3, num_shards=4))
+    pi = power_iteration(g, num_iters=60)
+    source = int(np.asarray(g.out_deg).argmax())
+    sched = QueryScheduler(g, idx, max_walks=2048, max_queries=3,
+                           max_steps=24, seed=4)
+    for i in range(5):
+        if i % 2:
+            sched.submit(QueryRequest(rid=i, kind="ppr", source=source,
+                                      k=10, epsilon=0.3))
+        else:
+            sched.submit(QueryRequest(rid=i, kind="topk", k=10, epsilon=0.3))
+    results = sched.run()
+    assert sorted(r.rid for r in results) == list(range(5))
+    assert not sched.active and not sched.queue
+    for r in results:
+        assert r.waves > 1                # budgets forced continuous batching
+        assert len(r.vertices) == 10
+        assert (r.scores >= 0).all() and r.scores.sum() <= 1.0 + 1e-9
+        if r.kind == "topk":
+            est = np.zeros(g.n, np.float32)
+            est[r.vertices] = r.scores
+            m = float(normalized_mass_captured(jnp.asarray(est), pi, 10))
+            assert m > 0.7, (r.rid, m)
+        else:
+            # P(τ = 0) = p_T puts ≥ 15% of PPR mass on the source itself
+            assert int(r.vertices[0]) == source
+            assert r.scores[0] > 0.10
+
+
+def test_scheduler_num_walks_override_and_single_wave():
+    g = uniform_random(256, avg_out_deg=5, seed=8)
+    idx = build_walk_index(g, WalkIndexConfig(
+        segments_per_vertex=4, segment_len=2, num_shards=2))
+    sched = QueryScheduler(g, idx, max_walks=512, max_queries=2, max_steps=8)
+    sched.submit(QueryRequest(rid=0, kind="topk", k=5, num_walks=300))
+    res = sched.run()
+    assert len(res) == 1 and res[0].num_walks == 300 and res[0].waves == 1
+
+
+def test_scheduler_rejects_invalid_requests():
+    """num_walks ≤ 0 would make run() spin forever (0-walk query is never
+    allocated, never retires); an out-of-range PPR source would be clamped
+    by XLA's gather and answer for the wrong vertex. Both must raise at
+    submit time."""
+    g = uniform_random(64, avg_out_deg=4, seed=8)
+    idx = build_walk_index(g, WalkIndexConfig(
+        segments_per_vertex=4, segment_len=2, num_shards=2))
+    sched = QueryScheduler(g, idx, max_walks=128, max_queries=2, max_steps=8)
+    with pytest.raises(ValueError, match="num_walks"):
+        sched.submit(QueryRequest(rid=0, num_walks=0))
+    with pytest.raises(ValueError, match="source"):
+        sched.submit(QueryRequest(rid=1, kind="ppr", source=g.n))
+    with pytest.raises(ValueError, match="source"):
+        sched.submit(QueryRequest(rid=2, kind="ppr", source=-1))
+    with pytest.raises(ValueError, match="kind"):
+        sched.submit(QueryRequest(rid=3, kind="pagerank"))
+    assert not sched.queue
+    with pytest.raises(ValueError, match="source"):
+        query_counts(g, idx, plan_query(5, 0.5, max_steps=8),
+                     jax.random.PRNGKey(0), source=g.n + 5)

@@ -1,0 +1,91 @@
+"""Direct coverage for ``core/theory.py`` (previously untested) and the
+quickstart round-trip: the Remark-6 suggestions must actually drive the
+Theorem-1 ε below the target they were derived for.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FrogWildConfig, frogwild, normalized_mass_captured,
+                        power_iteration, theory)
+from repro.graph import chung_lu_powerlaw
+
+
+@pytest.mark.parametrize("mu_k", [0.05, 0.1, 0.3, 0.6])
+def test_suggested_steps_drives_mixing_below_quarter_target(mu_k):
+    p_T = 0.15
+    t = theory.suggested_steps(mu_k, p_T)
+    assert theory.mixing_term(p_T, t) <= mu_k / 4.0 + 1e-12
+    # and t is not wastefully large: one step fewer would overshoot
+    if t > 1:
+        assert theory.mixing_term(p_T, t - 1) > mu_k / 4.0
+
+
+@pytest.mark.parametrize("mu_k,k,delta", [
+    (0.1, 20, 0.1), (0.3, 5, 0.05), (0.5, 100, 0.2),
+])
+def test_suggested_frogs_drives_sampling_below_quarter_target(mu_k, k, delta):
+    N = theory.suggested_frogs(k, mu_k, delta)
+    # p_s = 1: the sampling term is exactly the 1/N part
+    assert theory.sampling_term(k, delta, N, 1.0, 0.0) <= mu_k / 4.0 + 1e-12
+    # and N is tight up to rounding: half the frogs would overshoot
+    assert theory.sampling_term(k, delta, N // 2, 1.0, 0.0) > mu_k / 4.0
+
+
+def test_remark6_roundtrip_epsilon_bound_below_target_mass():
+    """The (t, N) pair suggested for a target μ_k gives ε ≤ μ_k/2 < μ_k —
+    i.e. Theorem 1 then guarantees the estimator captures positive mass."""
+    p_T, delta, k = 0.15, 0.1, 20
+    for mu_k in (0.08, 0.2, 0.4):
+        t = theory.suggested_steps(mu_k, p_T)
+        N = theory.suggested_frogs(k, mu_k, delta)
+        eps = theory.epsilon_bound(p_T, t, k, delta, N, p_s=1.0, p_cap=0.0)
+        assert eps <= mu_k / 2.0 + 1e-12, (mu_k, t, N, eps)
+
+
+def test_epsilon_bound_monotonicity():
+    base = dict(p_T=0.15, t=8, k=10, delta=0.1, N=10_000, p_s=0.8,
+                p_cap=1e-4)
+
+    def eb(**kw):
+        a = {**base, **kw}
+        return theory.epsilon_bound(a["p_T"], a["t"], a["k"], a["delta"],
+                                    a["N"], a["p_s"], a["p_cap"])
+
+    assert eb(t=16) < eb()          # more steps → smaller mixing term
+    assert eb(N=100_000) < eb()     # more frogs → smaller sampling term
+    assert eb(p_s=1.0) < eb()       # more sync → smaller collision term
+    assert eb(k=40) > eb()          # larger k → looser union bound
+    assert eb(delta=0.01) > eb()    # higher confidence → looser ε
+
+
+def test_p_cap_and_pi_inf_bounds():
+    # Theorem 2 shape: linear in t, anchored at 1/n
+    n, p_T, pi_inf = 10_000, 0.15, 1e-3
+    b1 = theory.p_cap_bound(n, 1, pi_inf, p_T)
+    b4 = theory.p_cap_bound(n, 4, pi_inf, p_T)
+    assert b1 == pytest.approx(1.0 / n + pi_inf / p_T)
+    assert b4 - b1 == pytest.approx(3 * pi_inf / p_T)
+    # Proposition 7: ‖π‖∞ bound decreasing in n, equals n^{-γ}
+    assert theory.pi_inf_powerlaw_bound(10_000) == pytest.approx(0.01)
+    assert (theory.pi_inf_powerlaw_bound(10**6)
+            < theory.pi_inf_powerlaw_bound(10**4))
+
+
+def test_quickstart_roundtrip_on_graph():
+    """The examples/quickstart.py flow, asserted: run FrogWild with the
+    suggested (t, N) for the graph's measured μ_k and check the captured
+    mass beats the 1 − ε/μ_k floor Theorem 1 promises (here ε ≤ μ_k/2)."""
+    k, delta = 10, 0.1
+    g = chung_lu_powerlaw(n=4096, avg_out_deg=12, seed=0)
+    pi = power_iteration(g, num_iters=60)
+    _, idx = jax.lax.top_k(pi, k)
+    mu_k = float(pi[idx].sum())
+    t = theory.suggested_steps(mu_k)
+    N = theory.suggested_frogs(k, mu_k, delta)
+    eps = theory.epsilon_bound(0.15, t, k, delta, N, 1.0, 0.0)
+    assert eps <= mu_k / 2.0
+    res = frogwild(g, FrogWildConfig(num_frogs=N, num_steps=t), seed=0)
+    m = float(normalized_mass_captured(res.pi_hat, pi, k))
+    assert m >= 1.0 - eps / mu_k, (mu_k, t, N, eps, m)
