@@ -2,10 +2,23 @@
 Pallas kernels are TPU-target; interpret mode is correctness-only) plus the
 analytic FLOPs each kernel's tile schedule would execute.
 
+The ``frog_step_stream`` rows compare the resident and HBM-streaming fused
+kernels *in interpret mode at equal sizes* — a schedule-level comparison
+(grid steps × per-step work), not a TPU wall-time claim — and check the
+streamed kernel's byte-for-byte equivalence at a size whose graph block
+exceeds the resident kernel's VMEM budget.
+
 Emits ``BENCH_kernels.json`` (via benchmarks.common.emit_json) so the perf
 trajectory stays machine-readable across PRs.
+
+``--smoke`` runs every dispatch path at tiny sizes and asserts equivalence
+against the oracles — no timing, no JSON rewrite; wired into
+``scripts/ci_tier1.sh --bench-smoke`` so a broken kernel dispatch fails
+tier-1 instead of surfacing only in bench runs.
 """
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +27,48 @@ import numpy as np
 from benchmarks.common import emit, emit_json, timeit
 from repro.graph import chung_lu_powerlaw, to_ell
 from repro.kernels import ops
+
+
+def _step_inputs(n, N, seed):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.integers(0, n, N), jnp.int32),
+            jnp.asarray(rng.random(N) < 0.15, jnp.int32),
+            jnp.asarray(rng.integers(0, 1 << 30, N), jnp.int32))
+
+
+def _assert_step_equal(got, want, tag):
+    for a, b in zip(got, want):
+        assert (np.asarray(a) == np.asarray(b)).all(), tag
+
+
+def smoke():
+    """Tiny-size dispatch sweep: every impl flag must agree with its oracle.
+
+    Exercised by ``scripts/ci_tier1.sh --bench-smoke``; any mismatch or
+    dispatch error exits nonzero and fails tier-1.
+    """
+    g = chung_lu_powerlaw(n=384, avg_out_deg=6, seed=0)
+    pos, die, bits = _step_inputs(g.n, 600, 1)
+    want = ops.frog_step(pos, die, bits, g.row_ptr, g.col_idx, g.out_deg,
+                         g.n, impl="ref")
+    for impl, kw in [("pallas", {}), ("stream", {}),
+                     ("auto", dict(vmem_budget=1024)),
+                     ("auto", dict(vmem_budget=1 << 30))]:
+        got = ops.frog_step(pos, die, bits, g.row_ptr, g.col_idx, g.out_deg,
+                            g.n, impl=impl, vertex_block=128, frog_block=256,
+                            **kw)
+        _assert_step_equal(got, want, (impl, kw))
+        print(f"smoke frog_step impl={impl} {kw or ''} OK")
+    dest = jnp.asarray(np.random.default_rng(2).integers(0, g.n, 900),
+                       jnp.int32)
+    cwant = np.asarray(ops.frog_count(dest, g.n, impl="ref"))
+    for impl, kw in [("pallas", {}), ("sort", {}), ("auto", {}),
+                     ("sort", dict(assume_sorted=True))]:
+        d = jnp.sort(dest) if kw.get("assume_sorted") else dest
+        got = np.asarray(ops.frog_count(d, g.n, impl=impl, **kw))
+        assert (got == cwant).all(), (impl, kw)
+        print(f"smoke frog_count impl={impl} {kw or ''} OK")
+    print("smoke OK: kernel dispatch paths all agree with oracles")
 
 
 def main():
@@ -36,6 +91,17 @@ def main():
     rows.append(("kernel/frog_count_sort_100k", us_sort,
                  f"bins=4096 work=(N+n)logN vs_onehot=N*n/512 "
                  f"speedup_vs_ref={us_ref / max(us_sort, 1):.2f}x"))
+    # presorted fast path: the sort is the dominant term above — callers
+    # that already hold sorted destinations (the streamed superstep) pay
+    # only the searchsorted pass.
+    dest_sorted = jnp.sort(dest)
+    fcp = jax.jit(lambda d: ops.frog_count(d, 4096, impl="sort",
+                                           assume_sorted=True))
+    us_pre = timeit(lambda: fcp(dest_sorted))
+    rows.append(("kernel/frog_count_sort_presorted_100k", us_pre,
+                 f"bins=4096 work=n*logN "
+                 f"speedup_vs_sort={us_sort / max(us_pre, 1):.2f}x "
+                 f"speedup_vs_ref={us_ref / max(us_pre, 1):.2f}x"))
 
     # fused walker step: jnp oracle wall time + the fused kernel's work model
     # (the Pallas kernel itself runs in interpret mode here — correctness
@@ -50,6 +116,56 @@ def main():
     us_step = timeit(lambda: fs(pos, die, bits))
     rows.append(("kernel/frog_step_ref_100k", us_step,
                  f"n={g.n} fused=gather+draw+gather+tally"))
+
+    # resident vs HBM-streaming fused kernel, interpret mode at equal size:
+    # a schedule-level comparison (grid steps × per-step work — the thing
+    # interpret mode faithfully reproduces), not TPU wall time.
+    ns, Ns, bv, fb = 4096, 8192, 512, 1024
+    gs = chung_lu_powerlaw(n=ns, avg_out_deg=12, seed=3)
+    sp, sd, sb = _step_inputs(ns, Ns, 4)
+    res_fn = jax.jit(lambda p, d, b: ops.frog_step(
+        p, d, b, gs.row_ptr, gs.col_idx, gs.out_deg, ns, impl="pallas",
+        vertex_block=bv, frog_block=fb))
+    stream_fn = jax.jit(lambda p, d, b: ops.frog_step(
+        p, d, b, gs.row_ptr, gs.col_idx, gs.out_deg, ns, impl="stream",
+        vertex_block=bv, frog_block=fb))
+    want = ops.frog_step(sp, sd, sb, gs.row_ptr, gs.col_idx, gs.out_deg,
+                         ns, impl="ref")
+    _assert_step_equal(res_fn(sp, sd, sb), want, "resident")
+    _assert_step_equal(stream_fn(sp, sd, sb), want, "stream")
+    us_res = timeit(lambda: res_fn(sp, sd, sb))
+    us_stream = timeit(lambda: stream_fn(sp, sd, sb))
+    grid_res = (ns // bv) * (Ns // fb)
+    grid_stream = (Ns + (ns // bv) * (fb - 1) + fb - 1) // fb
+    rows.append(("kernel/frog_step_resident_interp_n4k", us_res,
+                 f"N={Ns} grid_steps={grid_res} "
+                 f"vmem_graph_bytes={ops.resident_graph_bytes(ns, gs.nnz)}"))
+    rows.append((
+        "kernel/frog_step_stream_interp_n4k", us_stream,
+        f"N={Ns} grid_steps<={grid_stream} equiv=pass "
+        f"ratio_vs_resident={us_stream / max(us_res, 1):.2f}x "
+        f"vmem_working_set=4*(3*{bv}+E_blk+5*{fb})"))
+
+    # streamed kernel past the resident VMEM budget: the bench graph's CSR
+    # block (4.3 MB) exceeds a 4 MB budget, so impl="auto" must route to
+    # the streamed kernel — and stay byte-for-byte the oracle.
+    from benchmarks.common import bench_graph
+    gl = bench_graph()                   # n=65536, nnz≈942k
+    budget = 4 * 1024 * 1024
+    assert ops.resident_graph_bytes(gl.n, gl.nnz) > budget
+    lp, ld, lb = _step_inputs(gl.n, 16_384, 5)
+    big_fn = jax.jit(lambda p, d, b: ops.frog_step(
+        p, d, b, gl.row_ptr, gl.col_idx, gl.out_deg, gl.n, impl="auto",
+        vmem_budget=budget, vertex_block=4096, frog_block=2048))
+    want = ops.frog_step(lp, ld, lb, gl.row_ptr, gl.col_idx, gl.out_deg,
+                         gl.n, impl="ref")
+    _assert_step_equal(big_fn(lp, ld, lb), want, "stream-over-budget")
+    us_big = timeit(lambda: big_fn(lp, ld, lb))
+    rows.append((
+        "kernel/frog_step_stream_interp_n64k_over_budget", us_big,
+        f"N=16384 auto->stream equiv=pass "
+        f"graph_bytes={ops.resident_graph_bytes(gl.n, gl.nnz)}"
+        f">budget={budget} hbm_streams_each_slab_once=true"))
 
     B, Hq, Hkv, S, D = 1, 8, 2, 2048, 64
     rng = np.random.default_rng(1)
@@ -72,4 +188,11 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-size dispatch equivalence sweep; no timing, "
+                         "no BENCH_kernels.json rewrite")
+    if ap.parse_args().smoke:
+        smoke()
+    else:
+        main()

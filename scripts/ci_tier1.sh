@@ -1,7 +1,26 @@
 #!/usr/bin/env bash
 # Canonical tier-1 verification — the one command builders and CI invoke.
 # Extra pytest args pass through, e.g. scripts/ci_tier1.sh -k query
+# --bench-smoke additionally runs the kernel-dispatch equivalence sweep
+# (benchmarks/bench_kernels.py --smoke: tiny sizes, no BENCH json rewrite)
+# so a broken impl= dispatch fails tier-1 instead of only bench runs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+
+BENCH_SMOKE=0
+args=()
+for a in "$@"; do
+  if [[ "$a" == "--bench-smoke" ]]; then
+    BENCH_SMOKE=1
+  else
+    args+=("$a")
+  fi
+done
+
+python -m pytest -x -q ${args[@]+"${args[@]}"}
+
+if [[ "$BENCH_SMOKE" == 1 ]]; then
+  PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/bench_kernels.py --smoke
+fi

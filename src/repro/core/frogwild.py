@@ -34,7 +34,10 @@ Two interchangeable blocking-walk draws (``cfg.draw``):
                   undercuts the per-edge pass (the paper's N ≪ E regime).
 
 The plain (p_s = 1) step can additionally run through the fused Pallas
-``frog_step`` kernel (``cfg.step_impl``: ``xla`` | ``pallas`` | ``ref``).
+``frog_step`` kernels (``cfg.step_impl``: ``xla`` | ``pallas`` | ``stream``
+| ``auto`` | ``ref`` — ``stream`` is the HBM-streaming sorted-frog kernel
+whose VMEM footprint is bounded by block shapes, not graph size;
+``auto`` picks between the resident and streamed kernels by VMEM budget).
 
 Everything is pure JAX (lax.scan over steps) and runs on CPU.
 """
@@ -60,7 +63,8 @@ class FrogWildConfig:
     erasure: str = "none"             # none | independent | channel
     num_shards: int = 16              # channel model: destination shards
     draw: str = "auto"                # auto | rejection | cumsum
-    step_impl: str = "xla"            # xla | pallas | ref (plain-step backend)
+    step_impl: str = "xla"            # xla | pallas | stream | auto | ref
+                                      # (plain-step backend; see kernels/README)
 
 
 @dataclasses.dataclass

@@ -38,6 +38,7 @@ from repro.core.blocking import (channel_enum_draw, coin_uniform,
                                  rejection_is_profitable)
 from repro.graph.csr import CSRGraph
 from repro.graph.partition import partition_graph
+from repro.kernels.frog_step_stream import BlockedCSR
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +50,9 @@ class EngineConfig:
     capacity_factor: float = 4.0     # per-channel buffer slack (≥ 1)
     axis_name: str = "vertex"
     draw: str = "auto"               # auto | rejection | cumsum
+    step_impl: str = "xla"           # xla | pallas | stream | auto | ref —
+    # p_s = 1 shard-local move+tally backend; "stream"/"auto" need the
+    # blocked slabs (build_distributed_graph(vertex_block=...)).
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +73,15 @@ class DistributedGraph:
     edge_dst_shard: jnp.ndarray | None = None  # int32[S, nnz_max]
     chan_cnt: jnp.ndarray | None = None     # int32[S, shard_size, num_shards]
     col_sorted: jnp.ndarray | None = None   # int32[S, nnz_max] (channel-sorted)
+    # Streamed-step slab layout (kernels/frog_step_stream.BlockedCSR per
+    # shard, uniform static shapes across shards). Present only when
+    # build_distributed_graph was given a vertex_block; the fused
+    # step_impl="stream" path requires it.
+    vertex_block: int = 0                   # BV (0 = no blocked layout)
+    nnz_blk_max: int = 0                    # E_blk
+    blk_row_off: jnp.ndarray | None = None  # int32[S, num_vb, BV]
+    blk_deg: jnp.ndarray | None = None      # int32[S, num_vb, BV]
+    blk_col: jnp.ndarray | None = None      # int32[S, num_vb, E_blk]
     # chan_cnt[s, v, d] — #out-edges of vertex v (on shard s) into shard d:
     # the "mirror" structure (has_edge_to ≡ chan_cnt > 0). A (v, d) sync
     # message is owed only when v is active AND the channel opened — the
@@ -80,9 +93,18 @@ class DistributedGraph:
     def n_padded(self) -> int:
         return self.num_shards * self.shard_size
 
+    @property
+    def has_blocked(self) -> bool:
+        return self.vertex_block > 0
+
+    @property
+    def num_vertex_blocks(self) -> int:
+        return (-(-self.shard_size // self.vertex_block)
+                if self.has_blocked else 0)
+
     def array_specs(self):
         S, sz, nnz = self.num_shards, self.shard_size, self.nnz_max
-        return (
+        specs = [
             jax.ShapeDtypeStruct((S, sz + 1), jnp.int32),
             jax.ShapeDtypeStruct((S, nnz), jnp.int32),
             jax.ShapeDtypeStruct((S, sz), jnp.int32),
@@ -90,11 +112,22 @@ class DistributedGraph:
             jax.ShapeDtypeStruct((S, nnz), jnp.int32),
             jax.ShapeDtypeStruct((S, sz, S), jnp.int32),
             jax.ShapeDtypeStruct((S, nnz), jnp.int32),
-        )
+        ]
+        if self.has_blocked:
+            nvb, bv, eb = self.num_vertex_blocks, self.vertex_block, self.nnz_blk_max
+            specs += [
+                jax.ShapeDtypeStruct((S, nvb, bv), jnp.int32),
+                jax.ShapeDtypeStruct((S, nvb, bv), jnp.int32),
+                jax.ShapeDtypeStruct((S, nvb, eb), jnp.int32),
+            ]
+        return tuple(specs)
 
     def arrays(self):
-        return (self.row_ptr, self.col_idx, self.deg, self.edge_src,
+        base = (self.row_ptr, self.col_idx, self.deg, self.edge_src,
                 self.edge_dst_shard, self.chan_cnt, self.col_sorted)
+        if self.has_blocked:
+            return base + (self.blk_row_off, self.blk_deg, self.blk_col)
+        return base
 
 
 @dataclasses.dataclass
@@ -108,9 +141,25 @@ class EngineResult:
     config: EngineConfig
 
 
-def build_distributed_graph(g: CSRGraph, num_shards: int) -> DistributedGraph:
-    """Splits CSR rows into per-shard blocks with uniform padded shapes."""
+def build_distributed_graph(
+    g: CSRGraph, num_shards: int, vertex_block: int | None = None
+) -> DistributedGraph:
+    """Splits CSR rows into per-shard blocks with uniform padded shapes.
+
+    With ``vertex_block`` set, each shard's row block is additionally laid
+    out as uniform per-vertex-block slabs (the streamed ``frog_step``
+    kernel's DMA unit) — required for ``EngineConfig.step_impl`` of
+    ``"stream"``/``"auto"``.
+    """
     gp, part = partition_graph(g, num_shards)
+    if int(np.asarray(g.out_deg).min()) < 1:
+        # Both step paths index col_idx[row_ptr[v] + slot] unguarded — a
+        # deg-0 vertex would read a neighbour's edge (xla draw) or leak a
+        # local id as a global destination (fused kernels). build_csr's
+        # dangling repair is a precondition, so enforce it here.
+        raise ValueError(
+            "engine graphs need d_out ≥ 1 everywhere; repair dangling "
+            "vertices first (graph/csr.py:build_csr dangling= policy)")
     gn = gp.to_numpy()
     S, sz = num_shards, part.shard_size
     nnz_per = [int(gn.row_ptr[(s + 1) * sz] - gn.row_ptr[s * sz]) for s in range(S)]
@@ -139,6 +188,29 @@ def build_distributed_graph(g: CSRGraph, num_shards: int) -> DistributedGraph:
         edge_dst_shard[s, : hi - lo] = eds_global[lo:hi]
         col_sorted[s, : hi - lo] = cs_global[lo:hi]
     chan_cnt = cnt_global.reshape(S, sz, S).astype(np.int32)
+
+    blocked = {}
+    if vertex_block is not None:
+        from repro.kernels.frog_step_stream import (block_csr, max_block_nnz,
+                                                    round_e_blk)
+
+        # One slab layout per shard via the kernel's own builder, with a
+        # uniform slab width forced across shards (the shard body's
+        # BlockedCSR must have one static E_blk).
+        e_blk = round_e_blk(max(max_block_nnz(row_ptr[s], sz, vertex_block)
+                                for s in range(S)))
+        per_shard = [
+            block_csr(row_ptr[s], col_idx[s], deg[s], sz,
+                      vertex_block=vertex_block, e_blk=e_blk)
+            for s in range(S)
+        ]
+        blocked = dict(
+            vertex_block=per_shard[0].vertex_block, nnz_blk_max=e_blk,
+            blk_row_off=jnp.stack([b.row_off for b in per_shard]),
+            blk_deg=jnp.stack([b.deg for b in per_shard]),
+            blk_col=jnp.stack([b.col for b in per_shard]),
+        )
+
     return DistributedGraph(
         num_shards=S, shard_size=sz, n=g.n, nnz_max=nnz_max,
         row_ptr=jnp.asarray(row_ptr),
@@ -148,6 +220,7 @@ def build_distributed_graph(g: CSRGraph, num_shards: int) -> DistributedGraph:
         edge_dst_shard=jnp.asarray(edge_dst_shard),
         chan_cnt=jnp.asarray(chan_cnt),
         col_sorted=jnp.asarray(col_sorted),
+        **blocked,
     )
 
 
@@ -285,12 +358,31 @@ def make_shard_body(dg: DistributedGraph, cfg: EngineConfig):
                      if rejection_is_profitable(B, dg.nnz_max, cfg.p_s,
                                                 num_channels=S)
                      else "cumsum")
+    # Fused plain-step path: at p_s = 1 the shard-local tally + move route
+    # through ops.frog_step (resident or HBM-streaming kernel).
+    use_fused = cfg.p_s >= 1.0 and cfg.step_impl != "xla"
+    if cfg.step_impl != "xla" and cfg.p_s < 1.0:
+        raise ValueError(
+            f"step_impl={cfg.step_impl!r} fuses the plain (p_s = 1) step; "
+            f"the blocking walk at p_s={cfg.p_s} uses the draw paths")
+    if cfg.step_impl in ("stream", "auto") and not dg.has_blocked:
+        # Inside shard_map the graph arrays are traced, so without the
+        # prebuilt slabs "auto" could only ever fall back to the resident
+        # kernel — silently recreating the VMEM cap it exists to lift.
+        raise ValueError(
+            f"step_impl={cfg.step_impl!r} needs the blocked slab layout — "
+            "build the graph with build_distributed_graph(g, S, "
+            "vertex_block=...)")
 
     def shard_body(row_ptr, col_idx, deg, edge_src, edge_dst_shard,
-                   chan_cnt, col_sorted, key_data):
+                   chan_cnt, col_sorted, *rest):
+        *blk, key_data = rest
         row_ptr, col_idx = row_ptr[0], col_idx[0]
         deg, edge_src, edge_dst_shard = deg[0], edge_src[0], edge_dst_shard[0]
         chan_cnt, col_sorted = chan_cnt[0], col_sorted[0]
+        blocked = (BlockedCSR(vertex_block=dg.vertex_block,
+                              row_off=blk[0][0], deg=blk[1][0], col=blk[2][0])
+                   if blk else None)
         has_edge_to = chan_cnt > 0
         chan_off = jnp.cumsum(chan_cnt, axis=-1) - chan_cnt
         me = jax.lax.axis_index(ax)
@@ -315,7 +407,25 @@ def make_shard_body(dg: DistributedGraph, cfg: EngineConfig):
             k_die, k_coin, k_draw = jax.random.split(step_key, 3)
             # apply(): deaths tallied where they happen.
             die = jax.random.bernoulli(k_die, cfg.p_T, (B,)) & valid
-            counts = counts.at[jnp.where(die, v_local, sz)].add(1)
+            if use_fused:
+                from repro.kernels import ops
+
+                # One fused kernel pass tallies the deaths *and* draws the
+                # successors (col_idx carries global dest ids, so nxt is
+                # already a global destination; build_distributed_graph
+                # rejects deg-0 vertices — build_csr repairs real ones and
+                # partition padding self-loops the rest — so the kernels'
+                # local dangling guard can never fire here).
+                bits = jax.random.randint(k_draw, (B,), 0, 1 << 30,
+                                          jnp.int32)
+                nxt, death_counts = ops.frog_step(
+                    v_local, die.astype(jnp.int32), bits,
+                    row_ptr, col_idx, deg, sz,
+                    impl=cfg.step_impl, blocked=blocked,
+                )
+                counts = counts.at[:-1].add(death_counts)
+            else:
+                counts = counts.at[jnp.where(die, v_local, sz)].add(1)
             alive = valid & ~die
             # <sync>: one coin per (vertex, mirror shard) — the p_s patch.
             # The coin is a pure hash of (k_coin, v·S + d): this grid (used
@@ -337,11 +447,14 @@ def make_shard_body(dg: DistributedGraph, cfg: EngineConfig):
             ].add(1)
             active = occ[:sz] > 0
             sync_msgs = (active[:, None] & coins & has_edge_to).sum()
-            dest = _blocking_draw(
-                v_local, row_ptr, col_idx, deg, edge_src, edge_dst_shard,
-                chan_cnt, chan_off, col_sorted, coins, cfg.p_s, k_draw,
-                draw=draw_mode, alive=alive,
-            )
+            if use_fused:
+                dest = nxt
+            else:
+                dest = _blocking_draw(
+                    v_local, row_ptr, col_idx, deg, edge_src, edge_dst_shard,
+                    chan_cnt, chan_off, col_sorted, coins, cfg.p_s, k_draw,
+                    draw=draw_mode, alive=alive,
+                )
             dest = jnp.where(alive, dest, -1)
             buf, n_sent, ovf = _pack_by_shard(dest, S, sz, cap)
             open_ch = (buf >= 0).any(axis=1).sum()
@@ -369,10 +482,16 @@ def make_shard_body(dg: DistributedGraph, cfg: EngineConfig):
 def _sharded_fn(dg: DistributedGraph, cfg: EngineConfig, mesh: Mesh):
     ax = cfg.axis_name
     body = make_shard_body(dg, cfg)
+    n_arrays = len(dg.array_specs())
+    # jax has no replication rule for pallas_call: the fused step backends
+    # need the varying-manual-axes check off (the body is per-shard; the
+    # only cross-device op is the all_to_all exchange).
+    check = {} if cfg.step_impl == "xla" else {"check_vma": False}
     return jax.shard_map(
         body, mesh=mesh,
-        in_specs=(P(ax),) * 7 + (P(),),
+        in_specs=(P(ax),) * n_arrays + (P(),),
         out_specs=(P(ax), P(ax)),
+        **check,
     )
 
 
@@ -409,4 +528,6 @@ def frogwild_dryrun_lowered(dg: DistributedGraph, cfg: EngineConfig, mesh: Mesh)
     rep = NamedSharding(mesh, P())
     fn = _sharded_fn(dg, cfg, mesh)
     specs = dg.array_specs() + (jax.ShapeDtypeStruct((2,), jnp.uint32),)
-    return jax.jit(fn, in_shardings=(sh,) * 7 + (rep,)).lower(*specs)
+    return jax.jit(
+        fn, in_shardings=(sh,) * len(dg.array_specs()) + (rep,)
+    ).lower(*specs)

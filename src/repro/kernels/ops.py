@@ -12,14 +12,28 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.graph.partition import EllGraph
 from repro.kernels import ref as kref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.frog_scatter import frog_count as _frog_count
 from repro.kernels.frog_step import frog_step as _frog_step
+from repro.kernels.frog_step_stream import (BlockedCSR, block_csr,
+                                            frog_step_stream_sorted)
 from repro.kernels.spmv_ell import spmv_ell_slab
 from repro.kernels.stitch import stitch_step as _stitch_step
+
+# VMEM the resident frog_step kernel may spend on its graph block before
+# impl="auto" switches to the HBM-streaming kernel (half a 16 MB core,
+# leaving room for the frog tiles and double buffers).
+STREAM_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def resident_graph_bytes(n: int, nnz: int) -> int:
+    """VMEM bytes the resident ``frog_step`` kernel pins for the graph
+    (row_ptr + col_idx + deg, int32)."""
+    return 4 * ((n + 1) + nnz + n)
 
 
 def _pad_to(x: jnp.ndarray, m: int, axis: int = 0, value=0):
@@ -56,19 +70,32 @@ def spmv(ell: EllGraph, x: jnp.ndarray, impl: str = "pallas",
 
 def frog_count(dest: jnp.ndarray, n: int, impl: str = "pallas",
                interpret: bool = True, vertex_block: int = 512,
-               frog_block: int = 1024) -> jnp.ndarray:
+               frog_block: int = 1024,
+               assume_sorted: bool = False) -> jnp.ndarray:
     """Histogram of frog destinations into n vertex bins (int32).
 
     * ``pallas`` — compare-and-reduce tile kernel (O(N · n/vertex_block)
       one-hot work; wins when n is small and the VPU eats the tiles).
     * ``sort``   — sort + searchsorted segment counts (O((N+n) log N); the
-      scalable path when n is large).
+      scalable path when n is large). With ``assume_sorted=True`` the sort
+      is skipped — callers that already hold sorted destinations (e.g. the
+      streamed superstep's block-sorted frogs) pay only the O(n log N)
+      searchsorted pass.
     * ``ref``    — XLA scatter-add oracle.
+    * ``auto``   — picks by the work model: one-hot tile work
+      ``N · ⌈n/vertex_block⌉`` vs sort work ``(N+n) · ⌈log₂N⌉`` (always
+      ``sort`` when the input is already sorted).
     """
+    if impl == "auto":
+        N = dest.shape[0]
+        onehot_work = N * -(-n // vertex_block)
+        sort_work = (N + n) * max(1, int(np.ceil(np.log2(max(N, 2)))))
+        impl = ("sort" if assume_sorted or onehot_work > sort_work
+                else "pallas")
     if impl == "ref":
         return kref.frog_count_ref(dest, n)
     if impl == "sort":
-        return kref.frog_count_sort(dest, n)
+        return kref.frog_count_sort(dest, n, assume_sorted=assume_sorted)
     if impl != "pallas":
         raise ValueError(f"unknown impl {impl!r}")
     vertex_block = min(vertex_block, n)
@@ -83,6 +110,59 @@ def frog_count(dest: jnp.ndarray, n: int, impl: str = "pallas",
     return counts[:n]
 
 
+def _frog_step_stream(
+    pos, die, bits, blocked: BlockedCSR, n: int, frog_block: int,
+    interpret: bool,
+):
+    """Stream-path prologue/epilogue: sort frogs by vertex block, pad each
+    block's segment to a ``frog_block`` multiple with inert frogs, run the
+    scalar-prefetch streamed kernel, unsort."""
+    N = pos.shape[0]
+    bv, num_vb = blocked.vertex_block, blocked.num_blocks
+    fb = min(frog_block, max(8, N))
+    order = jnp.argsort(pos)            # by vertex ⇒ by vertex block
+    pos_s, die_s, bits_s = pos[order], die[order], bits[order]
+    # Per-block frog counts from the sorted positions (the sort is reused by
+    # the in-kernel segment-sum tally — no second histogram pass).
+    starts = jnp.searchsorted(
+        pos_s, jnp.arange(num_vb + 1, dtype=pos.dtype) * bv, side="left"
+    ).astype(jnp.int32)
+    cnt = starts[1:] - starts[:-1]
+    pad_cnt = ((cnt + fb - 1) // fb) * fb
+    pad_off = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(pad_cnt)])
+    # Static worst case: at most min(num_vb, N) blocks can be nonempty
+    # (each needs ≥ 1 frog) and only nonempty blocks get padded, by at most
+    # fb − 1 slots each — keeps the padded arrays ∝ N, not num_vb, in the
+    # sparse-frog regime.
+    p_pad = int(np.ceil((N + min(num_vb, N) * (fb - 1)) / fb) * fb)
+    blk_s = (pos_s // bv).astype(jnp.int32)
+    dst = pad_off[blk_s] + jnp.arange(N, dtype=jnp.int32) - starts[blk_s]
+    # Slot → owning vertex block (trailing unused slots ride with the last
+    # block). Inert slots sit on their block's last vertex — keeps every
+    # tile sorted and in-block — and never die, so they tally nothing and
+    # their next position is discarded by the unsort below.
+    slot_vid = jnp.clip(
+        jnp.searchsorted(pad_off, jnp.arange(p_pad, dtype=jnp.int32),
+                         side="right").astype(jnp.int32) - 1,
+        0, num_vb - 1)
+    pos_p = ((slot_vid + 1) * bv - 1).at[dst].set(pos_s)
+    die_p = jnp.zeros((p_pad,), jnp.int32).at[dst].set(die_s)
+    bits_p = jnp.zeros((p_pad,), jnp.int32).at[dst].set(bits_s)
+    blk_vid = slot_vid[::fb]
+    nxt_p, counts = frog_step_stream_sorted(
+        pos_p, die_p, bits_p, blk_vid,
+        blocked.row_off, blocked.deg, blocked.col,
+        num_fb=p_pad // fb, vertex_block=bv, frog_block=fb,
+        interpret=interpret,
+    )
+    # Count blocks the grid never visited hold uninitialized memory.
+    counts = jnp.where((cnt > 0)[:, None],
+                       counts.reshape(num_vb, bv), 0).reshape(-1)
+    nxt = jnp.zeros((N,), jnp.int32).at[order].set(nxt_p[dst])
+    return nxt, counts[:n]
+
+
 def frog_step(
     pos: jnp.ndarray,
     die: jnp.ndarray,
@@ -95,17 +175,44 @@ def frog_step(
     interpret: bool = True,
     vertex_block: int = 512,
     frog_block: int = 1024,
+    blocked: Optional[BlockedCSR] = None,
+    vmem_budget: int = STREAM_VMEM_BUDGET,
 ):
     """Fused plain walker superstep → ``(next_pos[N], death_counts[n])``.
 
-    ``pallas`` runs the VMEM-resident fused kernel (interpret mode on CPU);
-    ``ref`` is the pure-jnp oracle. Handles all padding here so callers pass
-    natural shapes.
+    * ``pallas`` — the VMEM-resident fused kernel (interpret mode on CPU);
+      assumes the whole graph block fits VMEM.
+    * ``stream`` — the HBM-streaming kernel: frogs sorted by vertex block,
+      per-block CSR slabs DMA'd through VMEM once per superstep, tally by
+      sort-compacted segment sum. Needs a :class:`BlockedCSR` — pass
+      ``blocked=`` when the graph arrays are traced; otherwise it is built
+      (and folded into the trace) from the concrete arrays.
+    * ``ref``    — pure-jnp oracle.
+    * ``auto``   — ``pallas`` while ``resident_graph_bytes(n, nnz)`` fits
+      ``vmem_budget``, else ``stream`` (falling back to ``pallas`` when no
+      ``blocked`` layout is available from traced arrays).
+
+    Handles all padding here so callers pass natural shapes.
     """
     die = die.astype(jnp.int32)
     bits = jnp.abs(bits).astype(jnp.int32)
+    if impl == "auto":
+        fits = resident_graph_bytes(n, col_idx.shape[0]) <= vmem_budget
+        traced = blocked is None and isinstance(row_ptr, jax.core.Tracer)
+        impl = "pallas" if (fits or traced) else "stream"
     if impl == "ref":
         return kref.frog_step_ref(pos, die, bits, row_ptr, col_idx, deg, n)
+    if impl == "stream":
+        if blocked is None:
+            if isinstance(row_ptr, jax.core.Tracer):
+                raise ValueError(
+                    "impl='stream' needs a prebuilt BlockedCSR (blocked=) "
+                    "when the graph arrays are traced — the slab width is a "
+                    "static shape (see kernels/frog_step_stream.block_csr)")
+            blocked = block_csr(row_ptr, col_idx, deg, n,
+                                vertex_block=vertex_block)
+        return _frog_step_stream(pos, die, bits, blocked, n,
+                                 frog_block=frog_block, interpret=interpret)
     if impl != "pallas":
         raise ValueError(f"unknown impl {impl!r}")
     N = pos.shape[0]

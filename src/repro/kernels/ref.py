@@ -52,15 +52,18 @@ def frog_count_ref(dest: jnp.ndarray, n: int, weights: Optional[jnp.ndarray] = N
     return jnp.zeros((n + 1,), weights.dtype).at[dest].add(weights)[:n]
 
 
-def frog_count_sort(dest: jnp.ndarray, n: int) -> jnp.ndarray:
+def frog_count_sort(dest: jnp.ndarray, n: int,
+                    assume_sorted: bool = False) -> jnp.ndarray:
     """Sort-based histogram: counts[v] = #{f : dest[f] == v}.
 
     O((N + n) log N) with no scatter and no [N, n/BV] one-hot tiles — the
     TPU-friendly replacement for the compare-and-reduce histogram when n is
     large relative to the vertex block.  Entries outside [0, n) (padding
-    sentinels like -1) are ignored.
+    sentinels like -1) are ignored.  ``assume_sorted=True`` skips the sort
+    (the caller already paid for it — e.g. the streamed superstep's
+    block-sorted frogs), leaving only the O(n log N) searchsorted pass.
     """
-    s = jnp.sort(dest)
+    s = dest if assume_sorted else jnp.sort(dest)
     bounds = jnp.searchsorted(
         s, jnp.arange(n + 1, dtype=dest.dtype), side="left"
     )

@@ -22,8 +22,10 @@ from repro.query.index import (
     WalkIndex,
     WalkIndexConfig,
     build_walk_index,
+    build_walk_index_sharded,
     load_walk_index,
     save_walk_index,
+    save_walk_index_shard,
 )
 from repro.query.engine import (
     QueryPlan,
@@ -38,8 +40,10 @@ __all__ = [
     "WalkIndex",
     "WalkIndexConfig",
     "build_walk_index",
+    "build_walk_index_sharded",
     "load_walk_index",
     "save_walk_index",
+    "save_walk_index_shard",
     "QueryPlan",
     "plan_query",
     "query_counts",

@@ -15,10 +15,25 @@ walks ``shard_size · R`` frogs for ``L`` steps, invoked once per range shard
 (the shard loop is the host-side analogue of the engine's vertex sharding —
 peak device memory is one shard's walk batch, not ``n · R``). The inner step
 is a batched variant of the walker superstep and can run through the fused
-Pallas ``frog_step`` kernel (``step_impl="pallas"``).
+Pallas kernels (``step_impl="pallas"`` for the VMEM-resident kernel,
+``"stream"`` for the HBM-streaming sorted-frog kernel, ``"auto"`` to pick by
+VMEM budget).
+
+Two build drivers share that step:
+
+* :func:`build_walk_index` — the host shard loop (single device);
+* :func:`build_walk_index_sharded` — the same per-shard program as one
+  ``shard_map`` over the engine's ``"vertex"`` mesh axis: every device
+  materializes only its own ``[shard_size, R]`` slab block (the full slab is
+  ``4nR`` bytes — the Twitter-scale memory hog), and per-shard blocks are
+  persisted independently.
 
 Persistence goes through ``checkpoint/`` (atomic step directories), so index
-builds inherit the crash-safety and GC story of model checkpoints.
+builds inherit the crash-safety and GC story of model checkpoints. A
+sharded build writes one checkpoint dir per shard
+(``<dir>/shard_<s>/step_<k>/`` via :func:`save_walk_index_shard`);
+:func:`load_walk_index` detects the sharded layout and reassembles the
+slab, so readers are agnostic to how the index was built.
 """
 from __future__ import annotations
 
@@ -41,7 +56,7 @@ class WalkIndexConfig:
     segments_per_vertex: int = 16     # R — endpoints stored per vertex
     segment_len: int = 4              # L — steps per precomputed segment
     num_shards: int = 8               # build sharding (graph/partition.py)
-    step_impl: str = "xla"            # xla | pallas | ref — walk-step backend
+    step_impl: str = "xla"            # xla | pallas | stream | auto | ref
     seed: int = 0
 
 
@@ -68,6 +83,26 @@ class WalkIndex:
         return int(self.endpoints.shape[1])
 
 
+def _segment_step(row_ptr, col_idx, deg, n, step_impl, pos, key):
+    """One no-death plain walker move for a batch of segment walks.
+
+    The segment walk is the p_T = 0, p_s = 1 corner of the walker
+    superstep: with ``step_impl != "xla"`` it routes through the fused
+    Pallas kernels (resident or HBM-streaming — the death tally is all
+    zeros and discarded).
+    """
+    bits = jax.random.randint(key, pos.shape, 0, 1 << 30, jnp.int32)
+    if step_impl == "xla":
+        return uniform_successor(row_ptr, col_idx, deg, pos, bits)
+    from repro.kernels import ops
+
+    nxt, _ = ops.frog_step(
+        pos, jnp.zeros_like(pos), bits, row_ptr, col_idx, deg, n,
+        impl=step_impl,
+    )
+    return nxt
+
+
 @dataclasses.dataclass(frozen=True)
 class _ShardWalker:
     """One fixed-shape compiled program reused for every shard's build."""
@@ -87,21 +122,8 @@ class _ShardWalker:
         )
 
         def step(pos, k):
-            bits = jax.random.randint(k, pos.shape, 0, 1 << 30, jnp.int32)
-            if self.cfg.step_impl == "xla":
-                nxt = uniform_successor(
-                    self.row_ptr, self.col_idx, self.deg, pos, bits)
-            else:
-                from repro.kernels import ops
-
-                # batched frog step with no deaths: the death tally is all
-                # zeros and discarded — the segment walk is the p_T = 0,
-                # p_s = 1 corner of the walker superstep.
-                nxt, _ = ops.frog_step(
-                    pos, jnp.zeros_like(pos), bits,
-                    self.row_ptr, self.col_idx, self.deg, self.n,
-                    impl=self.cfg.step_impl,
-                )
+            nxt = _segment_step(self.row_ptr, self.col_idx, self.deg,
+                                self.n, self.cfg.step_impl, pos, k)
             return nxt, None
 
         pos, _ = jax.lax.scan(step, pos0, jax.random.split(key, L))
@@ -134,6 +156,75 @@ def build_walk_index(
     )
 
 
+def build_walk_index_sharded(
+    g: CSRGraph,
+    cfg: WalkIndexConfig,
+    mesh,
+    directory: Optional[str] = None,
+    key: Optional[jax.Array] = None,
+    axis_name: str = "vertex",
+    step: int = 0,
+) -> WalkIndex:
+    """Builds the slab as **one** ``shard_map`` program over ``mesh``.
+
+    Each device walks its own range shard's ``shard_size · R`` segment
+    frogs and materializes only its ``[shard_size, R]`` slab block
+    (``out_specs=P(axis_name)`` — device memory holds ``4nR/S`` bytes of
+    slab, the engine-mesh answer to the ROADMAP's "distributed index build
+    + sharded slab" follow-up). The graph CSR is closed over (replicated);
+    per-shard randomness is ``fold_in(key, shard)``, so a shard's block is
+    reproducible independent of mesh shape.
+
+    With ``directory`` set, every shard's block is persisted as its own
+    atomic checkpoint (``save_walk_index_shard``) before the function
+    returns; ``load_walk_index`` reassembles them.
+    """
+    if cfg.segment_len < 1:
+        raise ValueError(f"segment_len must be ≥ 1, got {cfg.segment_len}")
+    if key is None:
+        key = jax.random.PRNGKey(cfg.seed)
+    from jax.sharding import PartitionSpec as P
+
+    S = mesh.devices.size
+    gp, part = partition_graph(g, S)
+    sz = part.shard_size
+    R, L = cfg.segments_per_vertex, cfg.segment_len
+    row_ptr, col_idx, deg = gp.row_ptr, gp.col_idx, gp.out_deg
+
+    def body(key_data):
+        me = jax.lax.axis_index(axis_name)
+        k = jax.random.fold_in(
+            jax.random.wrap_key_data(key_data, impl="threefry2x32"), me)
+        pos0 = me * sz + jnp.repeat(
+            jnp.arange(sz, dtype=jnp.int32), R, total_repeat_length=sz * R)
+
+        def walk(pos, kk):
+            return _segment_step(row_ptr, col_idx, deg, gp.n,
+                                 cfg.step_impl, pos, kk), None
+
+        pos, _ = jax.lax.scan(walk, pos0, jax.random.split(k, L))
+        return pos.reshape(1, sz, R)
+
+    # check_vma=False: jax has no replication rule for pallas_call, and the
+    # fused step backends lower through one (the body is trivially
+    # per-shard — nothing cross-device to check).
+    fn = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(P(),), out_specs=P(axis_name),
+        check_vma=False))
+    blocks = np.asarray(fn(jax.random.key_data(key)))        # [S, sz, R]
+    if directory is not None:
+        for s in range(S):
+            save_walk_index_shard(
+                directory, s, S, g.n, blocks[s], cfg.segment_len, cfg.seed,
+                step=step)
+    return WalkIndex(
+        endpoints=jnp.asarray(blocks.reshape(S * sz, R)[: g.n],
+                              dtype=jnp.int32),
+        segment_len=cfg.segment_len,
+        seed=cfg.seed,
+    )
+
+
 # --- persistence (checkpoint/ atomic step directories) ----------------------
 
 
@@ -145,17 +236,42 @@ def _index_tree(index: WalkIndex) -> dict:
     }
 
 
+def _shard_dir(directory: str, shard: int) -> str:
+    return os.path.join(directory, f"shard_{shard:04d}")
+
+
+def save_walk_index_shard(
+    directory: str,
+    shard: int,
+    num_shards: int,
+    n: int,
+    block: np.ndarray,            # int32[shard_size, R] — this shard's slab
+    segment_len: int,
+    seed: int,
+    step: int = 0,
+) -> str:
+    """Atomic save of one shard's slab block under
+    ``<directory>/shard_<s>/step_<k>/`` — each shard is an independent
+    checkpoint dir, so a sharded build can persist (and crash/retry) one
+    shard at a time without ever exposing a torn slab."""
+    block = jnp.asarray(block, dtype=jnp.int32)
+    return save_checkpoint(_shard_dir(directory, shard), step, {
+        "endpoints": block,
+        "segment_len": jnp.int32(segment_len),
+        "seed": jnp.int32(seed),
+        "shard": jnp.int32(shard),
+        "num_shards": jnp.int32(num_shards),
+        "n": jnp.int32(n),
+        "segments_per_vertex": jnp.int32(block.shape[1]),
+    })
+
+
 def save_walk_index(directory: str, index: WalkIndex, step: int = 0) -> str:
     """Atomic save under ``<directory>/step_<k>/`` (checkpoint layout)."""
     return save_checkpoint(directory, step, _index_tree(index))
 
 
-def load_walk_index(directory: str, step: Optional[int] = None) -> WalkIndex:
-    """Restores the latest (or given) index build from ``directory``."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no walk index under {directory!r}")
+def _load_checkpoint_tree(directory: str, step: int) -> dict:
     # Reconstruct the restore template from the checkpoint's own metadata —
     # the index is self-describing, callers need not know (n, R) up front.
     with open(os.path.join(directory, f"step_{step:08d}", "tree.json")) as f:
@@ -165,9 +281,59 @@ def load_walk_index(directory: str, step: Optional[int] = None) -> WalkIndex:
         for path, shape, dtype in zip(
             meta["paths"], meta["shapes"], meta["dtypes"])
     }
-    tree = restore_checkpoint(directory, step, like)
+    return restore_checkpoint(directory, step, like)
+
+
+def load_walk_index(directory: str, step: Optional[int] = None) -> WalkIndex:
+    """Restores the latest (or given) index build from ``directory``.
+
+    Handles both layouts: a monolithic ``save_walk_index`` checkpoint, and
+    the per-shard layout written by a sharded build
+    (``<directory>/shard_<s>/step_<k>/``), whose blocks are validated
+    (all shards present, consistent metadata) and reassembled into the
+    dense slab.
+    """
+    shard_dirs = sorted(
+        d for d in (os.listdir(directory) if os.path.isdir(directory) else [])
+        if d.startswith("shard_"))
+    if not shard_dirs:
+        if step is None:
+            step = latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(f"no walk index under {directory!r}")
+        tree = _load_checkpoint_tree(directory, step)
+        return WalkIndex(
+            endpoints=tree["endpoints"],
+            segment_len=int(tree["segment_len"]),
+            seed=int(tree["seed"]),
+        )
+
+    blocks, meta = {}, None
+    for d in shard_dirs:
+        sdir = os.path.join(directory, d)
+        s_step = latest_step(sdir) if step is None else step
+        if s_step is None:
+            raise FileNotFoundError(f"no checkpoint under {sdir!r}")
+        tree = _load_checkpoint_tree(sdir, s_step)
+        cur = (int(tree["num_shards"]), int(tree["n"]),
+               int(tree["segment_len"]), int(tree["seed"]),
+               int(tree["segments_per_vertex"]))
+        if meta is None:
+            meta = cur
+        elif cur != meta:
+            raise ValueError(
+                f"inconsistent shard metadata under {directory!r}: "
+                f"{cur} vs {meta}")
+        blocks[int(tree["shard"])] = np.asarray(tree["endpoints"])
+    num_shards, n, segment_len, seed, _ = meta
+    missing = sorted(set(range(num_shards)) - set(blocks))
+    if missing:
+        raise FileNotFoundError(
+            f"walk index under {directory!r} is missing shards {missing}")
+    endpoints = np.concatenate(
+        [blocks[s] for s in range(num_shards)], axis=0)[:n]
     return WalkIndex(
-        endpoints=tree["endpoints"],
-        segment_len=int(tree["segment_len"]),
-        seed=int(tree["seed"]),
+        endpoints=jnp.asarray(endpoints, dtype=jnp.int32),
+        segment_len=segment_len,
+        seed=seed,
     )

@@ -36,6 +36,16 @@ for ps in (1.0, 0.4):
 # partial sync must cut sync messages roughly proportionally
 ratio = sync_totals[0.4] / sync_totals[1.0]
 assert 0.25 < ratio < 0.55, ratio
+
+# fused plain step through the HBM-streaming kernel: same process, same
+# accuracy, exact conservation (blocked slabs via vertex_block=).
+dgb = build_distributed_graph(g, 8, vertex_block=64)
+cfg = EngineConfig(num_frogs=100_000, num_steps=8, p_s=1.0, step_impl="stream")
+res = distributed_frogwild(dgb, cfg, mesh, seed=0)
+assert int(res.counts.sum()) == 100_000, int(res.counts.sum())
+assert res.overflow == 0
+m = float(normalized_mass_captured(res.pi_hat, pi, 20))
+assert m > 0.95, m
 print("ENGINE-OK")
 """, n_devices=8)
     assert "ENGINE-OK" in out
