@@ -68,6 +68,32 @@ def smoke():
         got = np.asarray(ops.frog_count(d, g.n, impl=impl, **kw))
         assert (got == cwant).all(), (impl, kw)
         print(f"smoke frog_count impl={impl} {kw or ''} OK")
+
+    # stitch dispatch: global kernel vs oracle, and the per-shard
+    # local-index variant composing (sum over shards) to the global result.
+    rng = np.random.default_rng(3)
+    W, R, S = 600, 5, 4
+    spos = jnp.asarray(rng.integers(0, g.n, W), jnp.int32)
+    sstop = jnp.asarray(rng.integers(0, 2, W), jnp.int32)
+    sbits = jnp.asarray(rng.integers(0, 1 << 30, W), jnp.int32)
+    endpoints = jnp.asarray(rng.integers(0, g.n, (g.n, R)), jnp.int32)
+    sw = ops.stitch_step(spos, sstop, sbits, endpoints, g.n, impl="ref")
+    got = ops.stitch_step(spos, sstop, sbits, endpoints, g.n, impl="pallas")
+    _assert_step_equal(got, sw, "stitch pallas")
+    print("smoke stitch_step impl=pallas OK")
+    sz = g.n // S
+    for impl in ("pallas", "ref"):
+        acc_n = jnp.zeros_like(spos)
+        acc_c = []
+        for s in range(S):
+            nl, cl = ops.stitch_step_local(
+                spos, sstop, sbits, endpoints[s * sz:(s + 1) * sz],
+                s * sz, impl=impl)
+            acc_n = acc_n + nl
+            acc_c.append(np.asarray(cl))
+        assert (np.asarray(acc_n) == np.asarray(sw[0])).all(), impl
+        assert (np.concatenate(acc_c) == np.asarray(sw[1])).all(), impl
+        print(f"smoke stitch_step_local impl={impl} composes OK")
     print("smoke OK: kernel dispatch paths all agree with oracles")
 
 

@@ -1,21 +1,31 @@
-"""Query-serving benchmark: indexed stitching vs from-scratch restart.
+"""Query-serving benchmark: indexed stitching vs from-scratch restart, and
+gathered vs sharded-slab serving.
 
-Serves a batch of (ε, δ)-planned top-k and PPR queries two ways over the
-same graph and the same per-query walk budgets:
+Serves a batch of (ε, δ)-planned top-k and PPR queries over the same graph
+and the same per-query walk budgets:
 
 * **indexed** — the walk-index query engine: one offline segment-index
   build (amortized across all queries), then the continuous-batching
   ``QueryScheduler`` stitching ``⌊t/L⌋`` segment gathers + ``t mod L``
   residual steps per walk, many queries per device wave.
+* **indexed, sharded slab** — the same scheduler serving from per-shard
+  ``[shard_size, R]`` slab blocks with no reassembly (the
+  ``distributed/runtime.py`` dispatch: host loop here on one device, one
+  ``shard_map`` on a mesh) — the row tracks the cost of the 4·n·R/S
+  per-device memory win.
 * **restart** — the pre-index serving story: every query reruns the full
   ``t``-superstep walk from scratch (``frogwild_run`` for global top-k, a
   masked direct walk for PPR), one query at a time.
 
-Emits ``BENCH_query.json`` with queries/sec and p50/p99 latency for both,
-plus the index build cost — machine-readable trajectory for later PRs.
+Emits ``BENCH_query.json`` with queries/sec and p50/p99 latency for all
+three, plus the index build cost — machine-readable trajectory for later
+PRs. ``--smoke`` instead runs a tiny gathered-vs-sharded dispatch
+equivalence sweep (no timing, no JSON rewrite; wired into
+``scripts/ci_tier1.sh --bench-smoke``).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -27,17 +37,18 @@ from repro.core import FrogWildConfig, frogwild_run
 from repro.graph import chung_lu_powerlaw
 from repro.kernels import ops
 from repro.query import (QueryRequest, QueryScheduler, WalkIndexConfig,
-                         build_walk_index, plan_query)
+                         build_walk_index, plan_query, shard_walk_index)
 from repro.query.engine import _plain_steps, sample_walk_lengths
 
 N_GRAPH = 32_768
 NUM_QUERIES = 24
+NUM_SHARDS = 8
 EPSILON, DELTA, K = 0.3, 0.1, 10
 
 
-def _requests():
+def _requests(num=None):
     reqs = []
-    for i in range(NUM_QUERIES):
+    for i in range(NUM_QUERIES if num is None else num):
         if i % 3 == 2:
             reqs.append(QueryRequest(rid=i, kind="ppr", source=17 * i + 1,
                                      k=K, epsilon=EPSILON, delta=DELTA))
@@ -45,6 +56,36 @@ def _requests():
             reqs.append(QueryRequest(rid=i, kind="topk", k=K,
                                      epsilon=EPSILON, delta=DELTA))
     return reqs
+
+
+def smoke():
+    """Gathered vs sharded serving dispatch equivalence at tiny sizes.
+
+    The two waves share one key stream, so on the same slab their answers
+    must agree exactly — any divergence is a dispatch regression and fails
+    tier-1 (``scripts/ci_tier1.sh --bench-smoke``).
+    """
+    g = chung_lu_powerlaw(n=768, avg_out_deg=6, seed=0)
+    idx = build_walk_index(g, WalkIndexConfig(
+        segments_per_vertex=6, segment_len=2, num_shards=2))
+    results = {}
+    for name, index, impl in [
+        ("gathered", idx, "xla"),
+        ("sharded", shard_walk_index(idx, 4), "xla"),
+        ("sharded_fused", shard_walk_index(idx, 4), "ref"),
+    ]:
+        sched = QueryScheduler(g, index, max_walks=512, max_queries=3,
+                               max_steps=10, seed=7, impl=impl)
+        for r in _requests(num=4):
+            assert sched.submit(r).admitted
+        results[name] = sorted(sched.run(), key=lambda r: r.rid)
+        print(f"smoke query_serving {name} OK "
+              f"({'loop' if sched.runtime and not sched.runtime.is_mesh else 'dense/mesh'})")
+    for name in ("sharded", "sharded_fused"):
+        for a, b in zip(results["gathered"], results[name]):
+            assert (a.vertices == b.vertices).all(), (name, a.rid)
+            assert np.allclose(a.scores, b.scores), (name, a.rid)
+    print("smoke OK: gathered and sharded serving answers identical")
 
 
 def _restart_latencies(g, plan, reqs, p_T=0.15):
@@ -116,6 +157,34 @@ def main():
                  f"qps={qps_idx:.1f} p50_ms={np.percentile(lat_idx, 50) * 1e3:.1f} "
                  f"p99_ms={np.percentile(lat_idx, 99) * 1e3:.1f}"))
 
+    # sharded-slab serving: same scheduler, per-shard blocks, no slab
+    # reassembly (host-loop dispatch on this 1-device bench; 4·n·R/S bytes
+    # of slab resident per wave call instead of 4·n·R).
+    sharded = shard_walk_index(index, NUM_SHARDS)
+    sched_sh = QueryScheduler(g, sharded, max_walks=16_384, max_queries=12,
+                              max_steps=plan.num_steps)
+
+    def serve_sharded():
+        for r in _requests():
+            sched_sh.submit(r)
+        out = sched_sh.run()
+        sched_sh.finished = []
+        return out
+
+    serve_sharded()                                  # warm the wave programs
+    t0 = time.perf_counter()
+    results_sh = serve_sharded()
+    dt_sh = time.perf_counter() - t0
+    lat_sh = np.asarray([r.latency_s for r in results_sh])
+    qps_sh = NUM_QUERIES / dt_sh
+    slab_mb = index.endpoints.nbytes / 1e6
+    rows.append(("query/query_serving_sharded", dt_sh * 1e6 / NUM_QUERIES,
+                 f"qps={qps_sh:.1f} p50_ms={np.percentile(lat_sh, 50) * 1e3:.1f} "
+                 f"p99_ms={np.percentile(lat_sh, 99) * 1e3:.1f} "
+                 f"shards={NUM_SHARDS} slab_mb_per_shard="
+                 f"{slab_mb / NUM_SHARDS:.2f} dispatch="
+                 f"{'mesh' if sched_sh.runtime.is_mesh else 'host_loop'}"))
+
     t0 = time.perf_counter()
     lat_rst = _restart_latencies(g, plan, _requests())
     dt_rst = time.perf_counter() - t0
@@ -133,15 +202,28 @@ def main():
         "num_queries": NUM_QUERIES,
         "epsilon": EPSILON, "delta": DELTA, "k": K,
         "qps_indexed": round(qps_idx, 2),
+        "qps_sharded": round(qps_sh, 2),
         "qps_restart": round(qps_rst, 2),
         "p50_ms_indexed": round(float(np.percentile(lat_idx, 50)) * 1e3, 2),
         "p99_ms_indexed": round(float(np.percentile(lat_idx, 99)) * 1e3, 2),
+        "p50_ms_sharded": round(float(np.percentile(lat_sh, 50)) * 1e3, 2),
+        "p99_ms_sharded": round(float(np.percentile(lat_sh, 99)) * 1e3, 2),
         "p50_ms_restart": round(float(np.percentile(lat_rst, 50)) * 1e3, 2),
         "p99_ms_restart": round(float(np.percentile(lat_rst, 99)) * 1e3, 2),
         "index_build_s": round(build_s, 3),
+        "num_shards": NUM_SHARDS,
+        "slab_mb_per_shard": round(slab_mb / NUM_SHARDS, 3),
         "speedup": round(speedup, 2),
+        "sharded_vs_gathered": round(qps_sh / qps_idx, 3),
     })
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny gathered-vs-sharded serving equivalence "
+                         "sweep; no timing, no JSON rewrite")
+    if ap.parse_args().smoke:
+        smoke()
+    else:
+        main()

@@ -6,6 +6,13 @@ through the continuous-batching :class:`~repro.query.QueryScheduler` — the
 FrogWild machinery as an online service instead of a batch job.
 
   PYTHONPATH=src python examples/serve_pagerank.py
+
+``--shards S`` serves from the slab as ``S`` per-shard blocks with **no
+reassembly** (``distributed/runtime.py`` dispatch: one ``shard_map`` on a
+mesh with ≥ S devices, a host loop of the same per-shard program
+otherwise), and ``--slo-ms`` attaches a latency SLO to every request so the
+deadline-aware admission controller is exercised (watch for rejected /
+downgraded decisions once a wave time has been measured).
 """
 import argparse
 import tempfile
@@ -17,7 +24,8 @@ import numpy as np
 from repro.core import normalized_mass_captured, power_iteration
 from repro.graph import chung_lu_powerlaw
 from repro.query import (QueryRequest, QueryScheduler, WalkIndexConfig,
-                         build_walk_index, load_walk_index, save_walk_index)
+                         build_walk_index, load_walk_index, save_walk_index,
+                         shard_walk_index)
 
 
 def main():
@@ -26,6 +34,10 @@ def main():
     ap.add_argument("--segments", type=int, default=16, help="R per vertex")
     ap.add_argument("--segment-len", type=int, default=4, help="L steps")
     ap.add_argument("--queries", type=int, default=12)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="serve from S per-shard slab blocks (0 = dense)")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="attach this latency SLO to every request")
     args = ap.parse_args()
 
     print(f"Generating a {args.n}-vertex power-law graph (θ=2.2)…")
@@ -45,22 +57,41 @@ def main():
         index = load_walk_index(d)          # checkpoint round-trip
         print(f"  persisted + restored via checkpoint/ ({d})")
 
+    if args.shards:
+        index = shard_walk_index(index, args.shards)
+        print(f"Sharded slab: {args.shards} × "
+              f"[{index.shard_size}, {index.segments_per_vertex}] blocks "
+              f"({index.blocks[0].nbytes / 1e6:.2f} MB/device, "
+              f"never reassembled)")
     sched = QueryScheduler(g, index, max_walks=8192, max_queries=8,
                            max_steps=32)
+    if args.shards:
+        print(f"  dispatch: "
+              f"{'shard_map mesh' if sched.runtime.is_mesh else 'host loop'}")
     hubs = np.asarray(g.out_deg).argsort()[-3:]
+    slo = (args.slo_ms / 1e3) or None
     for i in range(args.queries):
         if i % 3 == 2:
-            sched.submit(QueryRequest(rid=i, kind="ppr",
-                                      source=int(hubs[i % 3]), k=10,
-                                      epsilon=0.3))
+            req = QueryRequest(rid=i, kind="ppr", source=int(hubs[i % 3]),
+                               k=10, epsilon=0.3, slo_s=slo,
+                               allow_downgrade=True)
         else:
-            sched.submit(QueryRequest(rid=i, kind="topk", k=10, epsilon=0.3))
+            req = QueryRequest(rid=i, kind="topk", k=10, epsilon=0.3,
+                               slo_s=slo, allow_downgrade=True)
+        decision = sched.submit(req)
+        if not decision.admitted:
+            print(f"  q{i:02d} REJECTED at admission: {decision.reason}")
+        elif decision.downgraded:
+            print(f"  q{i:02d} downgraded to {decision.num_walks} walks "
+                  f"(ε bound {decision.plan.epsilon_bound:.3f}) to fit "
+                  f"{args.slo_ms:.0f}ms SLO")
 
     t0 = time.perf_counter()
     results = sched.run()
     dt = time.perf_counter() - t0
     print(f"Served {len(results)} queries in {dt:.2f}s "
-          f"({len(results) / dt:.1f} queries/s)")
+          f"({len(results) / dt:.1f} queries/s; "
+          f"{len(sched.rejected)} rejected at admission)")
 
     print("Exact PageRank (50 power iterations) for reference…")
     pi = power_iteration(g, num_iters=50)

@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # Canonical tier-1 verification — the one command builders and CI invoke.
 # Extra pytest args pass through, e.g. scripts/ci_tier1.sh -k query
-# --bench-smoke additionally runs the kernel-dispatch equivalence sweep
-# (benchmarks/bench_kernels.py --smoke: tiny sizes, no BENCH json rewrite)
-# so a broken impl= dispatch fails tier-1 instead of only bench runs.
+# --bench-smoke additionally runs the dispatch equivalence sweeps
+# (benchmarks/bench_kernels.py --smoke: every kernel impl= path incl. the
+# stitch/local-stitch variants; benchmarks/bench_query.py --smoke: gathered
+# vs sharded-slab serving — tiny sizes, no BENCH json rewrite) so a broken
+# dispatch fails tier-1 instead of only bench runs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -23,4 +25,6 @@ python -m pytest -x -q ${args[@]+"${args[@]}"}
 if [[ "$BENCH_SMOKE" == 1 ]]; then
   PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/bench_kernels.py --smoke
+  PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/bench_query.py --smoke
 fi

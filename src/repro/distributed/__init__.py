@@ -1,5 +1,12 @@
-"""Distribution substrate: sharding rules, pipeline parallelism, elastic
-resharding."""
+"""Distribution substrate: shard-execution runtime, sharding rules,
+pipeline parallelism, elastic resharding."""
+from repro.distributed.runtime import (
+    ShardRuntime,
+    load_checkpoint_tree,
+    load_shard_checkpoints,
+    save_shard_checkpoint,
+    shard_dir,
+)
 from repro.distributed.sharding import (
     MeshAxes,
     batch_pspec,
@@ -9,6 +16,11 @@ from repro.distributed.sharding import (
 )
 
 __all__ = [
+    "ShardRuntime",
+    "load_checkpoint_tree",
+    "load_shard_checkpoints",
+    "save_shard_checkpoint",
+    "shard_dir",
     "MeshAxes",
     "batch_pspec",
     "decode_state_pspecs",

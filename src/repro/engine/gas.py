@@ -32,10 +32,11 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core.blocking import (channel_enum_draw, coin_uniform,
                                  rejection_is_profitable)
+from repro.distributed.runtime import ShardRuntime
 from repro.graph.csr import CSRGraph
 from repro.graph.partition import partition_graph
 from repro.kernels.frog_step_stream import BlockedCSR
@@ -480,18 +481,14 @@ def make_shard_body(dg: DistributedGraph, cfg: EngineConfig):
 
 
 def _sharded_fn(dg: DistributedGraph, cfg: EngineConfig, mesh: Mesh):
-    ax = cfg.axis_name
-    body = make_shard_body(dg, cfg)
-    n_arrays = len(dg.array_specs())
+    rt = ShardRuntime.for_mesh(mesh, cfg.axis_name)
     # jax has no replication rule for pallas_call: the fused step backends
     # need the varying-manual-axes check off (the body is per-shard; the
     # only cross-device op is the all_to_all exchange).
-    check = {} if cfg.step_impl == "xla" else {"check_vma": False}
-    return jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(P(ax),) * n_arrays + (P(),),
-        out_specs=(P(ax), P(ax)),
-        **check,
+    return rt.shard_map_fn(
+        make_shard_body(dg, cfg),
+        num_sharded=len(dg.array_specs()), num_replicated=1, num_outputs=2,
+        check_vma=cfg.step_impl == "xla",
     )
 
 
@@ -499,12 +496,13 @@ def distributed_frogwild(
     dg: DistributedGraph, cfg: EngineConfig, mesh: Mesh, seed: int = 0
 ) -> EngineResult:
     """Runs the full FrogWild! process under ``mesh`` and returns π̂ + stats."""
-    if mesh.devices.size != dg.num_shards:
+    rt = ShardRuntime.for_mesh(mesh, cfg.axis_name)
+    if rt.num_shards != dg.num_shards:
         raise ValueError(
-            f"mesh has {mesh.devices.size} devices, graph has {dg.num_shards} shards"
+            f"mesh has {rt.num_shards} devices, graph has {dg.num_shards} shards"
         )
     fn = jax.jit(_sharded_fn(dg, cfg, mesh))
-    key_data = jax.random.key_data(jax.random.PRNGKey(seed))
+    key_data = ShardRuntime.key_data(jax.random.PRNGKey(seed))
     counts, stats = fn(*dg.arrays(), key_data)
     counts = counts.reshape(-1)[: dg.n]
     stats = np.asarray(stats)                         # [S, t, 4]
@@ -523,9 +521,8 @@ def distributed_frogwild(
 def frogwild_dryrun_lowered(dg: DistributedGraph, cfg: EngineConfig, mesh: Mesh):
     """Lowers the identical shard program from ShapeDtypeStructs only —
     the multi-pod dry-run entry point (no graph data, no allocation)."""
-    ax = cfg.axis_name
-    sh = NamedSharding(mesh, P(ax))
-    rep = NamedSharding(mesh, P())
+    rt = ShardRuntime.for_mesh(mesh, cfg.axis_name)
+    sh, rep = rt.sharding(), rt.sharding(replicated=True)
     fn = _sharded_fn(dg, cfg, mesh)
     specs = dg.array_specs() + (jax.ShapeDtypeStruct((2,), jnp.uint32),)
     return jax.jit(

@@ -32,9 +32,13 @@ block shapes, **independent of n and nnz**; HBM holds the full
 ``4 · (2·n_pad + num_vb · E_blk + 5·P_pad)`` working set. The resident
 kernel needs ``4 · (2n + nnz)`` bytes of VMEM for the graph alone.
 
-Random bits are drawn outside with ``jax.random`` and passed in, keeping the
+Random bits default to the caller (``jax.random`` outside), keeping the
 kernel deterministic and byte-for-byte testable against
-``ref.frog_step_ref`` (the ops wrapper unsorts the outputs).
+``ref.frog_step_ref`` (the ops wrapper unsorts the outputs) — the
+interpret-mode determinism contract. On real TPU pass
+``use_device_rng=True`` (the bits operand becomes an ``int32[1]`` seed):
+the slot draw then comes from the in-kernel ``pltpu.prng_random_bits``
+seeded per frog block, and the HBM bits stream disappears.
 
 Dangling guard: ``d_out == 0`` ⇒ the frog stays put (the self-loop
 convention, see graph/csr.py:uniform_successor — asserted identical across
@@ -155,7 +159,7 @@ def _stream_kernel(
     pos_ref, die_ref, bits_ref,   # int32[BF] — sorted/padded frog tiles
     row_off_ref, deg_ref, col_ref,  # (1, BV), (1, BV), (1, E_blk) slabs
     counts_ref, next_ref,         # int32[BV], int32[BF]
-    *, vertex_block: int,
+    *, vertex_block: int, use_device_rng: bool,
 ):
     b = pl.program_id(0)
     vid = vid_ref[b]
@@ -175,7 +179,17 @@ def _stream_kernel(
     local = pos - v0                                            # in [0, BV)
     # --- scatter(): draw slot, gather successor from the streamed slab ---
     d = jnp.take(deg_ref[0], local, axis=0)
-    slot = bits_ref[...] % jnp.maximum(d, 1)
+    if use_device_rng:
+        # Each frog block is visited exactly once (the grid IS the sorted
+        # frog-block sequence), so one per-block seed suffices; the large
+        # odd multiplier keeps consecutive caller seeds (superstep indices)
+        # off each other's block streams.
+        pltpu.prng_seed(bits_ref[0] * 1000003 + b)
+        raw = pltpu.bitcast(pltpu.prng_random_bits(pos.shape), jnp.uint32)
+        bits = (raw >> 1).astype(jnp.int32)
+    else:
+        bits = bits_ref[...]
+    slot = bits % jnp.maximum(d, 1)
     edge = jnp.take(row_off_ref[0], local, axis=0) + slot
     nxt = jnp.take(col_ref[0], edge, axis=0)
     next_ref[...] = jnp.where(d > 0, nxt, pos).astype(jnp.int32)
@@ -195,12 +209,13 @@ def _stream_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_fb", "vertex_block", "frog_block", "interpret"),
+    static_argnames=("num_fb", "vertex_block", "frog_block", "interpret",
+                     "use_device_rng"),
 )
 def frog_step_stream_sorted(
     pos_p: jnp.ndarray,       # int32[P_pad] — block-sorted, padded positions
     die_p: jnp.ndarray,       # int32[P_pad] — 0 on padding slots
-    bits_p: jnp.ndarray,      # int32[P_pad]
+    bits_p: jnp.ndarray,      # int32[P_pad]; int32[1] seed in device-rng mode
     blk_vid: jnp.ndarray,     # int32[num_fb] — vertex block per frog block
     row_off: jnp.ndarray,     # int32[num_vb, BV]
     deg: jnp.ndarray,         # int32[num_vb, BV]
@@ -209,6 +224,7 @@ def frog_step_stream_sorted(
     vertex_block: int = DEFAULT_VERTEX_BLOCK,
     frog_block: int = DEFAULT_FROG_BLOCK,
     interpret: bool = True,
+    use_device_rng: bool = False,
 ):
     """Streamed superstep over pre-sorted frogs.
 
@@ -218,13 +234,15 @@ def frog_step_stream_sorted(
     """
     num_vb = row_off.shape[0]
     e_blk = col.shape[1]
+    bits_spec = (pl.BlockSpec((1,), lambda b, vid: (0,)) if use_device_rng
+                 else pl.BlockSpec((frog_block,), lambda b, vid: (b,)))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(num_fb,),
         in_specs=[
             pl.BlockSpec((frog_block,), lambda b, vid: (b,)),       # pos
             pl.BlockSpec((frog_block,), lambda b, vid: (b,)),       # die
-            pl.BlockSpec((frog_block,), lambda b, vid: (b,)),       # bits
+            bits_spec,                                              # bits | seed
             pl.BlockSpec((1, vertex_block), lambda b, vid: (vid[b], 0)),
             pl.BlockSpec((1, vertex_block), lambda b, vid: (vid[b], 0)),
             pl.BlockSpec((1, e_blk), lambda b, vid: (vid[b], 0)),
@@ -234,7 +252,8 @@ def frog_step_stream_sorted(
             pl.BlockSpec((frog_block,), lambda b, vid: (b,)),
         ),
     )
-    kernel = functools.partial(_stream_kernel, vertex_block=vertex_block)
+    kernel = functools.partial(_stream_kernel, vertex_block=vertex_block,
+                               use_device_rng=use_device_rng)
     counts, nxt = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

@@ -23,6 +23,7 @@ from repro.kernels.frog_step_stream import (BlockedCSR, block_csr,
                                             frog_step_stream_sorted)
 from repro.kernels.spmv_ell import spmv_ell_slab
 from repro.kernels.stitch import stitch_step as _stitch_step
+from repro.kernels.stitch import stitch_step_local as _stitch_step_local
 
 # VMEM the resident frog_step kernel may spend on its graph block before
 # impl="auto" switches to the HBM-streaming kernel (half a 16 MB core,
@@ -34,6 +35,36 @@ def resident_graph_bytes(n: int, nnz: int) -> int:
     """VMEM bytes the resident ``frog_step`` kernel pins for the graph
     (row_ptr + col_idx + deg, int32)."""
     return 4 * ((n + 1) + nnz + n)
+
+
+def _rng_mode(rng: str, interpret: bool, seed):
+    """Resolves the kernel RNG mode → ``(use_device_rng, seed_arr | None)``.
+
+    ``rng="device"`` swaps the caller-supplied bits stream for the
+    in-kernel ``pltpu.prng_random_bits`` draw (the bits operand becomes a
+    scalar seed). That primitive only lowers on real TPU — interpret mode
+    keeps the seeded-bits path as the determinism contract, so requesting
+    both is a configuration error, not a silent fallback. The seed is
+    mandatory and must be **fresh per call** (e.g. fold in the superstep /
+    stitch-round index): the kernels are deterministic in it, so reusing a
+    seed replays the identical bit stream and correlates every draw.
+    """
+    if rng == "caller":
+        return False, None
+    if rng != "device":
+        raise ValueError(f"unknown rng mode {rng!r}")
+    if interpret:
+        raise ValueError(
+            'rng="device" draws slot bits with pltpu.prng_random_bits, '
+            "which lowers only on TPU hardware; interpret mode keeps the "
+            'caller-supplied bits path (rng="caller") for byte-for-byte '
+            "determinism tests")
+    if seed is None:
+        raise ValueError(
+            'rng="device" needs an explicit per-call seed= (fold in the '
+            "step index; a reused seed replays the same bit stream and "
+            "biases iterated walks)")
+    return True, jnp.asarray([seed], jnp.int32)
 
 
 def _pad_to(x: jnp.ndarray, m: int, axis: int = 0, value=0):
@@ -112,16 +143,18 @@ def frog_count(dest: jnp.ndarray, n: int, impl: str = "pallas",
 
 def _frog_step_stream(
     pos, die, bits, blocked: BlockedCSR, n: int, frog_block: int,
-    interpret: bool,
+    interpret: bool, seed_arr: Optional[jnp.ndarray] = None,
 ):
     """Stream-path prologue/epilogue: sort frogs by vertex block, pad each
     block's segment to a ``frog_block`` multiple with inert frogs, run the
-    scalar-prefetch streamed kernel, unsort."""
+    scalar-prefetch streamed kernel, unsort. With ``seed_arr`` set the
+    kernel draws its own bits (device RNG) and no bits stream is sorted."""
     N = pos.shape[0]
     bv, num_vb = blocked.vertex_block, blocked.num_blocks
     fb = min(frog_block, max(8, N))
     order = jnp.argsort(pos)            # by vertex ⇒ by vertex block
-    pos_s, die_s, bits_s = pos[order], die[order], bits[order]
+    pos_s, die_s = pos[order], die[order]
+    bits_s = None if seed_arr is not None else bits[order]
     # Per-block frog counts from the sorted positions (the sort is reused by
     # the in-kernel segment-sum tally — no second histogram pass).
     starts = jnp.searchsorted(
@@ -148,13 +181,14 @@ def _frog_step_stream(
         0, num_vb - 1)
     pos_p = ((slot_vid + 1) * bv - 1).at[dst].set(pos_s)
     die_p = jnp.zeros((p_pad,), jnp.int32).at[dst].set(die_s)
-    bits_p = jnp.zeros((p_pad,), jnp.int32).at[dst].set(bits_s)
+    bits_p = (seed_arr if seed_arr is not None
+              else jnp.zeros((p_pad,), jnp.int32).at[dst].set(bits_s))
     blk_vid = slot_vid[::fb]
     nxt_p, counts = frog_step_stream_sorted(
         pos_p, die_p, bits_p, blk_vid,
         blocked.row_off, blocked.deg, blocked.col,
         num_fb=p_pad // fb, vertex_block=bv, frog_block=fb,
-        interpret=interpret,
+        interpret=interpret, use_device_rng=seed_arr is not None,
     )
     # Count blocks the grid never visited hold uninitialized memory.
     counts = jnp.where((cnt > 0)[:, None],
@@ -166,7 +200,7 @@ def _frog_step_stream(
 def frog_step(
     pos: jnp.ndarray,
     die: jnp.ndarray,
-    bits: jnp.ndarray,
+    bits: Optional[jnp.ndarray],
     row_ptr: jnp.ndarray,
     col_idx: jnp.ndarray,
     deg: jnp.ndarray,
@@ -177,6 +211,8 @@ def frog_step(
     frog_block: int = 1024,
     blocked: Optional[BlockedCSR] = None,
     vmem_budget: int = STREAM_VMEM_BUDGET,
+    rng: str = "caller",
+    seed: Optional[int] = None,
 ):
     """Fused plain walker superstep → ``(next_pos[N], death_counts[n])``.
 
@@ -192,15 +228,24 @@ def frog_step(
       ``vmem_budget``, else ``stream`` (falling back to ``pallas`` when no
       ``blocked`` layout is available from traced arrays).
 
+    ``rng="device"`` (compiled TPU only) draws the slot bits in-kernel with
+    ``pltpu.prng_random_bits`` seeded from ``seed`` — ``bits`` may then be
+    ``None``; ``rng="caller"`` (default) keeps the deterministic
+    caller-supplied bits path.
+
     Handles all padding here so callers pass natural shapes.
     """
     die = die.astype(jnp.int32)
-    bits = jnp.abs(bits).astype(jnp.int32)
+    use_device_rng, seed_arr = _rng_mode(rng, interpret, seed)
+    if not use_device_rng:
+        bits = jnp.abs(bits).astype(jnp.int32)
     if impl == "auto":
         fits = resident_graph_bytes(n, col_idx.shape[0]) <= vmem_budget
         traced = blocked is None and isinstance(row_ptr, jax.core.Tracer)
         impl = "pallas" if (fits or traced) else "stream"
     if impl == "ref":
+        if use_device_rng:
+            raise ValueError('rng="device" has no jnp oracle (impl="ref")')
         return kref.frog_step_ref(pos, die, bits, row_ptr, col_idx, deg, n)
     if impl == "stream":
         if blocked is None:
@@ -212,7 +257,8 @@ def frog_step(
             blocked = block_csr(row_ptr, col_idx, deg, n,
                                 vertex_block=vertex_block)
         return _frog_step_stream(pos, die, bits, blocked, n,
-                                 frog_block=frog_block, interpret=interpret)
+                                 frog_block=frog_block, interpret=interpret,
+                                 seed_arr=seed_arr)
     if impl != "pallas":
         raise ValueError(f"unknown impl {impl!r}")
     N = pos.shape[0]
@@ -223,11 +269,11 @@ def frog_step(
     # position is discarded by the slice below and they tally nothing.
     pos_p = _pad_to(pos, frog_block)
     die_p = _pad_to(die, frog_block)
-    bits_p = _pad_to(bits, frog_block)
+    bits_p = seed_arr if use_device_rng else _pad_to(bits, frog_block)
     nxt, counts = _frog_step(
         pos_p, die_p, bits_p, row_ptr, col_idx, deg, n_pad,
         vertex_block=vertex_block, frog_block=frog_block,
-        interpret=interpret,
+        interpret=interpret, use_device_rng=use_device_rng,
     )
     return nxt[:N], counts[:n]
 
@@ -235,25 +281,33 @@ def frog_step(
 def stitch_step(
     pos: jnp.ndarray,
     stop: jnp.ndarray,
-    bits: jnp.ndarray,
+    bits: Optional[jnp.ndarray],
     endpoints: jnp.ndarray,  # int32[n, R] — walk-segment endpoint slab
     n: int,
     impl: str = "pallas",
     interpret: bool = True,
     vertex_block: int = 512,
     walk_block: int = 1024,
+    rng: str = "caller",
+    seed: Optional[int] = None,
 ):
     """Fused query stitch round → ``(next_pos[W], stop_counts[n])``.
 
     One round replaces ``segment_len`` walker supersteps: gather a uniformly
     chosen precomputed segment endpoint per walk and tally the walks whose
     budget ran out. ``pallas`` runs the VMEM-resident fused kernel
-    (interpret mode on CPU); ``ref`` is the pure-jnp oracle. Padding is
-    handled here so callers pass natural shapes.
+    (interpret mode on CPU); ``ref`` is the pure-jnp oracle.
+    ``rng="device"`` (compiled TPU only) draws the slot bits in-kernel from
+    ``seed`` instead of the caller's ``bits`` stream. Padding is handled
+    here so callers pass natural shapes.
     """
     stop = stop.astype(jnp.int32)
-    bits = jnp.abs(bits).astype(jnp.int32)
+    use_device_rng, seed_arr = _rng_mode(rng, interpret, seed)
+    if not use_device_rng:
+        bits = jnp.abs(bits).astype(jnp.int32)
     if impl == "ref":
+        if use_device_rng:
+            raise ValueError('rng="device" has no jnp oracle (impl="ref")')
         return kref.stitch_step_ref(pos, stop, bits, endpoints, n)
     if impl != "pallas":
         raise ValueError(f"unknown impl {impl!r}")
@@ -266,13 +320,62 @@ def stitch_step(
     # next position is discarded by the slice below and they tally nothing.
     pos_p = _pad_to(pos, walk_block)
     stop_p = _pad_to(stop, walk_block)
-    bits_p = _pad_to(bits, walk_block)
+    bits_p = seed_arr if use_device_rng else _pad_to(bits, walk_block)
     nxt, counts = _stitch_step(
         pos_p, stop_p, bits_p, endpoints.reshape(-1), R, n_pad,
         vertex_block=vertex_block, walk_block=walk_block,
-        interpret=interpret,
+        interpret=interpret, use_device_rng=use_device_rng,
     )
     return nxt[:W], counts[:n]
+
+
+def stitch_step_local(
+    pos: jnp.ndarray,
+    stop: jnp.ndarray,
+    bits: Optional[jnp.ndarray],
+    block: jnp.ndarray,      # int32[shard_size, R] — one shard's slab block
+    base,                    # int — first global vertex this shard owns
+    impl: str = "pallas",
+    interpret: bool = True,
+    vertex_block: int = 512,
+    walk_block: int = 1024,
+    rng: str = "caller",
+    seed: Optional[int] = None,
+):
+    """Per-shard stitch round against a local ``[shard_size, R]`` slab block.
+
+    Returns ``(next_contrib[W], stop_counts[shard_size])``: owned walks
+    (``pos ∈ [base, base + shard_size)``) gather their next endpoint from
+    the local block and are tallied into shard-local bins; all other walks
+    contribute 0 — so summing the outputs over shards (``psum`` on a mesh,
+    host sum on one device) reproduces :func:`stitch_step` exactly, while
+    every device holds only ``4·n·R/S`` bytes of slab.
+    """
+    stop = stop.astype(jnp.int32)
+    use_device_rng, seed_arr = _rng_mode(rng, interpret, seed)
+    if not use_device_rng:
+        bits = jnp.abs(bits).astype(jnp.int32)
+    base_arr = jnp.asarray(base, jnp.int32).reshape((1,))
+    if impl == "ref":
+        if use_device_rng:
+            raise ValueError('rng="device" has no jnp oracle (impl="ref")')
+        return kref.stitch_step_local_ref(pos, stop, bits, block, base_arr)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+    W = pos.shape[0]
+    sz, R = block.shape
+    vertex_block = min(vertex_block, max(8, sz))
+    sz_pad = ((sz + vertex_block - 1) // vertex_block) * vertex_block
+    walk_block = min(walk_block, max(8, W))
+    pos_p = _pad_to(pos, walk_block)
+    stop_p = _pad_to(stop, walk_block)
+    bits_p = seed_arr if use_device_rng else _pad_to(bits, walk_block)
+    nxt, counts = _stitch_step_local(
+        pos_p, stop_p, bits_p, base_arr, block.reshape(-1), R, sz, sz_pad,
+        vertex_block=vertex_block, walk_block=walk_block,
+        interpret=interpret, use_device_rng=use_device_rng,
+    )
+    return nxt[:W], counts[:sz]
 
 
 def attention(

@@ -109,6 +109,32 @@ def stitch_step_ref(
     return nxt.astype(jnp.int32), counts
 
 
+def stitch_step_local_ref(
+    pos: jnp.ndarray,        # int32[W] — global vertex per walk
+    stop: jnp.ndarray,       # int32[W] — 1 where the walk halts this round
+    bits: jnp.ndarray,       # int32[W] — uniform bits for the segment slot
+    block: jnp.ndarray,      # int32[shard_size, R] — one shard's slab block
+    base: jnp.ndarray,       # int32[] / int32[1] — first vertex this shard owns
+):
+    """Oracle for the per-shard local-index stitch round.
+
+    Owned walks (``pos ∈ [base, base + shard_size)``) gather from the local
+    block; the rest contribute 0 — outputs sum across shards to the global
+    :func:`stitch_step_ref` result (each walk has exactly one owner).
+    Returns ``(next_contrib int32[W], stop_counts int32[shard_size])``.
+    """
+    sz, R = block.shape
+    base = jnp.asarray(base, jnp.int32).reshape(())
+    local = pos - base
+    owned = (local >= 0) & (local < sz)
+    li = jnp.clip(local, 0, sz - 1)
+    nxt = jnp.where(owned, block[li, bits % R], 0)
+    counts = jnp.zeros((sz + 1,), jnp.int32).at[
+        jnp.where(owned, li, sz)
+    ].add(stop.astype(jnp.int32))[:sz]
+    return nxt.astype(jnp.int32), counts
+
+
 def attention_ref(
     q: jnp.ndarray,                    # [B, Hq, Sq, D]
     k: jnp.ndarray,                    # [B, Hkv, Skv, D]

@@ -2,23 +2,37 @@
 
 The batch reproduction answers one offline top-k question per
 ``frogwild_run``. This subsystem turns the same random-walk machinery into a
-*query* primitive (PowerWalk-style):
+*query* primitive (PowerWalk-style), executing on the shard runtime layer
+(``distributed/runtime.py``):
 
 * ``index.py``     — offline walk-segment index: for every vertex, ``R``
-                     precomputed length-``L`` plain-walk endpoints stored as
-                     a dense ``int32[n, R]`` slab (built shard-by-shard via
-                     ``graph/partition.py``, persisted through
-                     ``checkpoint/``).
+                     precomputed length-``L`` plain-walk endpoints — a
+                     dense ``int32[n, R]`` slab (``WalkIndex``) or, at
+                     scale, range-partitioned ``[shard_size, R]`` blocks
+                     that are never concatenated on a device
+                     (``ShardedWalkIndex``; built per-shard via the
+                     runtime, persisted as per-shard atomic checkpoints,
+                     ``load_walk_index(reassemble=False)``).
 * ``engine.py``    — online stitching: a query walk of Geometric(p_T) total
                      length is composed from ``⌊τ/L⌋`` index segments plus
                      ``τ mod L`` direct steps; Theorem-1 bounds invert into
-                     per-query ``(ε, δ)`` → walk-count/step plans.
-* ``scheduler.py`` — host-side continuous batching: many concurrent top-k /
-                     personalized-PageRank queries share one fixed-shape
-                     device program (fixed walk slots × fixed query slots,
-                     the ``serving/scheduler.py`` design).
+                     per-query ``(ε, δ)`` → walk-count/step plans, clamped
+                     to the index's reuse-free stitch budget with the hit
+                     recorded in ``epsilon_bound``.
+* ``scheduler.py`` — host-side continuous batching with deadline-aware
+                     admission: many concurrent top-k / personalized-
+                     PageRank queries share one fixed-shape device program
+                     (fixed walk slots × fixed query slots). Dense index →
+                     gathered wave; sharded index → one ``shard_map`` whose
+                     devices each hold a single slab block (or the
+                     identical per-shard program as a host loop on one
+                     device). ``submit()`` takes an optional SLO; queries
+                     whose ``(t, N)`` plan cannot fit the remaining wave
+                     budget are rejected or downgraded, and allocation is
+                     earliest-deadline-first within each wave.
 """
 from repro.query.index import (
+    ShardedWalkIndex,
     WalkIndex,
     WalkIndexConfig,
     build_walk_index,
@@ -26,6 +40,7 @@ from repro.query.index import (
     load_walk_index,
     save_walk_index,
     save_walk_index_shard,
+    shard_walk_index,
 )
 from repro.query.engine import (
     QueryPlan,
@@ -34,9 +49,15 @@ from repro.query.engine import (
     sample_walk_lengths,
     walk_wave,
 )
-from repro.query.scheduler import QueryRequest, QueryResult, QueryScheduler
+from repro.query.scheduler import (
+    AdmissionDecision,
+    QueryRequest,
+    QueryResult,
+    QueryScheduler,
+)
 
 __all__ = [
+    "ShardedWalkIndex",
     "WalkIndex",
     "WalkIndexConfig",
     "build_walk_index",
@@ -44,11 +65,13 @@ __all__ = [
     "load_walk_index",
     "save_walk_index",
     "save_walk_index_shard",
+    "shard_walk_index",
     "QueryPlan",
     "plan_query",
     "query_counts",
     "sample_walk_lengths",
     "walk_wave",
+    "AdmissionDecision",
     "QueryRequest",
     "QueryResult",
     "QueryScheduler",

@@ -76,20 +76,36 @@ def plan_query(
     p_T: float = 0.15,
     max_walks: Optional[int] = None,
     max_steps: int = 64,
+    segments_per_vertex: Optional[int] = None,
+    segment_len: Optional[int] = None,
 ) -> QueryPlan:
     """Inverts Theorem 1 into ``(t, N)`` at ``p_s = 1``.
 
     mixing_term(p_T, t) ≤ ε/2  ⇔  (1−p_T)^{t+1} ≤ (ε/2)² p_T
     sampling_term = √(k/(δN)) ≤ ε/2  ⇔  N ≥ 4k/(δ ε²)
+
+    With the serving index's ``(segments_per_vertex, segment_len)`` =
+    ``(R, L)`` given, ``t`` is additionally clamped to the reuse-free stitch
+    budget ``⌊t/L⌋ ≤ R`` (i.e. ``t ≤ R·L + L − 1``): beyond it a walk can
+    reread a slab cell and the stitched marginal is biased (see
+    :func:`check_segment_budget`), so the plan trades the silent bias for
+    an honest, *recorded* truncation — ``epsilon_bound`` then exceeds the
+    requested ``epsilon`` exactly as for any other binding cap.
     """
     if not (0.0 < epsilon):
         raise ValueError(f"epsilon must be positive, got {epsilon}")
+    if (segments_per_vertex is None) != (segment_len is None):
+        raise ValueError(
+            "segments_per_vertex and segment_len come as a pair (the "
+            "index's (R, L)); got only one of them")
     target = (epsilon / 2.0) ** 2 * p_T
     if target >= 1.0:
         t = 1
     else:
         t = max(1, math.ceil(math.log(target) / math.log(1.0 - p_T) - 1.0))
     t = min(t, max_steps)
+    if segments_per_vertex is not None:
+        t = min(t, segments_per_vertex * segment_len + segment_len - 1)
     n_walks = max(1, math.ceil(4.0 * k / (delta * epsilon**2)))
     if max_walks is not None:
         n_walks = min(n_walks, max_walks)
@@ -106,6 +122,11 @@ def check_segment_budget(segments_per_vertex: int, num_rounds: int) -> None:
     a vertex R rounds later rereads a cell and deterministically repeats the
     hop — a small statistical bias. Serving still works, but the exactness
     claim doesn't hold; rebuild the index with R ≥ t/L to restore it.
+
+    Planned queries never get here: :func:`plan_query` given the index's
+    ``(R, L)`` clamps ``t`` to the reuse-free budget up front and records
+    the truncation in ``epsilon_bound`` — this warning is the safety net
+    for hand-built plans / direct ``walk_wave`` callers.
     """
     if num_rounds > segments_per_vertex:
         warnings.warn(

@@ -10,43 +10,54 @@ guarantees a walk never rereads a cell and its composed marginal is exact;
 cell sharing across walks only adds variance (tests/test_query.py checks
 the distribution statistically).
 
-Build is sharded via ``graph/partition.py``: one fixed-shape jitted program
-walks ``shard_size · R`` frogs for ``L`` steps, invoked once per range shard
-(the shard loop is the host-side analogue of the engine's vertex sharding —
-peak device memory is one shard's walk batch, not ``n · R``). The inner step
-is a batched variant of the walker superstep and can run through the fused
-Pallas kernels (``step_impl="pallas"`` for the VMEM-resident kernel,
-``"stream"`` for the HBM-streaming sorted-frog kernel, ``"auto"`` to pick by
-VMEM budget).
+The full slab is ``4·n·R`` bytes — the Twitter-scale memory hog — so the
+index exists in two forms:
 
-Two build drivers share that step:
+* :class:`WalkIndex` — the dense slab (single-device serving, small n);
+* :class:`ShardedWalkIndex` — the slab as ``num_shards`` range-partitioned
+  ``[shard_size, R]`` blocks that are **never concatenated on a device**:
+  the sharded :class:`~repro.query.scheduler.QueryScheduler` wave gathers
+  each walk's next segment from the block of the shard that owns its
+  current vertex, so peak per-device slab memory is ``4·n·R/S`` bytes.
+
+Build is sharded via ``graph/partition.py``; the per-shard step program is
+shared between two drivers built on the one shard-execution layer
+(``distributed/runtime.py``):
 
 * :func:`build_walk_index` — the host shard loop (single device);
 * :func:`build_walk_index_sharded` — the same per-shard program as one
-  ``shard_map`` over the engine's ``"vertex"`` mesh axis: every device
-  materializes only its own ``[shard_size, R]`` slab block (the full slab is
-  ``4nR`` bytes — the Twitter-scale memory hog), and per-shard blocks are
-  persisted independently.
+  ``shard_map`` over the runtime's ``"vertex"`` mesh axis: every device
+  materializes only its own ``[shard_size, R]`` slab block, and per-shard
+  blocks are persisted independently.
 
-Persistence goes through ``checkpoint/`` (atomic step directories), so index
+The inner step is a batched variant of the walker superstep and can run
+through the fused Pallas kernels (``step_impl="pallas"`` for the
+VMEM-resident kernel, ``"stream"`` for the HBM-streaming sorted-frog
+kernel, ``"auto"`` to pick by VMEM budget).
+
+Persistence goes through ``checkpoint/`` atomic step directories, so index
 builds inherit the crash-safety and GC story of model checkpoints. A
-sharded build writes one checkpoint dir per shard
-(``<dir>/shard_<s>/step_<k>/`` via :func:`save_walk_index_shard`);
-:func:`load_walk_index` detects the sharded layout and reassembles the
-slab, so readers are agnostic to how the index was built.
+sharded build writes one checkpoint dir per shard (``<dir>/shard_<s>/
+step_<k>/``, the runtime's per-shard round-trip); :func:`load_walk_index`
+detects the sharded layout and either reassembles the slab
+(``reassemble=True``, the legacy reader) or hands the per-shard blocks
+straight to the serving layer (``reassemble=False`` →
+:class:`ShardedWalkIndex` — no device ever sees the full slab).
 """
 from __future__ import annotations
 
 import dataclasses
-import json
-import os
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.checkpoint import latest_step, save_checkpoint
+from repro.distributed.runtime import (ShardRuntime, list_shard_dirs,
+                                       load_checkpoint_tree,
+                                       load_shard_checkpoints,
+                                       save_shard_checkpoint)
 from repro.graph.csr import CSRGraph, uniform_successor
 from repro.graph.partition import partition_graph
 
@@ -81,6 +92,69 @@ class WalkIndex:
     @property
     def segments_per_vertex(self) -> int:
         return int(self.endpoints.shape[1])
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedWalkIndex:
+    """The walk-index slab as range-partitioned per-shard blocks.
+
+    ``blocks[s]`` holds the ``[shard_size, R]`` endpoints of vertices
+    ``[s · shard_size, (s+1) · shard_size)`` (host memory; the sharded
+    scheduler places block ``s`` on device ``s`` of the serving mesh, or
+    feeds blocks one at a time on a single device — the full slab is never
+    concatenated on any device).
+
+    Attributes:
+      blocks:      int32[S, shard_size, R] — host-side stacked blocks.
+      n:           true vertex count (``S · shard_size ≥ n``; padded rows
+                   are never gathered — walk positions are graph vertices).
+      segment_len: L, steps per precomputed segment.
+      seed:        build seed (provenance).
+    """
+
+    blocks: np.ndarray
+    n: int
+    segment_len: int
+    seed: int
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.blocks.shape[0])
+
+    @property
+    def shard_size(self) -> int:
+        return int(self.blocks.shape[1])
+
+    @property
+    def segments_per_vertex(self) -> int:
+        return int(self.blocks.shape[2])
+
+    def reassemble(self) -> WalkIndex:
+        """Dense slab (tests / the legacy gathered serving path) — this is
+        exactly the concatenation the sharded scheduler avoids."""
+        S, sz, R = self.blocks.shape
+        return WalkIndex(
+            endpoints=jnp.asarray(
+                self.blocks.reshape(S * sz, R)[: self.n], jnp.int32),
+            segment_len=self.segment_len,
+            seed=self.seed,
+        )
+
+
+def shard_walk_index(index: WalkIndex, num_shards: int) -> ShardedWalkIndex:
+    """Range-partitions a dense index into serving blocks.
+
+    Rows are padded to a ``num_shards`` multiple; padded rows are zero and
+    unreachable (walk positions are always real graph vertices < n).
+    """
+    n, R = index.endpoints.shape
+    sz = -(-n // num_shards)
+    ep = np.zeros((num_shards * sz, R), np.int32)
+    ep[:n] = np.asarray(index.endpoints)
+    return ShardedWalkIndex(
+        blocks=ep.reshape(num_shards, sz, R), n=n,
+        segment_len=index.segment_len, seed=index.seed,
+    )
 
 
 def _segment_step(row_ptr, col_idx, deg, n, step_impl, pos, key):
@@ -133,7 +207,8 @@ class _ShardWalker:
 def build_walk_index(
     g: CSRGraph, cfg: WalkIndexConfig, key: Optional[jax.Array] = None
 ) -> WalkIndex:
-    """Builds the ``int32[n, R]`` endpoint slab, one range shard at a time."""
+    """Builds the ``int32[n, R]`` endpoint slab, one range shard at a time
+    (the runtime's single-device host-loop dispatch)."""
     if cfg.segment_len < 1:
         raise ValueError(f"segment_len must be ≥ 1, got {cfg.segment_len}")
     if key is None:
@@ -144,10 +219,10 @@ def build_walk_index(
         shard_size=part.shard_size, cfg=cfg,
     )
     run = jax.jit(walker.__call__)
-    blocks = []
-    for s in range(cfg.num_shards):
-        lo, _ = part.bounds(s)
-        blocks.append(np.asarray(run(jnp.int32(lo), jax.random.fold_in(key, s))))
+    rt = ShardRuntime(num_shards=cfg.num_shards, mesh=None)
+    blocks = rt.map_shards(
+        lambda s: np.asarray(
+            run(jnp.int32(part.bounds(s)[0]), jax.random.fold_in(key, s))))
     endpoints = np.concatenate(blocks, axis=0)[: g.n]
     return WalkIndex(
         endpoints=jnp.asarray(endpoints, dtype=jnp.int32),
@@ -164,37 +239,38 @@ def build_walk_index_sharded(
     key: Optional[jax.Array] = None,
     axis_name: str = "vertex",
     step: int = 0,
-) -> WalkIndex:
+    reassemble: bool = True,
+) -> Union[WalkIndex, ShardedWalkIndex]:
     """Builds the slab as **one** ``shard_map`` program over ``mesh``.
 
     Each device walks its own range shard's ``shard_size · R`` segment
     frogs and materializes only its ``[shard_size, R]`` slab block
     (``out_specs=P(axis_name)`` — device memory holds ``4nR/S`` bytes of
-    slab, the engine-mesh answer to the ROADMAP's "distributed index build
-    + sharded slab" follow-up). The graph CSR is closed over (replicated);
-    per-shard randomness is ``fold_in(key, shard)``, so a shard's block is
-    reproducible independent of mesh shape.
+    slab). The graph CSR is closed over (replicated); per-shard randomness
+    is ``fold_in(key, shard)`` via the runtime's :meth:`ShardRuntime.
+    shard_key`, so a shard's block is reproducible independent of mesh
+    shape.
 
     With ``directory`` set, every shard's block is persisted as its own
     atomic checkpoint (``save_walk_index_shard``) before the function
-    returns; ``load_walk_index`` reassembles them.
+    returns. ``reassemble=False`` returns the :class:`ShardedWalkIndex`
+    blocks directly (the sharded-serving input); the default reassembles
+    the dense :class:`WalkIndex` for legacy readers.
     """
     if cfg.segment_len < 1:
         raise ValueError(f"segment_len must be ≥ 1, got {cfg.segment_len}")
     if key is None:
         key = jax.random.PRNGKey(cfg.seed)
-    from jax.sharding import PartitionSpec as P
-
-    S = mesh.devices.size
+    rt = ShardRuntime.for_mesh(mesh, axis_name)
+    S = rt.num_shards
     gp, part = partition_graph(g, S)
     sz = part.shard_size
     R, L = cfg.segments_per_vertex, cfg.segment_len
     row_ptr, col_idx, deg = gp.row_ptr, gp.col_idx, gp.out_deg
 
     def body(key_data):
+        k = ShardRuntime.shard_key(key_data, axis_name)
         me = jax.lax.axis_index(axis_name)
-        k = jax.random.fold_in(
-            jax.random.wrap_key_data(key_data, impl="threefry2x32"), me)
         pos0 = me * sz + jnp.repeat(
             jnp.arange(sz, dtype=jnp.int32), R, total_repeat_length=sz * R)
 
@@ -208,21 +284,17 @@ def build_walk_index_sharded(
     # check_vma=False: jax has no replication rule for pallas_call, and the
     # fused step backends lower through one (the body is trivially
     # per-shard — nothing cross-device to check).
-    fn = jax.jit(jax.shard_map(
-        body, mesh=mesh, in_specs=(P(),), out_specs=P(axis_name),
-        check_vma=False))
-    blocks = np.asarray(fn(jax.random.key_data(key)))        # [S, sz, R]
+    fn = rt.sharded_call(body, num_sharded=0, num_replicated=1,
+                         check_vma=False)
+    blocks = np.asarray(fn(ShardRuntime.key_data(key)))      # [S, sz, R]
     if directory is not None:
         for s in range(S):
             save_walk_index_shard(
                 directory, s, S, g.n, blocks[s], cfg.segment_len, cfg.seed,
                 step=step)
-    return WalkIndex(
-        endpoints=jnp.asarray(blocks.reshape(S * sz, R)[: g.n],
-                              dtype=jnp.int32),
-        segment_len=cfg.segment_len,
-        seed=cfg.seed,
-    )
+    sharded = ShardedWalkIndex(blocks=blocks, n=g.n,
+                               segment_len=cfg.segment_len, seed=cfg.seed)
+    return sharded.reassemble() if reassemble else sharded
 
 
 # --- persistence (checkpoint/ atomic step directories) ----------------------
@@ -236,10 +308,6 @@ def _index_tree(index: WalkIndex) -> dict:
     }
 
 
-def _shard_dir(directory: str, shard: int) -> str:
-    return os.path.join(directory, f"shard_{shard:04d}")
-
-
 def save_walk_index_shard(
     directory: str,
     shard: int,
@@ -250,12 +318,13 @@ def save_walk_index_shard(
     seed: int,
     step: int = 0,
 ) -> str:
-    """Atomic save of one shard's slab block under
-    ``<directory>/shard_<s>/step_<k>/`` — each shard is an independent
-    checkpoint dir, so a sharded build can persist (and crash/retry) one
-    shard at a time without ever exposing a torn slab."""
+    """Atomic save of one shard's slab block through the runtime's
+    per-shard checkpoint layout (``<directory>/shard_<s>/step_<k>/``) —
+    each shard is an independent checkpoint dir, so a sharded build can
+    persist (and crash/retry) one shard at a time without ever exposing a
+    torn slab."""
     block = jnp.asarray(block, dtype=jnp.int32)
-    return save_checkpoint(_shard_dir(directory, shard), step, {
+    return save_shard_checkpoint(directory, shard, {
         "endpoints": block,
         "segment_len": jnp.int32(segment_len),
         "seed": jnp.int32(seed),
@@ -263,7 +332,7 @@ def save_walk_index_shard(
         "num_shards": jnp.int32(num_shards),
         "n": jnp.int32(n),
         "segments_per_vertex": jnp.int32(block.shape[1]),
-    })
+    }, step=step)
 
 
 def save_walk_index(directory: str, index: WalkIndex, step: int = 0) -> str:
@@ -271,50 +340,36 @@ def save_walk_index(directory: str, index: WalkIndex, step: int = 0) -> str:
     return save_checkpoint(directory, step, _index_tree(index))
 
 
-def _load_checkpoint_tree(directory: str, step: int) -> dict:
-    # Reconstruct the restore template from the checkpoint's own metadata —
-    # the index is self-describing, callers need not know (n, R) up front.
-    with open(os.path.join(directory, f"step_{step:08d}", "tree.json")) as f:
-        meta = json.load(f)
-    like = {
-        path: np.zeros(shape, dtype=np.dtype(dtype))
-        for path, shape, dtype in zip(
-            meta["paths"], meta["shapes"], meta["dtypes"])
-    }
-    return restore_checkpoint(directory, step, like)
-
-
-def load_walk_index(directory: str, step: Optional[int] = None) -> WalkIndex:
+def load_walk_index(
+    directory: str, step: Optional[int] = None, reassemble: bool = True
+) -> Union[WalkIndex, ShardedWalkIndex]:
     """Restores the latest (or given) index build from ``directory``.
 
     Handles both layouts: a monolithic ``save_walk_index`` checkpoint, and
-    the per-shard layout written by a sharded build
-    (``<directory>/shard_<s>/step_<k>/``), whose blocks are validated
-    (all shards present, consistent metadata) and reassembled into the
-    dense slab.
+    the per-shard layout written by a sharded build (``<directory>/
+    shard_<s>/step_<k>/``), whose blocks are validated (all shards
+    present, consistent metadata). ``reassemble=True`` concatenates them
+    into the dense slab (legacy readers); ``reassemble=False`` hands the
+    per-shard blocks to the caller as a :class:`ShardedWalkIndex` — the
+    sharded scheduler's input, with no full-slab concatenation (a
+    monolithic checkpoint is returned as a single-shard index).
     """
-    shard_dirs = sorted(
-        d for d in (os.listdir(directory) if os.path.isdir(directory) else [])
-        if d.startswith("shard_"))
+    shard_dirs = list_shard_dirs(directory)
     if not shard_dirs:
         if step is None:
             step = latest_step(directory)
             if step is None:
                 raise FileNotFoundError(f"no walk index under {directory!r}")
-        tree = _load_checkpoint_tree(directory, step)
-        return WalkIndex(
-            endpoints=tree["endpoints"],
+        tree = load_checkpoint_tree(directory, step)
+        index = WalkIndex(
+            endpoints=jnp.asarray(tree["endpoints"], jnp.int32),
             segment_len=int(tree["segment_len"]),
             seed=int(tree["seed"]),
         )
+        return index if reassemble else shard_walk_index(index, 1)
 
     blocks, meta = {}, None
-    for d in shard_dirs:
-        sdir = os.path.join(directory, d)
-        s_step = latest_step(sdir) if step is None else step
-        if s_step is None:
-            raise FileNotFoundError(f"no checkpoint under {sdir!r}")
-        tree = _load_checkpoint_tree(sdir, s_step)
+    for tree in load_shard_checkpoints(directory, step).values():
         cur = (int(tree["num_shards"]), int(tree["n"]),
                int(tree["segment_len"]), int(tree["seed"]),
                int(tree["segments_per_vertex"]))
@@ -330,10 +385,9 @@ def load_walk_index(directory: str, step: Optional[int] = None) -> WalkIndex:
     if missing:
         raise FileNotFoundError(
             f"walk index under {directory!r} is missing shards {missing}")
-    endpoints = np.concatenate(
-        [blocks[s] for s in range(num_shards)], axis=0)[:n]
-    return WalkIndex(
-        endpoints=jnp.asarray(endpoints, dtype=jnp.int32),
-        segment_len=segment_len,
-        seed=seed,
+    sharded = ShardedWalkIndex(
+        blocks=np.stack([blocks[s] for s in range(num_shards)]).astype(
+            np.int32),
+        n=n, segment_len=segment_len, seed=seed,
     )
+    return sharded.reassemble() if reassemble else sharded

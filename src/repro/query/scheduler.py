@@ -1,22 +1,46 @@
-"""Host-side continuous-batching query scheduler (fixed-slot design).
+"""Host-side continuous-batching query scheduler (fixed-slot design) with
+sharded-slab serving and deadline-aware admission.
 
 The device program is one fixed shape — ``max_walks`` walk slots ×
 ``max_queries`` query slots — and scheduling is pure host logic, exactly the
 ``serving/scheduler.py`` contract. Each wave:
 
-  admit     queued queries claim free query slots;
-  allocate  walk slots are split fairly among active queries (equal shares,
-            leftovers greedily), so a million-walk query cannot starve a
-            cheap PPR probe — continuous batching, not generational: a query
-            spanning several waves keeps its slot while finished queries
-            free theirs mid-flight;
-  execute   one jitted wave program advances all walks (residual steps +
-            index stitching, ``query/engine.py``) and histograms endpoints
-            into per-query-slot bins with a single sort-based
-            ``frog_count`` over ``(Q + 1) · n`` bins (row Q discards idle
-            slots);
+  admit     queued queries claim free query slots, earliest deadline first;
+  allocate  walk slots are split fairly among active queries (equal shares),
+            with shares and leftovers handed out in earliest-deadline-first
+            order — continuous batching, not generational: a query spanning
+            several waves keeps its slot while finished queries free theirs
+            mid-flight;
+  execute   one wave program advances all walks (residual steps + index
+            stitching, ``query/engine.py``) and histograms endpoints into
+            per-query-slot bins;
   retire    queries whose walk budget completed finalize top-k from their
             accumulated counters and release the slot.
+
+**Execution dispatch** (the ``distributed/runtime.py`` layer): with a dense
+:class:`~repro.query.index.WalkIndex` the wave is the single-device gathered
+program (whole slab resident). With a :class:`~repro.query.index.
+ShardedWalkIndex` the slab is *never reassembled*: on a mesh the wave runs
+as one ``shard_map`` over the runtime's ``"vertex"`` axis — device ``s``
+holds only its ``[shard_size, R]`` slab block, each stitch round routes
+every walk to the shard owning its current vertex by endpoint range
+(masked local gather), per-shard partial results are reduced with ``psum``,
+and the tally lands in shard-local bins (``out_specs=P(axis)``). On a
+single device the identical per-shard program runs as the runtime's host
+loop, one block resident at a time. All three paths draw from the same key
+stream, so with the same slab content they produce byte-identical answers
+(tests assert it).
+
+**Admission** is deadline-aware: ``QueryRequest.slo_s`` declares a latency
+SLO, and ``submit()`` checks the Theorem-1 ``(t, N)`` plan against the
+remaining wave budget (measured wave time × waves needed at full machine
+allocation — the FAST-PPR-style per-query budget). An infeasible query is
+rejected up front, or — with ``allow_downgrade`` — its walk count is
+clamped to what fits and the weakened guarantee is *recorded* in
+``QueryPlan.epsilon_bound`` (never a silent miss). Plans are also clamped
+to the index's reuse-free stitch budget (``plan_query(segments_per_vertex,
+segment_len)``), so an undersized index degrades to an honest, recorded
+``epsilon_bound`` instead of a silent statistical bias.
 
 Different queries in one wave may have different planned truncations ``t``
 (per-walk ``t_cap``) and different kinds (global top-k draws uniform starts,
@@ -26,18 +50,20 @@ changes, so XLA compiles exactly once per scheduler.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.runtime import ShardRuntime
 from repro.graph.csr import CSRGraph
 from repro.kernels import ops
-from repro.query.engine import (check_segment_budget, plan_query,
-                                sample_walk_lengths, walk_wave)
-from repro.query.index import WalkIndex
+from repro.query.engine import (QueryPlan, _plain_steps, plan_query,
+                                sample_walk_lengths)
+from repro.query.index import ShardedWalkIndex, WalkIndex
 
 
 @dataclasses.dataclass
@@ -49,7 +75,28 @@ class QueryRequest:
     epsilon: float = 0.3
     delta: float = 0.1
     num_walks: Optional[int] = None  # override the (ε, δ) plan's walk count
+    slo_s: Optional[float] = None    # latency SLO (deadline = submit + slo_s)
+    allow_downgrade: bool = False    # shrink the plan to fit the SLO budget
     t_submit: Optional[float] = None # stamped by QueryScheduler.submit()
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    """What the admission controller did with a ``submit()``.
+
+    ``admitted=False`` means the request was dropped at the door (its
+    Theorem-1 plan cannot fit the remaining wave budget before the
+    deadline); ``downgraded=True`` means it was admitted with a clamped
+    walk count whose weaker guarantee is recorded in
+    ``plan.epsilon_bound``.
+    """
+
+    rid: int
+    admitted: bool
+    reason: str = ""
+    downgraded: bool = False
+    plan: Optional[QueryPlan] = None
+    num_walks: int = 0
 
 
 @dataclasses.dataclass
@@ -62,24 +109,38 @@ class QueryResult:
     num_steps: int
     waves: int                       # device waves this query spanned
     latency_s: float
+    epsilon_bound: float = 0.0       # the ε Theorem 1 certifies for (t, N)
+    downgraded: bool = False         # admission shrank the plan to fit SLO
+    met_slo: Optional[bool] = None   # None when no SLO was requested
+
+
+@dataclasses.dataclass
+class _Queued:
+    req: QueryRequest
+    plan: QueryPlan
+    walks: int
+    deadline: float                  # math.inf when no SLO
+    downgraded: bool
 
 
 @dataclasses.dataclass
 class _Active:
     req: QueryRequest
-    num_steps: int
+    plan: QueryPlan
     remaining: int
     total_walks: int
     counts: np.ndarray               # int64[n] accumulator
     waves: int
     t_submit: float
+    deadline: float
+    downgraded: bool
 
 
 class QueryScheduler:
     def __init__(
         self,
         g: CSRGraph,
-        index: WalkIndex,
+        index: Union[WalkIndex, ShardedWalkIndex],
         max_walks: int = 8192,
         max_queries: int = 8,
         max_steps: int = 32,
@@ -87,6 +148,8 @@ class QueryScheduler:
         impl: str = "xla",
         tally_impl: str = "ref",
         seed: int = 0,
+        runtime: Optional[ShardRuntime] = None,
+        wave_time_estimate_s: Optional[float] = None,
     ):
         self.g = g
         self.index = index
@@ -96,37 +159,83 @@ class QueryScheduler:
         self.p_T = p_T
         self.impl = impl
         self.tally_impl = tally_impl
-        check_segment_budget(index.segments_per_vertex,
-                             max_steps // index.segment_len)
-        self.queue: List[QueryRequest] = []
+        self.queue: List[_Queued] = []
         self.active: Dict[int, _Active] = {}
         self.finished: List[QueryResult] = []
+        self.rejected: List[AdmissionDecision] = []
         self._key = jax.random.PRNGKey(seed)
-        self._wave_fn = self._build_wave_fn()
+        self._wave_time = wave_time_estimate_s   # EMA of measured wave s
+        self._waves_run = 0
+        if isinstance(index, ShardedWalkIndex):
+            self.runtime = (runtime if runtime is not None
+                            else ShardRuntime.acquire(index.num_shards))
+            if self.runtime.num_shards != index.num_shards:
+                raise ValueError(
+                    f"runtime has {self.runtime.num_shards} shards, index "
+                    f"has {index.num_shards}")
+            if self.runtime.is_mesh:
+                self._wave = self._build_mesh_wave()
+            else:
+                self._wave = self._build_loop_wave()
+        else:
+            self.runtime = runtime
+            self._wave = self._build_gathered_wave()
 
-    # --- device program (compiled once) ---------------------------------
+    # --- device programs (each compiled once) ----------------------------
 
-    def _build_wave_fn(self):
-        g, index = self.g, self.index
-        n, W, Q = g.n, self.max_walks, self.max_queries
-        L = index.segment_len
-        q_max = self.max_steps // L
-        p_T, impl = self.p_T, self.impl
-        row_ptr, col_idx, deg = g.row_ptr, g.col_idx, g.out_deg
-        endpoints = index.endpoints
+    @property
+    def _q_max(self) -> int:
+        return self.max_steps // self.index.segment_len
+
+    def _wave_prep(self, start, uniform, t_cap, key):
+        """Shared wave prologue: starts, lengths, residual steps, slot
+        offsets — one definition so the gathered, mesh, and host-loop waves
+        consume the *same* key stream and agree byte-for-byte."""
+        g, W = self.g, self.max_walks
+        L = self.index.segment_len
+        k_start, k_tau, k_walk = jax.random.split(key, 3)
+        pos0 = jnp.where(
+            uniform,
+            jax.random.randint(k_start, (W,), 0, g.n, dtype=jnp.int32),
+            start,
+        )
+        tau = sample_walk_lengths(k_tau, W, self.p_T, t_cap)
+        k_res, k_slot = jax.random.split(k_walk)
+        q = tau // L
+        pos = _plain_steps(g.row_ptr, g.col_idx, g.out_deg, pos0, tau % L,
+                           k_res, L)
+        s0 = jax.random.randint(k_slot, pos.shape, 0, 1 << 30, jnp.int32)
+        return pos, q, s0
+
+    def _build_gathered_wave(self):
+        """Single-device wave against the dense slab.
+
+        Structurally the one-shard case of the sharded waves: the same
+        :meth:`_wave_prep` prologue and :meth:`_stitch_rounds` loop, with
+        the whole slab as the (only) shard's block — which is what makes
+        the byte-identical gathered-vs-sharded contract hold by
+        construction rather than by parallel-edit discipline.
+        """
+        index = self.index
+        n, Q = self.g.n, self.max_queries
+        R, impl = index.segments_per_vertex, self.impl
+        endpoints_flat = index.endpoints.reshape(-1)
 
         def wave(start, uniform, qid, t_cap, key):
-            k_start, k_tau, k_walk = jax.random.split(key, 3)
-            pos0 = jnp.where(
-                uniform,
-                jax.random.randint(k_start, (W,), 0, n, dtype=jnp.int32),
-                start,
-            )
-            tau = sample_walk_lengths(k_tau, W, p_T, t_cap)
-            pos, _ = walk_wave(
-                row_ptr, col_idx, deg, endpoints, pos0, tau, k_walk,
-                L, q_max, impl=impl,
-            )
+            pos, q, s0 = self._wave_prep(start, uniform, t_cap, key)
+
+            def round_fn(pos, j):
+                if impl == "xla":
+                    return jnp.take(endpoints_flat,
+                                    pos * R + (s0 + j) % R, axis=0)
+                # fused stitch kernel; its per-round tally is discarded —
+                # the wave tallies once over final positions below.
+                nxt, _ = ops.stitch_step(
+                    pos, (q == j).astype(jnp.int32), s0 + j,
+                    index.endpoints, n, impl=impl)
+                return nxt
+
+            pos = self._stitch_rounds(pos, q, round_fn)
             # one histogram for the whole wave: vertex id offset by the
             # walk's query slot; row Q is the idle-slot discard bin.
             # ``tally_impl``: "ref" (XLA scatter-add — fastest on CPU) or
@@ -135,11 +244,139 @@ class QueryScheduler:
                                     impl=self.tally_impl)
             return counts.reshape(Q + 1, n)[:Q]
 
-        return jax.jit(wave)
+        fn = jax.jit(wave)
+        return lambda *args: np.asarray(fn(*args))
 
-    # --- host scheduling --------------------------------------------------
+    def _shard_round(self, block_flat, base, pos, q, s0, j):
+        """One stitch round against one shard's slab block: owned walks
+        gather their next endpoint, everyone else contributes the additive
+        identity — results sum across shards (psum / host sum)."""
+        R = self.index.segments_per_vertex
+        sz = self.index.shard_size
+        if self.impl == "xla":
+            slot = (s0 + j) % R
+            local = pos - base
+            mine = (local >= 0) & (local < sz)
+            li = jnp.clip(local, 0, sz - 1)
+            nxt = jnp.take(block_flat, li * R + slot, axis=0)
+            return jnp.where(mine & (j < q), nxt, 0)
+        # fused local-index stitch kernel ("pallas" | "ref"): same masked
+        # gather + shard-local tally in one pass; the per-round tally is
+        # discarded here (the wave tallies once over final positions).
+        nxt, _ = ops.stitch_step_local(
+            pos, (q == j).astype(jnp.int32), s0 + j,
+            block_flat.reshape(sz, R), base, impl=self.impl)
+        return jnp.where(j < q, nxt, 0)
 
-    def submit(self, req: QueryRequest) -> None:
+    def _shard_tally(self, pos, qid, base):
+        """Shard-local per-query-slot histogram: walks whose final vertex
+        this shard owns land in its ``[Q, shard_size]`` bins; the rest
+        (other shards' walks + idle slots via ``qid == Q``) are discarded."""
+        Q = self.max_queries
+        sz = self.index.shard_size
+        local = pos - base
+        mine = (local >= 0) & (local < sz)
+        bins = jnp.where(mine, qid * sz + jnp.clip(local, 0, sz - 1),
+                         (Q + 1) * sz)
+        counts = ops.frog_count(bins, (Q + 1) * sz + 1, impl=self.tally_impl)
+        return counts[: (Q + 1) * sz].reshape(Q + 1, sz)[:Q]
+
+    def _stitch_rounds(self, pos, q, round_fn):
+        """Applies ``q_max`` stitch rounds where ``round_fn(pos, j)`` sums
+        per-shard contributions; stopped walks (``j ≥ q``) keep their
+        position. Shared by the mesh and host-loop waves."""
+        for j in range(self._q_max):
+            nxt = round_fn(pos, j)
+            pos = jnp.where(j < q, nxt, pos)
+        return pos
+
+    def _build_mesh_wave(self):
+        """Sharded wave: one ``shard_map`` over the runtime's vertex axis.
+
+        Device ``s`` holds only slab block ``s`` (``in_specs=P(axis)``) and
+        its ``[Q, shard_size]`` tally rows (``out_specs=P(axis)``); walk
+        state is replicated and advanced identically on every device, with
+        the per-round gather contribution reduced by ``psum``.
+        """
+        rt, index = self.runtime, self.index
+        Q = self.max_queries
+        sz = index.shard_size
+        ax = rt.axis_name
+
+        def body(blocks, start, uniform, qid, t_cap, key_data):
+            block_flat = blocks[0].reshape(-1)
+            base = jax.lax.axis_index(ax) * sz
+            key = jax.random.wrap_key_data(key_data, impl="threefry2x32")
+            pos, q, s0 = self._wave_prep(start, uniform, t_cap, key)
+
+            def round_fn(pos, j):
+                contrib = self._shard_round(block_flat, base, pos, q, s0, j)
+                # every walk is owned by exactly one shard; stopped walks
+                # contribute 0 everywhere and are restored by the caller.
+                return jax.lax.psum(contrib, ax)
+
+            pos = self._stitch_rounds(pos, q, round_fn)
+            return self._shard_tally(pos, qid, base)[None]
+
+        # check_vma=False: the fused stitch backends lower through
+        # pallas_call (no replication rule), and the body mixes replicated
+        # walk state with per-shard slab blocks by construction.
+        fn = rt.sharded_call(body, num_sharded=1, num_replicated=5,
+                             check_vma=False)
+        # kept as an attribute so tests can assert the per-device placement
+        # (each device holds exactly one [shard_size, R] block — 4nR/S
+        # bytes of slab, never the whole thing).
+        self._placed_blocks = blocks = rt.place_sharded(
+            jnp.asarray(self.index.blocks))
+
+        def wave(start, uniform, qid, t_cap, key):
+            out = np.asarray(fn(blocks, start, uniform, qid, t_cap,
+                                ShardRuntime.key_data(key)))  # [S, Q, sz]
+            return out.transpose(1, 0, 2).reshape(Q, -1)[:, : self.g.n]
+
+        return wave
+
+    def _build_loop_wave(self):
+        """Sharded wave on a single device: the runtime's host-loop
+        dispatch of the identical per-shard program — one ``[shard_size,
+        R]`` block resident per call, cross-shard sums on the host."""
+        rt, index = self.runtime, self.index
+        Q = self.max_queries
+        sz = index.shard_size
+
+        prep = jax.jit(lambda start, uniform, t_cap, key:
+                       self._wave_prep(start, uniform, t_cap, key))
+        round_s = jax.jit(self._shard_round)
+        tally_s = jax.jit(self._shard_tally)
+        blocks = [jnp.asarray(index.blocks[s].reshape(-1))
+                  for s in range(rt.num_shards)]
+
+        def wave(start, uniform, qid, t_cap, key):
+            pos, q, s0 = prep(start, uniform, t_cap, key)
+
+            def round_fn(pos, j):
+                contribs = rt.map_shards(
+                    lambda s: round_s(blocks[s], jnp.int32(s * sz),
+                                      pos, q, s0, jnp.int32(j)))
+                return sum(contribs)
+
+            pos = self._stitch_rounds(pos, q, round_fn)
+            out = np.stack(rt.map_shards(
+                lambda s: np.asarray(tally_s(pos, qid, jnp.int32(s * sz)))))
+            return out.transpose(1, 0, 2).reshape(Q, -1)[:, : self.g.n]
+
+        return wave
+
+    # --- admission (deadline-aware) --------------------------------------
+
+    def submit(self, req: QueryRequest) -> AdmissionDecision:
+        """Validates, plans, and admission-checks a request.
+
+        Returns the :class:`AdmissionDecision`; rejected requests are
+        recorded in ``self.rejected`` and never enter the queue. The
+        latency clock starts here, so queue wait counts toward both
+        ``latency_s`` and the SLO.
+        """
         if req.num_walks is not None and req.num_walks <= 0:
             raise ValueError(
                 f"request {req.rid}: num_walks must be positive, got "
@@ -150,35 +387,98 @@ class QueryScheduler:
                 f"[0, {self.g.n})")
         if req.kind not in ("topk", "ppr"):
             raise ValueError(f"request {req.rid}: unknown kind {req.kind!r}")
-        # latency clock starts here, so queue wait counts toward latency_s
+        if req.slo_s is not None and req.slo_s <= 0:
+            raise ValueError(
+                f"request {req.rid}: slo_s must be positive, got {req.slo_s}")
         if req.t_submit is None:
             req.t_submit = time.perf_counter()
-        self.queue.append(req)
+
+        # the plan is clamped to the index's reuse-free stitch budget — an
+        # undersized index yields a recorded epsilon_bound, not a bias.
+        plan = plan_query(
+            req.k, req.epsilon, req.delta, p_T=self.p_T,
+            max_steps=self.max_steps,
+            segments_per_vertex=self.index.segments_per_vertex,
+            segment_len=self.index.segment_len)
+        walks = req.num_walks if req.num_walks is not None else plan.num_walks
+        downgraded = False
+
+        if req.slo_s is not None and self._wave_time is not None:
+            # Remaining wave budget under the SLO, assuming best-case (full
+            # machine) allocation — an optimistic bound, so a rejection
+            # here is certain to be correct.
+            feasible = int(req.slo_s / self._wave_time)
+            needed = -(-walks // self.max_walks)
+            if feasible < 1:
+                return self._reject(
+                    req, plan,
+                    f"SLO {req.slo_s:.3g}s is shorter than one wave "
+                    f"(≈{self._wave_time:.3g}s)")
+            if needed > feasible:
+                if not req.allow_downgrade:
+                    return self._reject(
+                        req, plan,
+                        f"plan needs {needed} waves, only {feasible} fit "
+                        f"the {req.slo_s:.3g}s SLO")
+                walks = feasible * self.max_walks
+                plan = plan_query(
+                    req.k, req.epsilon, req.delta, p_T=self.p_T,
+                    max_walks=walks, max_steps=self.max_steps,
+                    segments_per_vertex=self.index.segments_per_vertex,
+                    segment_len=self.index.segment_len)
+                walks = min(walks, plan.num_walks if req.num_walks is None
+                            else req.num_walks)
+                walks = min(walks, feasible * self.max_walks)
+                downgraded = True
+
+        deadline = (math.inf if req.slo_s is None
+                    else req.t_submit + req.slo_s)
+        self.queue.append(_Queued(req=req, plan=plan, walks=walks,
+                                  deadline=deadline, downgraded=downgraded))
+        return AdmissionDecision(rid=req.rid, admitted=True,
+                                 downgraded=downgraded, plan=plan,
+                                 num_walks=walks)
+
+    def _reject(self, req: QueryRequest, plan: QueryPlan,
+                reason: str) -> AdmissionDecision:
+        decision = AdmissionDecision(rid=req.rid, admitted=False,
+                                     reason=reason, plan=plan)
+        self.rejected.append(decision)
+        return decision
+
+    # --- host scheduling --------------------------------------------------
 
     def _admit(self) -> None:
+        """Queued queries claim free slots, earliest deadline first."""
         free = [s for s in range(self.max_queries) if s not in self.active]
+        self.queue.sort(key=lambda e: (e.deadline, e.req.t_submit))
         while self.queue and free:
-            req = self.queue.pop(0)
-            plan = plan_query(req.k, req.epsilon, req.delta, p_T=self.p_T,
-                              max_steps=self.max_steps)
-            walks = req.num_walks if req.num_walks is not None else plan.num_walks
+            e = self.queue.pop(0)
             self.active[free.pop(0)] = _Active(
-                req=req, num_steps=plan.num_steps, remaining=walks,
-                total_walks=walks, counts=np.zeros(self.g.n, np.int64),
-                waves=0, t_submit=req.t_submit,
+                req=e.req, plan=e.plan, remaining=e.walks,
+                total_walks=e.walks, counts=np.zeros(self.g.n, np.int64),
+                waves=0, t_submit=e.req.t_submit, deadline=e.deadline,
+                downgraded=e.downgraded,
             )
 
+    def _edf_order(self) -> List[int]:
+        return sorted(self.active,
+                      key=lambda s: (self.active[s].deadline, s))
+
     def _allocate(self) -> Dict[int, int]:
-        """Fair-share walk-slot split: {query slot: walks this wave}."""
+        """Walk-slot split: equal shares, handed out (and topped up from
+        the leftovers) in earliest-deadline-first order — a tight-deadline
+        query drains its budget first without starving the rest below
+        their fair share."""
         slots = {}
         budget = self.max_walks
-        order = sorted(self.active)
+        order = self._edf_order()
         share = max(1, budget // max(1, len(order)))
         for s in order:
             take = min(self.active[s].remaining, share, budget)
             slots[s] = take
             budget -= take
-        for s in order:                      # leftovers, greedy
+        for s in order:                      # leftovers, EDF-greedy
             if budget == 0:
                 break
             extra = min(self.active[s].remaining - slots[s], budget)
@@ -202,7 +502,7 @@ class QueryScheduler:
             a = self.active[s]
             sl = slice(cursor, cursor + w)
             qid[sl] = s
-            t_cap[sl] = a.num_steps
+            t_cap[sl] = a.plan.num_steps
             if a.req.kind == "ppr":
                 start[sl] = a.req.source
             else:
@@ -210,11 +510,21 @@ class QueryScheduler:
             cursor += w
 
         self._key, k_wave = jax.random.split(self._key)
-        counts = np.asarray(self._wave_fn(
+        t0 = time.perf_counter()
+        counts = self._wave(
             jnp.asarray(start), jnp.asarray(uniform), jnp.asarray(qid),
-            jnp.asarray(t_cap), k_wave))
-
+            jnp.asarray(t_cap), k_wave)
         now = time.perf_counter()
+        # EMA of measured wave time — feeds the admission budget check. The
+        # scheduler's very first wave includes jit compilation (seconds vs
+        # steady-state ms) and would poison the estimate into rejecting
+        # feasible SLOs, so it is never folded in.
+        self._waves_run += 1
+        if self._waves_run > 1:
+            dt = now - t0
+            self._wave_time = (dt if self._wave_time is None
+                               else 0.5 * self._wave_time + 0.5 * dt)
+
         for s, w in alloc.items():
             a = self.active[s]
             a.counts += counts[s]
@@ -229,11 +539,16 @@ class QueryScheduler:
         scores = a.counts / float(a.total_walks)
         k = min(a.req.k, self.g.n)
         top = np.argsort(-scores, kind="stable")[:k]
+        latency = now - a.t_submit
         return QueryResult(
             rid=a.req.rid, kind=a.req.kind, vertices=top,
             scores=scores[top], num_walks=a.total_walks,
-            num_steps=a.num_steps, waves=a.waves,
-            latency_s=now - a.t_submit,
+            num_steps=a.plan.num_steps, waves=a.waves,
+            latency_s=latency,
+            epsilon_bound=a.plan.epsilon_bound,
+            downgraded=a.downgraded,
+            met_slo=(None if a.req.slo_s is None
+                     else bool(latency <= a.req.slo_s)),
         )
 
     def run(self) -> List[QueryResult]:

@@ -1,0 +1,323 @@
+"""Sharded serving runtime: the QueryScheduler answering queries against
+per-shard slab blocks (no full-slab reassembly), deadline-aware admission,
+and the plan/kernel machinery underneath.
+
+Single-device tests exercise the runtime's host-loop dispatch of the same
+per-shard wave program the mesh path runs (the mesh `shard_map` twin lives
+in tests/test_multidevice.py); all three dispatch paths draw from the same
+key stream, so gathered and sharded answers must agree *byte-for-byte* on
+the same slab — and statistically (chi-square + TV) across independent
+seeds, which is the acceptance claim that survives future RNG-plumbing
+changes.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.graph import chung_lu_powerlaw, uniform_random
+from repro.kernels import ops
+from repro.query import (QueryRequest, QueryScheduler, ShardedWalkIndex,
+                         WalkIndexConfig, build_walk_index, load_walk_index,
+                         plan_query, save_walk_index, save_walk_index_shard,
+                         shard_walk_index)
+
+
+def _graph_and_index(n=512, R=8, L=3, seed=2):
+    g = chung_lu_powerlaw(n=n, avg_out_deg=8, seed=seed)
+    idx = build_walk_index(g, WalkIndexConfig(
+        segments_per_vertex=R, segment_len=L, num_shards=2))
+    return g, idx
+
+
+def _run(g, index, reqs, seed=11, **kw):
+    sched = QueryScheduler(g, index, max_walks=1024, max_queries=4,
+                           max_steps=24, seed=seed, **kw)
+    for r in reqs:
+        assert sched.submit(r).admitted
+    return sched, sorted(sched.run(), key=lambda r: r.rid)
+
+
+def _reqs():
+    return [QueryRequest(rid=0, kind="topk", k=10, epsilon=0.4),
+            QueryRequest(rid=1, kind="ppr", source=7, k=10, epsilon=0.4),
+            QueryRequest(rid=2, kind="topk", k=5, num_walks=300)]
+
+
+# --- sharded-slab serving == gathered serving --------------------------------
+
+
+def test_sharded_loop_wave_matches_gathered_exactly():
+    """Same seed + same slab ⇒ the host-loop sharded wave and the gathered
+    wave are the *same program* (shared key stream): identical answers."""
+    g, idx = _graph_and_index()
+    sh = shard_walk_index(idx, 4)
+    sched_g, res_g = _run(g, idx, _reqs())
+    sched_s, res_s = _run(g, sh, _reqs())
+    assert sched_s.runtime is not None and not sched_s.runtime.is_mesh
+    assert [r.rid for r in res_s] == [0, 1, 2]
+    for a, b in zip(res_g, res_s):
+        assert (a.vertices == b.vertices).all(), a.rid
+        assert np.allclose(a.scores, b.scores), a.rid
+        assert a.num_walks == b.num_walks and a.waves == b.waves
+
+
+def test_sharded_local_stitch_kernel_path_matches_xla():
+    """impl="ref"/"pallas" route the sharded wave's gather through the
+    local-index stitch kernel — answers must match the masked-take path."""
+    g, idx = _graph_and_index(n=256, R=6, L=2, seed=3)
+    sh = shard_walk_index(idx, 2)
+    out = {}
+    for impl in ("xla", "ref", "pallas"):
+        sched = QueryScheduler(g, sh, max_walks=512, max_queries=2,
+                               max_steps=10, seed=5, impl=impl)
+        sched.submit(QueryRequest(rid=0, kind="topk", k=5, num_walks=400,
+                                  epsilon=0.5))
+        out[impl] = sched.run()[0]
+    for impl in ("ref", "pallas"):
+        assert (out[impl].vertices == out["xla"].vertices).all(), impl
+        assert np.allclose(out[impl].scores, out["xla"].scores), impl
+
+
+def test_sharded_vs_gathered_statistical_equivalence():
+    """Across independent seeds the two paths sample the same distribution:
+    chi-square + TV over pooled per-vertex stop counts (top-k and PPR)."""
+    g, idx = _graph_and_index(n=128, R=8, L=2, seed=4)
+    sh = shard_walk_index(idx, 4)
+    counts = {"gathered": np.zeros((2, g.n)), "sharded": np.zeros((2, g.n))}
+    walks = 2000
+    for trial in range(6):
+        for name, index in (("gathered", idx), ("sharded", sh)):
+            # decouple the seeds so this is a genuine two-sample test
+            seed = 100 + trial + (1000 if name == "sharded" else 0)
+            sched = QueryScheduler(g, index, max_walks=2048, max_queries=2,
+                                   max_steps=12, seed=seed)
+            # k = n so the results carry the full stop-count histogram
+            sched.submit(QueryRequest(rid=0, kind="topk", k=g.n,
+                                      num_walks=walks))
+            sched.submit(QueryRequest(rid=1, kind="ppr", source=3, k=g.n,
+                                      num_walks=walks))
+            for r in sched.run():
+                est = np.zeros(g.n)
+                est[r.vertices] = r.scores * r.num_walks
+                counts[name][0 if r.kind == "topk" else 1] += est
+    for row, kind in ((0, "topk"), (1, "ppr")):
+        a, b = counts["gathered"][row], counts["sharded"][row]
+        support = (a + b) > 0
+        x2 = float((((a - b) ** 2) / np.maximum(a + b, 1))[support].sum())
+        df = max(int(support.sum()) - 1, 1)
+        assert x2 < df + 4.0 * np.sqrt(2 * df), (kind, x2, df)
+        tv = 0.5 * np.abs(a / a.sum() - b / b.sum()).sum()
+        assert tv < 0.05, (kind, tv)
+
+
+def test_sharded_index_checkpoint_roundtrip_no_reassembly(tmp_path):
+    """Per-shard persistence → load_walk_index(reassemble=False) hands the
+    scheduler per-shard blocks directly; answers match the gathered path
+    over the monolithic checkpoint of the same slab."""
+    g, idx = _graph_and_index(n=200, R=5, L=2, seed=6)
+    sh = shard_walk_index(idx, 4)
+    d = str(tmp_path / "walk_index")
+    for s in range(4):
+        save_walk_index_shard(d, s, 4, g.n, sh.blocks[s], sh.segment_len,
+                              sh.seed)
+    loaded = load_walk_index(d, reassemble=False)
+    assert isinstance(loaded, ShardedWalkIndex)
+    assert loaded.num_shards == 4 and loaded.n == g.n
+    assert (loaded.blocks == sh.blocks).all()
+    # the reassembling reader still agrees with the dense slab
+    dense = load_walk_index(d)
+    assert (np.asarray(dense.endpoints) == np.asarray(idx.endpoints)).all()
+    # a monolithic checkpoint read sharded comes back as one shard
+    d2 = str(tmp_path / "mono")
+    save_walk_index(d2, idx)
+    mono = load_walk_index(d2, reassemble=False)
+    assert isinstance(mono, ShardedWalkIndex) and mono.num_shards == 1
+    _, res_s = _run(g, loaded, _reqs())
+    _, res_g = _run(g, dense, _reqs())
+    for a, b in zip(res_g, res_s):
+        assert (a.vertices == b.vertices).all() and np.allclose(
+            a.scores, b.scores)
+
+
+# --- local-index stitch kernel ----------------------------------------------
+
+
+@pytest.mark.parametrize("W,n,R,S", [(1000, 300, 8, 4), (128, 64, 3, 2)])
+def test_stitch_local_kernel_matches_ref_and_composes(W, n, R, S):
+    rng = np.random.default_rng(W + n)
+    pos = jnp.asarray(rng.integers(0, n, W), jnp.int32)
+    stop = jnp.asarray(rng.integers(0, 2, W), jnp.int32)
+    bits = jnp.asarray(rng.integers(0, 1 << 30, W), jnp.int32)
+    endpoints = jnp.asarray(rng.integers(0, n, (n, R)), jnp.int32)
+    ng, cg = ops.stitch_step(pos, stop, bits, endpoints, n, impl="ref")
+    sz = -(-n // S)
+    ep = np.zeros((S * sz, R), np.int32)
+    ep[:n] = np.asarray(endpoints)
+    acc_n = jnp.zeros_like(pos)
+    acc_c = []
+    for s in range(S):
+        block = jnp.asarray(ep[s * sz:(s + 1) * sz])
+        np_, cp = ops.stitch_step_local(pos, stop, bits, block, s * sz,
+                                        impl="pallas")
+        nr, cr = ops.stitch_step_local(pos, stop, bits, block, s * sz,
+                                       impl="ref")
+        assert (np.asarray(np_) == np.asarray(nr)).all(), s
+        assert (np.asarray(cp) == np.asarray(cr)).all(), s
+        acc_n = acc_n + np_
+        acc_c.append(np.asarray(cp))
+    # per-shard outputs sum to the global stitch (each walk has one owner)
+    assert (np.asarray(acc_n) == np.asarray(ng)).all()
+    assert (np.concatenate(acc_c)[:n] == np.asarray(cg)).all()
+    assert sum(int(c.sum()) for c in acc_c) == int(stop.sum())
+
+
+def test_device_rng_interpret_gate():
+    """rng="device" (pltpu.prng_random_bits) lowers only on TPU — interpret
+    mode must refuse it loudly, keeping the seeded-bits determinism path."""
+    g = uniform_random(64, avg_out_deg=4, seed=0)
+    pos = jnp.zeros(16, jnp.int32)
+    with pytest.raises(ValueError, match="interpret"):
+        ops.frog_step(pos, jnp.zeros_like(pos), None, g.row_ptr, g.col_idx,
+                      g.out_deg, g.n, impl="pallas", rng="device")
+    endpoints = jnp.zeros((64, 4), jnp.int32)
+    with pytest.raises(ValueError, match="interpret"):
+        ops.stitch_step(pos, jnp.zeros_like(pos), None, endpoints, 64,
+                        rng="device")
+    with pytest.raises(ValueError, match="interpret"):
+        ops.stitch_step_local(pos, jnp.zeros_like(pos), None,
+                              endpoints[:32], 0, rng="device")
+    with pytest.raises(ValueError, match="unknown rng"):
+        ops.stitch_step(pos, jnp.zeros_like(pos), pos, endpoints, 64,
+                        rng="nonsense")
+
+
+# --- plan clamp via the index's segment budget -------------------------------
+
+
+def test_plan_query_clamps_to_index_segment_budget():
+    free = plan_query(10, 0.2, max_steps=64)
+    assert free.num_steps > 9          # the clamp below must actually bind
+    capped = plan_query(10, 0.2, max_steps=64, segments_per_vertex=4,
+                        segment_len=2)
+    assert capped.num_steps == 4 * 2 + 1               # ⌊t/L⌋ ≤ R
+    assert capped.num_rounds(2) <= 4
+    assert capped.epsilon_bound > capped.epsilon       # recorded, not silent
+    # a roomy index leaves the plan untouched
+    roomy = plan_query(10, 0.2, max_steps=64, segments_per_vertex=64,
+                       segment_len=2)
+    assert roomy.num_steps == free.num_steps
+    assert roomy.epsilon_bound == pytest.approx(free.epsilon_bound)
+    with pytest.raises(ValueError, match="pair"):
+        plan_query(10, 0.2, segments_per_vertex=4)
+
+
+def test_scheduler_plans_never_exceed_index_budget():
+    """An undersized index (R < t/L) must produce clamped plans with a
+    recorded epsilon_bound — no reuse-bias warning path at serve time."""
+    g, _ = _graph_and_index(n=128, R=2, L=2, seed=8)
+    idx = build_walk_index(g, WalkIndexConfig(
+        segments_per_vertex=2, segment_len=2, num_shards=2))
+    sched = QueryScheduler(g, idx, max_walks=256, max_queries=2, max_steps=32)
+    d = sched.submit(QueryRequest(rid=0, kind="topk", k=10, epsilon=0.2,
+                                  num_walks=200))
+    assert d.plan.num_steps <= 2 * 2 + 1
+    res = sched.run()[0]
+    assert res.num_steps == d.plan.num_steps
+    assert res.epsilon_bound > 0.2
+
+
+# --- deadline-aware admission ------------------------------------------------
+
+
+def _admission_sched(g, idx, wave_time=1.0, **kw):
+    return QueryScheduler(g, idx, max_walks=512, max_queries=4, max_steps=12,
+                          wave_time_estimate_s=wave_time, **kw)
+
+
+def test_admission_rejects_infeasible_slo():
+    g, idx = _graph_and_index(n=128, R=6, L=2, seed=9)
+    sched = _admission_sched(g, idx, wave_time=1.0)
+    # 2000 walks need ⌈2000/512⌉ = 4 waves ≈ 4 s — a 2 s SLO cannot fit
+    d = sched.submit(QueryRequest(rid=0, kind="topk", k=5, num_walks=2000,
+                                  slo_s=2.0))
+    assert not d.admitted and "waves" in d.reason
+    assert sched.rejected == [d] and not sched.queue
+    # an SLO shorter than a single wave is rejected outright
+    d2 = sched.submit(QueryRequest(rid=1, kind="topk", k=5, num_walks=100,
+                                   slo_s=0.5))
+    assert not d2.admitted and "shorter than one wave" in d2.reason
+    # a feasible SLO is admitted unchanged
+    d3 = sched.submit(QueryRequest(rid=2, kind="topk", k=5, num_walks=1000,
+                                   slo_s=10.0))
+    assert d3.admitted and not d3.downgraded and d3.num_walks == 1000
+    with pytest.raises(ValueError, match="slo_s"):
+        sched.submit(QueryRequest(rid=3, slo_s=-1.0))
+
+
+def test_admission_downgrades_to_fit_budget():
+    g, idx = _graph_and_index(n=128, R=6, L=2, seed=9)
+    sched = _admission_sched(g, idx, wave_time=1.0)
+    d = sched.submit(QueryRequest(rid=0, kind="topk", k=5, epsilon=0.2,
+                                  slo_s=2.0, allow_downgrade=True))
+    # ε = 0.2 wants 4k/(δε²) = 5000 walks ≫ 2 waves × 512 slots
+    assert d.admitted and d.downgraded
+    assert d.num_walks == 2 * 512
+    assert d.plan.epsilon_bound > 0.2      # the weakened guarantee is recorded
+    res = sched.run()[0]
+    assert res.num_walks == 1024 and res.downgraded
+    assert res.epsilon_bound == d.plan.epsilon_bound
+    assert res.met_slo is not None
+
+
+def test_admission_without_estimate_is_optimistic():
+    g, idx = _graph_and_index(n=128, R=6, L=2, seed=9)
+    sched = QueryScheduler(g, idx, max_walks=512, max_queries=2, max_steps=12)
+    assert sched._wave_time is None
+    d = sched.submit(QueryRequest(rid=0, kind="topk", k=5, num_walks=600,
+                                  slo_s=1e-9))
+    assert d.admitted                       # nothing to judge against yet
+    res = sched.run()[0]
+    assert res.met_slo is False             # …but the miss is reported
+    assert sched._wave_time is not None     # and the next submit can judge
+
+
+def test_edf_ordering_within_wave():
+    """Earliest deadline first: slot claiming and walk-slot allocation both
+    order by deadline, so a tight-SLO query overtakes earlier FIFO arrivals."""
+    g, idx = _graph_and_index(n=128, R=6, L=2, seed=9)
+    sched = _admission_sched(g, idx, wave_time=1.0, seed=3)
+    sched.submit(QueryRequest(rid=0, kind="topk", k=5, num_walks=400))
+    sched.submit(QueryRequest(rid=1, kind="topk", k=5, num_walks=400,
+                              slo_s=100.0))
+    sched.submit(QueryRequest(rid=2, kind="topk", k=5, num_walks=100,
+                              slo_s=50.0))
+    sched._admit()
+    # slots are claimed in EDF order: rid=2 (50s) < rid=1 (100s) < rid=0 (∞)
+    assert [sched.active[s].req.rid for s in sorted(sched.active)] == [2, 1, 0]
+    order = sched._edf_order()
+    assert [sched.active[s].req.rid for s in order] == [2, 1, 0]
+    alloc = sched._allocate()
+    # fair shares first (170 each, capped by remaining), then leftovers
+    # EDF-greedy: rid=2 takes its 100, the 512-slot residue tops up rid=1
+    # before rid=0.
+    by_rid = {sched.active[s].req.rid: w for s, w in alloc.items()}
+    assert by_rid[2] == 100
+    assert by_rid[1] > by_rid[0]
+    assert sum(by_rid.values()) == 512
+    res = sched.run()
+    assert sorted(r.rid for r in res) == [0, 1, 2]
+
+
+def test_edf_claims_scarce_slots_first():
+    g, idx = _graph_and_index(n=128, R=6, L=2, seed=9)
+    sched = QueryScheduler(g, idx, max_walks=256, max_queries=1, max_steps=12,
+                           wave_time_estimate_s=0.01)
+    sched.submit(QueryRequest(rid=0, kind="topk", k=5, num_walks=200))
+    sched.submit(QueryRequest(rid=1, kind="topk", k=5, num_walks=200,
+                              slo_s=1000.0))
+    sched._admit()
+    # one slot: the deadline-carrying query gets it despite arriving second
+    assert [a.req.rid for a in sched.active.values()] == [1]
+    res = sched.run()
+    assert sorted(r.rid for r in res) == [0, 1]
