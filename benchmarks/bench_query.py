@@ -1,27 +1,29 @@
-"""Query-serving benchmark: indexed stitching vs from-scratch restart, and
-gathered vs sharded-slab serving.
+"""Query-serving benchmark: indexed stitching vs from-scratch restart,
+gathered vs sharded-slab serving, and QueryHandle (anytime) driving — all
+through the :class:`~repro.service.FrogWildService` facade.
 
 Serves a batch of (ε, δ)-planned top-k and PPR queries over the same graph
 and the same per-query walk budgets:
 
 * **indexed** — the walk-index query engine: one offline segment-index
-  build (amortized across all queries), then the continuous-batching
-  ``QueryScheduler`` stitching ``⌊t/L⌋`` segment gathers + ``t mod L``
-  residual steps per walk, many queries per device wave.
+  build (owned by the service, amortized across all queries), then the
+  continuous-batching scheduler stitching ``⌊t/L⌋`` segment gathers +
+  ``t mod L`` residual steps per walk, many queries per device wave.
 * **indexed, sharded slab** — the same scheduler serving from per-shard
-  ``[shard_size, R]`` slab blocks with no reassembly (the
-  ``distributed/runtime.py`` dispatch: host loop here on one device, one
-  ``shard_map`` on a mesh) — the row tracks the cost of the 4·n·R/S
+  ``[shard_size, R]`` blocks with no reassembly (host loop here on one
+  device, one ``shard_map`` on a mesh) — the cost of the 4·n·R/S
   per-device memory win.
+* **service handle** — the same queries as **indexed** but submitted as
+  :class:`~repro.service.QueryHandle` futures and driven by ``poll()`` +
+  ``partial()`` (one anytime snapshot per wave) — the row pins the
+  handle-mode overhead so later PRs can't regress it silently.
 * **restart** — the pre-index serving story: every query reruns the full
-  ``t``-superstep walk from scratch (``frogwild_run`` for global top-k, a
-  masked direct walk for PPR), one query at a time.
+  ``t``-superstep walk from scratch, one query at a time.
 
 Emits ``BENCH_query.json`` with queries/sec and p50/p99 latency for all
-three, plus the index build cost — machine-readable trajectory for later
-PRs. ``--smoke`` instead runs a tiny gathered-vs-sharded dispatch
-equivalence sweep (no timing, no JSON rewrite; wired into
-``scripts/ci_tier1.sh --bench-smoke``).
+paths, plus the index build cost. ``--smoke`` instead runs a tiny
+gathered-vs-sharded-vs-handle dispatch equivalence sweep (no timing, no
+JSON rewrite; wired into ``scripts/ci_tier1.sh --bench-smoke``).
 """
 from __future__ import annotations
 
@@ -33,11 +35,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, emit_json
-from repro.core import FrogWildConfig, frogwild_run
+from repro import FrogWildService, RuntimeConfig, ServingConfig, ShardConfig
+from repro.config import FrogWildConfig, KernelConfig
+from repro.core.frogwild import _frogwild_walks
 from repro.graph import chung_lu_powerlaw
 from repro.kernels import ops
-from repro.query import (QueryRequest, QueryScheduler, WalkIndexConfig,
-                         build_walk_index, plan_query, shard_walk_index)
+from repro.query import plan_query
 from repro.query.engine import _plain_steps, sample_walk_lengths
 
 N_GRAPH = 32_768
@@ -46,53 +49,83 @@ NUM_SHARDS = 8
 EPSILON, DELTA, K = 0.3, 0.1, 10
 
 
-def _requests(num=None):
-    reqs = []
+def _serving(R=8, L=4, max_walks=16_384, max_queries=12, max_steps=None):
+    return ServingConfig(segments_per_vertex=R, segment_len=L,
+                         build_shards=8, max_walks=max_walks,
+                         max_queries=max_queries,
+                         max_steps=max_steps
+                         if max_steps is not None else 32)
+
+
+def _stream(num=None):
+    """The benchmark's mixed request stream — the single definition of its
+    shape, shared by the indexed/handle paths and the restart baseline so
+    the rows always compare the same workload."""
     for i in range(NUM_QUERIES if num is None else num):
-        if i % 3 == 2:
-            reqs.append(QueryRequest(rid=i, kind="ppr", source=17 * i + 1,
-                                     k=K, epsilon=EPSILON, delta=DELTA))
+        yield ("ppr", 17 * i + 1) if i % 3 == 2 else ("topk", None)
+
+
+def _submit_all(svc, num=None, early_stop=False):
+    handles = []
+    for kind, source in _stream(num):
+        if kind == "ppr":
+            h = svc.ppr(source, k=K, epsilon=EPSILON, delta=DELTA,
+                        early_stop=early_stop)
         else:
-            reqs.append(QueryRequest(rid=i, kind="topk", k=K,
-                                     epsilon=EPSILON, delta=DELTA))
-    return reqs
+            h = svc.topk(k=K, epsilon=EPSILON, delta=DELTA,
+                         early_stop=early_stop)
+        assert h.admitted
+        handles.append(h)
+    return handles
 
 
 def smoke():
-    """Gathered vs sharded serving dispatch equivalence at tiny sizes.
-
-    The two waves share one key stream, so on the same slab their answers
-    must agree exactly — any divergence is a dispatch regression and fails
-    tier-1 (``scripts/ci_tier1.sh --bench-smoke``).
+    """Gathered vs sharded vs handle-driven serving equivalence at tiny
+    sizes. All paths share one key stream, so on the same slab their
+    answers must agree exactly — any divergence is a dispatch regression
+    and fails tier-1 (``scripts/ci_tier1.sh --bench-smoke``).
     """
     g = chung_lu_powerlaw(n=768, avg_out_deg=6, seed=0)
-    idx = build_walk_index(g, WalkIndexConfig(
-        segments_per_vertex=6, segment_len=2, num_shards=2))
+    serving = _serving(R=6, L=2, max_walks=512, max_queries=3, max_steps=10)
     results = {}
-    for name, index, impl in [
-        ("gathered", idx, "xla"),
-        ("sharded", shard_walk_index(idx, 4), "xla"),
-        ("sharded_fused", shard_walk_index(idx, 4), "ref"),
+    for name, shards, stitch in [
+        ("gathered", 1, "xla"),
+        ("sharded", 4, "xla"),
+        ("sharded_fused", 4, "ref"),
     ]:
-        sched = QueryScheduler(g, index, max_walks=512, max_queries=3,
-                               max_steps=10, seed=7, impl=impl)
-        for r in _requests(num=4):
-            assert sched.submit(r).admitted
-        results[name] = sorted(sched.run(), key=lambda r: r.rid)
+        svc = FrogWildService.open(g, RuntimeConfig(
+            kernel=KernelConfig(stitch_impl=stitch),
+            runtime=ShardConfig(num_shards=shards, seed=7),
+            serving=serving))
+        handles = _submit_all(svc, num=4)
+        results[name] = sorted(svc.drain(), key=lambda r: r.rid)
+        rt = svc.scheduler.runtime
         print(f"smoke query_serving {name} OK "
-              f"({'loop' if sched.runtime and not sched.runtime.is_mesh else 'dense/mesh'})")
-    for name in ("sharded", "sharded_fused"):
+              f"({'loop' if rt and not rt.is_mesh else 'dense/mesh'})")
+    # handle-driven path (poll + partial per wave) on the gathered slab
+    svc = FrogWildService.open(g, RuntimeConfig(
+        runtime=ShardConfig(num_shards=1, seed=7), serving=serving))
+    handles = _submit_all(svc, num=4)
+    while not all(h.poll() for h in handles):
+        for h in handles:
+            if not h.done():
+                h.partial()                    # anytime snapshot each wave
+    results["handle"] = sorted((h.result() for h in handles),
+                               key=lambda r: r.rid)
+    print("smoke query_serving handle OK (poll-driven)")
+    for name in ("sharded", "sharded_fused", "handle"):
         for a, b in zip(results["gathered"], results[name]):
             assert (a.vertices == b.vertices).all(), (name, a.rid)
             assert np.allclose(a.scores, b.scores), (name, a.rid)
-    print("smoke OK: gathered and sharded serving answers identical")
+    print("smoke OK: gathered, sharded, and handle-driven serving answers "
+          "identical")
 
 
-def _restart_latencies(g, plan, reqs, p_T=0.15):
+def _restart_latencies(g, plan, p_T=0.15):
     """One full from-scratch walk program per query (the no-index baseline)."""
     cfg = FrogWildConfig(num_frogs=plan.num_walks, num_steps=plan.num_steps,
                          p_T=p_T)
-    topk_run = jax.jit(lambda k: frogwild_run(g, cfg, k).counts)
+    topk_run = jax.jit(lambda k: _frogwild_walks(g, cfg, k).counts)
 
     def ppr_counts(source, key):
         k_tau, k_walk = jax.random.split(key)
@@ -108,11 +141,11 @@ def _restart_latencies(g, plan, reqs, p_T=0.15):
     jax.block_until_ready(ppr_run(jnp.int32(1), jax.random.PRNGKey(0)))
 
     lat = []
-    for i, r in enumerate(reqs):
+    for i, (kind, source) in enumerate(_stream()):
         key = jax.random.PRNGKey(100 + i)
         t0 = time.perf_counter()
-        if r.kind == "ppr":
-            counts = ppr_run(jnp.int32(r.source), key)
+        if kind == "ppr":
+            counts = ppr_run(jnp.int32(source), key)
         else:
             counts = topk_run(key)
         counts = np.asarray(counts)
@@ -125,31 +158,28 @@ def main():
     rows = []
     g = chung_lu_powerlaw(n=N_GRAPH, avg_out_deg=12, seed=0)
     plan = plan_query(K, EPSILON, DELTA)
+    serving = _serving(max_steps=plan.num_steps)
 
-    icfg = WalkIndexConfig(segments_per_vertex=8, segment_len=4, num_shards=8)
+    svc = FrogWildService.open(g, RuntimeConfig(serving=serving))
     t0 = time.perf_counter()
-    index = build_walk_index(g, icfg)
+    index = svc.ensure_index()
     build_s = time.perf_counter() - t0
     rows.append(("query/index_build", build_s * 1e6,
-                 f"n={g.n} R={icfg.segments_per_vertex} "
-                 f"L={icfg.segment_len} slab_mb="
+                 f"n={g.n} R={index.segments_per_vertex} "
+                 f"L={index.segment_len} slab_mb="
                  f"{index.endpoints.nbytes / 1e6:.1f}"))
 
-    # one scheduler for warmup + measurement: its wave program compiles once
-    # and every later wave reuses it (the steady-state serving regime).
-    sched = QueryScheduler(g, index, max_walks=16_384, max_queries=12,
-                           max_steps=plan.num_steps)
-
-    def serve_indexed():
-        for r in _requests():
-            sched.submit(r)
-        out = sched.run()
-        sched.finished = []
+    # one service per dispatch: its wave program compiles once and every
+    # later wave reuses it (the steady-state serving regime).
+    def serve(s):
+        _submit_all(s)
+        out = s.drain()
+        s.scheduler.finished = []
         return out
 
-    serve_indexed()                                  # warm the wave program
+    serve(svc)                                       # warm the wave program
     t0 = time.perf_counter()
-    results = serve_indexed()
+    results = serve(svc)
     dt_idx = time.perf_counter() - t0
     lat_idx = np.asarray([r.latency_s for r in results])
     qps_idx = NUM_QUERIES / dt_idx
@@ -157,23 +187,39 @@ def main():
                  f"qps={qps_idx:.1f} p50_ms={np.percentile(lat_idx, 50) * 1e3:.1f} "
                  f"p99_ms={np.percentile(lat_idx, 99) * 1e3:.1f}"))
 
-    # sharded-slab serving: same scheduler, per-shard blocks, no slab
-    # reassembly (host-loop dispatch on this 1-device bench; 4·n·R/S bytes
-    # of slab resident per wave call instead of 4·n·R).
-    sharded = shard_walk_index(index, NUM_SHARDS)
-    sched_sh = QueryScheduler(g, sharded, max_walks=16_384, max_queries=12,
-                              max_steps=plan.num_steps)
-
-    def serve_sharded():
-        for r in _requests():
-            sched_sh.submit(r)
-        out = sched_sh.run()
-        sched_sh.finished = []
+    # handle-driven serving: same queries, driven by poll() with one
+    # partial() anytime snapshot per wave — pins the QueryHandle overhead.
+    def serve_handles(s):
+        handles = _submit_all(s, early_stop=True)
+        while not all(h.poll() for h in handles):
+            for h in handles:
+                if not h.done():
+                    h.partial()
+        out = [h.result() for h in handles]
+        s.scheduler.finished = []
         return out
 
-    serve_sharded()                                  # warm the wave programs
+    serve_handles(svc)                               # warm (same program)
     t0 = time.perf_counter()
-    results_sh = serve_sharded()
+    results_h = serve_handles(svc)
+    dt_h = time.perf_counter() - t0
+    lat_h = np.asarray([r.latency_s for r in results_h])
+    qps_h = NUM_QUERIES / dt_h
+    rows.append(("query/query_service_handle", dt_h * 1e6 / NUM_QUERIES,
+                 f"qps={qps_h:.1f} p50_ms={np.percentile(lat_h, 50) * 1e3:.1f} "
+                 f"p99_ms={np.percentile(lat_h, 99) * 1e3:.1f} "
+                 f"vs_drain={qps_h / qps_idx:.3f}"))
+
+    # sharded-slab serving: per-shard blocks, no slab reassembly
+    # (host-loop dispatch on this 1-device bench; 4·n·R/S bytes of slab
+    # resident per wave call instead of 4·n·R).
+    svc_sh = FrogWildService.open(
+        g, RuntimeConfig(runtime=ShardConfig(num_shards=NUM_SHARDS),
+                         serving=serving),
+        index=index)
+    serve(svc_sh)                                    # warm the wave programs
+    t0 = time.perf_counter()
+    results_sh = serve(svc_sh)
     dt_sh = time.perf_counter() - t0
     lat_sh = np.asarray([r.latency_s for r in results_sh])
     qps_sh = NUM_QUERIES / dt_sh
@@ -183,10 +229,10 @@ def main():
                  f"p99_ms={np.percentile(lat_sh, 99) * 1e3:.1f} "
                  f"shards={NUM_SHARDS} slab_mb_per_shard="
                  f"{slab_mb / NUM_SHARDS:.2f} dispatch="
-                 f"{'mesh' if sched_sh.runtime.is_mesh else 'host_loop'}"))
+                 f"{'mesh' if svc_sh.scheduler.runtime.is_mesh else 'host_loop'}"))
 
     t0 = time.perf_counter()
-    lat_rst = _restart_latencies(g, plan, _requests())
+    lat_rst = _restart_latencies(g, plan)
     dt_rst = time.perf_counter() - t0
     qps_rst = NUM_QUERIES / dt_rst
     rows.append(("query/restart_serve", dt_rst * 1e6 / NUM_QUERIES,
@@ -196,12 +242,14 @@ def main():
     speedup = qps_idx / qps_rst
     rows.append(("query/indexed_vs_restart", 0.0,
                  f"speedup={speedup:.2f}x walks/query={plan.num_walks} "
-                 f"t={plan.num_steps} rounds={plan.num_rounds(icfg.segment_len)}"))
+                 f"t={plan.num_steps} "
+                 f"rounds={plan.num_rounds(index.segment_len)}"))
     emit(rows)
     emit_json("query", rows, extra={
         "num_queries": NUM_QUERIES,
         "epsilon": EPSILON, "delta": DELTA, "k": K,
         "qps_indexed": round(qps_idx, 2),
+        "qps_service_handle": round(qps_h, 2),
         "qps_sharded": round(qps_sh, 2),
         "qps_restart": round(qps_rst, 2),
         "p50_ms_indexed": round(float(np.percentile(lat_idx, 50)) * 1e3, 2),
@@ -215,14 +263,15 @@ def main():
         "slab_mb_per_shard": round(slab_mb / NUM_SHARDS, 3),
         "speedup": round(speedup, 2),
         "sharded_vs_gathered": round(qps_sh / qps_idx, 3),
+        "handle_vs_drain": round(qps_h / qps_idx, 3),
     })
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny gathered-vs-sharded serving equivalence "
-                         "sweep; no timing, no JSON rewrite")
+                    help="tiny gathered-vs-sharded-vs-handle serving "
+                         "equivalence sweep; no timing, no JSON rewrite")
     if ap.parse_args().smoke:
         smoke()
     else:

@@ -7,13 +7,14 @@ synchronization, byte accounting and the GraphLab-PR baseline comparison.
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
+import dataclasses
 import time
 
 import jax
 
+from repro import FrogWildService, RuntimeConfig, ShardConfig
 from repro.core import normalized_mass_captured, power_iteration
-from repro.engine import (EngineConfig, build_distributed_graph,
-                          distributed_frogwild, distributed_power_iteration)
+from repro.engine import distributed_power_iteration
 from repro.engine.baseline import build_pull_graph
 from repro.engine.netcost import frogwild_bytes_measured, pagerank_bytes_model
 from repro.graph import chung_lu_powerlaw
@@ -32,11 +33,16 @@ def main():
     print(f"  {time.time() - t0:.1f}s; bytes/2-iter would be "
           f"{pagerank_bytes_model(g.n, 2, 8).total / 1e6:.1f} MB")
 
-    dg = build_distributed_graph(g, 8)
+    # The service opened with a mesh dispatches pagerank() through the
+    # distributed engine (the per-shard CSR blocks are built and cached
+    # inside the service).
+    config = RuntimeConfig(num_frogs=800_000, num_steps=4,
+                           runtime=ShardConfig(num_shards=8))
+    svc = FrogWildService.open(g, config, mesh=mesh)
     for p_s in (1.0, 0.4):
-        cfg = EngineConfig(num_frogs=800_000, num_steps=4, p_s=p_s)
         t0 = time.time()
-        res = distributed_frogwild(dg, cfg, mesh, seed=0)
+        res = svc.pagerank(seed=0,
+                           config=dataclasses.replace(config, p_s=p_s))
         dt = time.time() - t0
         rep = frogwild_bytes_measured(res.sent_per_step,
                                       res.sync_msgs_per_step)

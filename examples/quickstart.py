@@ -1,12 +1,13 @@
-"""Quickstart: approximate the top-k PageRank of a power-law graph with
-FrogWild! and compare against exact power iteration.
+"""Quickstart: approximate the top-k PageRank of a power-law graph through
+the FrogWildService facade and compare against exact power iteration.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
-from repro.core import (FrogWildConfig, exact_identification, frogwild,
-                        normalized_mass_captured, power_iteration, theory)
+from repro import FrogWildService, RuntimeConfig, ShardConfig
+from repro.core import (exact_identification, normalized_mass_captured,
+                        power_iteration, theory)
 from repro.graph import chung_lu_powerlaw
 
 
@@ -25,9 +26,10 @@ def main():
     t = theory.suggested_steps(mu_k)
     print(f"FrogWild!: N=400k frogs, t={t} steps, p_s=0.7 "
           f"(partial synchronization)…")
-    cfg = FrogWildConfig(num_frogs=400_000, num_steps=t, p_s=0.7,
-                         erasure="channel", num_shards=16)
-    res = frogwild(g, cfg, seed=0)
+    svc = FrogWildService.open(g, RuntimeConfig(
+        num_frogs=400_000, num_steps=t, p_s=0.7, erasure="channel",
+        runtime=ShardConfig(num_shards=16)))
+    res = svc.pagerank(seed=0)
 
     mass = float(normalized_mass_captured(res.pi_hat, pi, k))
     exact = float(exact_identification(res.pi_hat, pi, k))

@@ -1,18 +1,22 @@
-"""Serve PageRank queries from a precomputed walk index.
+"""Serve PageRank queries through the FrogWildService facade.
 
-Builds the offline walk-segment index on a generated power-law graph, then
-serves a batch of concurrent global top-k and personalized-PageRank queries
-through the continuous-batching :class:`~repro.query.QueryScheduler` — the
-FrogWild machinery as an online service instead of a batch job.
+Opens a :class:`~repro.service.FrogWildService` over a generated power-law
+graph — the service owns the walk-index lifecycle (build, checkpoint
+round-trip, reuse) and the continuous-batching scheduler — then submits a
+batch of concurrent global top-k and personalized-PageRank queries as
+:class:`~repro.service.QueryHandle` futures and drives them to completion,
+printing each handle's anytime ``epsilon_bound`` refinement along the way.
 
   PYTHONPATH=src python examples/serve_pagerank.py
 
-``--shards S`` serves from the slab as ``S`` per-shard blocks with **no
-reassembly** (``distributed/runtime.py`` dispatch: one ``shard_map`` on a
-mesh with ≥ S devices, a host loop of the same per-shard program
-otherwise), and ``--slo-ms`` attaches a latency SLO to every request so the
-deadline-aware admission controller is exercised (watch for rejected /
-downgraded decisions once a wave time has been measured).
+Old flags still accepted: ``--shards S`` serves from the slab as ``S``
+per-shard blocks with **no reassembly** (one ``shard_map`` on a mesh with
+≥ S devices, a host loop of the same per-shard program otherwise), and
+``--slo-ms`` attaches a latency SLO to every request so the deadline-aware
+(and now queue-depth-aware) admission controller is exercised. New:
+``--budget-walks`` gives every query a walk budget beyond its Theorem-1
+plan, demonstrating early termination once the requested (ε, δ) bound is
+certified.
 """
 import argparse
 import tempfile
@@ -21,11 +25,9 @@ import time
 import jax
 import numpy as np
 
+from repro import FrogWildService, RuntimeConfig, ServingConfig, ShardConfig
 from repro.core import normalized_mass_captured, power_iteration
 from repro.graph import chung_lu_powerlaw
-from repro.query import (QueryRequest, QueryScheduler, WalkIndexConfig,
-                         build_walk_index, load_walk_index, save_walk_index,
-                         shard_walk_index)
 
 
 def main():
@@ -38,77 +40,93 @@ def main():
                     help="serve from S per-shard slab blocks (0 = dense)")
     ap.add_argument("--slo-ms", type=float, default=0.0,
                     help="attach this latency SLO to every request")
+    ap.add_argument("--budget-walks", type=int, default=0,
+                    help="per-query walk budget (> plan ⇒ anytime early "
+                         "termination once the ε bound is certified)")
     args = ap.parse_args()
 
     print(f"Generating a {args.n}-vertex power-law graph (θ=2.2)…")
     g = chung_lu_powerlaw(n=args.n, avg_out_deg=12, seed=0)
     print(f"  n={g.n} edges={g.nnz}")
 
-    cfg = WalkIndexConfig(segments_per_vertex=args.segments,
-                          segment_len=args.segment_len, num_shards=8)
-    t0 = time.perf_counter()
-    index = build_walk_index(g, cfg)
-    print(f"Walk index: {g.n}×{args.segments} length-{args.segment_len} "
-          f"segments in {time.perf_counter() - t0:.2f}s "
-          f"({index.endpoints.nbytes / 1e6:.1f} MB slab)")
+    with tempfile.TemporaryDirectory() as ckpt:
+        config = RuntimeConfig(
+            runtime=ShardConfig(num_shards=max(args.shards, 1)),
+            serving=ServingConfig(
+                segments_per_vertex=args.segments,
+                segment_len=args.segment_len,
+                build_shards=8, max_walks=8192, max_queries=8,
+                max_steps=32, checkpoint_dir=ckpt,
+            ),
+        )
+        svc = FrogWildService.open(g, config)
 
-    with tempfile.TemporaryDirectory() as d:
-        save_walk_index(d, index)
-        index = load_walk_index(d)          # checkpoint round-trip
-        print(f"  persisted + restored via checkpoint/ ({d})")
+        t0 = time.perf_counter()
+        index = svc.ensure_index()
+        print(f"Walk index: {g.n}×{args.segments} length-{args.segment_len} "
+              f"segments in {time.perf_counter() - t0:.2f}s "
+              f"(persisted via checkpoint/ under {ckpt})")
+        if args.shards:
+            print(f"Sharded slab: {index.num_shards} × "
+                  f"[{index.shard_size}, {index.segments_per_vertex}] blocks "
+                  f"({index.blocks[0].nbytes / 1e6:.2f} MB/device, "
+                  f"never reassembled); dispatch: "
+                  f"{'shard_map mesh' if svc.scheduler.runtime.is_mesh else 'host loop'}")
 
-    if args.shards:
-        index = shard_walk_index(index, args.shards)
-        print(f"Sharded slab: {args.shards} × "
-              f"[{index.shard_size}, {index.segments_per_vertex}] blocks "
-              f"({index.blocks[0].nbytes / 1e6:.2f} MB/device, "
-              f"never reassembled)")
-    sched = QueryScheduler(g, index, max_walks=8192, max_queries=8,
-                           max_steps=32)
-    if args.shards:
-        print(f"  dispatch: "
-              f"{'shard_map mesh' if sched.runtime.is_mesh else 'host loop'}")
-    hubs = np.asarray(g.out_deg).argsort()[-3:]
-    slo = (args.slo_ms / 1e3) or None
-    for i in range(args.queries):
-        if i % 3 == 2:
-            req = QueryRequest(rid=i, kind="ppr", source=int(hubs[i % 3]),
-                               k=10, epsilon=0.3, slo_s=slo,
-                               allow_downgrade=True)
-        else:
-            req = QueryRequest(rid=i, kind="topk", k=10, epsilon=0.3,
-                               slo_s=slo, allow_downgrade=True)
-        decision = sched.submit(req)
-        if not decision.admitted:
-            print(f"  q{i:02d} REJECTED at admission: {decision.reason}")
-        elif decision.downgraded:
-            print(f"  q{i:02d} downgraded to {decision.num_walks} walks "
-                  f"(ε bound {decision.plan.epsilon_bound:.3f}) to fit "
-                  f"{args.slo_ms:.0f}ms SLO")
+        hubs = np.asarray(g.out_deg).argsort()[-3:]
+        slo = (args.slo_ms / 1e3) or None
+        budget = args.budget_walks or None
+        handles = []
+        for i in range(args.queries):
+            if i % 3 == 2:
+                h = svc.ppr(int(hubs[i % 3]), k=10, epsilon=0.3, slo_s=slo,
+                            num_walks=budget, allow_downgrade=True)
+            else:
+                h = svc.topk(k=10, epsilon=0.3, slo_s=slo,
+                             num_walks=budget, allow_downgrade=True)
+            handles.append(h)
+            if not h.admitted:
+                print(f"  q{h.rid:02d} REJECTED at admission: "
+                      f"{h.decision.reason}")
+            elif h.decision.downgraded:
+                print(f"  q{h.rid:02d} downgraded to "
+                      f"{h.decision.num_walks} walks (ε bound "
+                      f"{h.decision.plan.epsilon_bound:.3f}) to fit "
+                      f"{args.slo_ms:.0f}ms SLO")
 
-    t0 = time.perf_counter()
-    results = sched.run()
-    dt = time.perf_counter() - t0
-    print(f"Served {len(results)} queries in {dt:.2f}s "
-          f"({len(results) / dt:.1f} queries/s; "
-          f"{len(sched.rejected)} rejected at admission)")
+        # Watch one future refine: its epsilon_bound tightens every wave.
+        probe = next((h for h in handles if h.admitted), None)
+        t0 = time.perf_counter()
+        if probe is not None:
+            while not probe.poll():
+                p = probe.partial()
+                print(f"  q{probe.rid:02d} partial: walks={p.walks_done} "
+                      f"ε_bound={p.epsilon_bound:.3f}")
+        results = svc.drain()
+        dt = time.perf_counter() - t0
+        print(f"Served {len(results)} queries in {dt:.2f}s "
+              f"({len(results) / dt:.1f} queries/s; "
+              f"{len(svc.scheduler.rejected)} rejected at admission)")
 
-    print("Exact PageRank (50 power iterations) for reference…")
-    pi = power_iteration(g, num_iters=50)
-    for r in results:
-        if r.kind == "topk":
-            est = np.zeros(g.n)
-            est[r.vertices] = r.scores
-            mass = float(normalized_mass_captured(
-                jax.numpy.asarray(est), pi, 10))
-            print(f"  q{r.rid:02d} topk  waves={r.waves} "
-                  f"walks={r.num_walks} mass@10={mass:.3f} "
-                  f"top5={list(map(int, r.vertices[:5]))}")
-        else:
-            print(f"  q{r.rid:02d} ppr   waves={r.waves} "
-                  f"walks={r.num_walks} source→top5="
-                  f"{list(map(int, r.vertices[:5]))} "
-                  f"scores={np.round(r.scores[:5], 4).tolist()}")
+        print("Exact PageRank (50 power iterations) for reference…")
+        pi = power_iteration(g, num_iters=50)
+        for r in sorted(results, key=lambda r: r.rid):
+            early = " early-stop" if r.early_stopped else ""
+            if r.kind == "topk":
+                est = np.zeros(g.n)
+                est[r.vertices] = r.scores
+                mass = float(normalized_mass_captured(
+                    jax.numpy.asarray(est), pi, 10))
+                print(f"  q{r.rid:02d} topk  waves={r.waves} "
+                      f"walks={r.num_walks} ε_bound={r.epsilon_bound:.3f}"
+                      f"{early} mass@10={mass:.3f} "
+                      f"top5={list(map(int, r.vertices[:5]))}")
+            else:
+                print(f"  q{r.rid:02d} ppr   waves={r.waves} "
+                      f"walks={r.num_walks} ε_bound={r.epsilon_bound:.3f}"
+                      f"{early} source→top5="
+                      f"{list(map(int, r.vertices[:5]))} "
+                      f"scores={np.round(r.scores[:5], 4).tolist()}")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,14 @@
 #!/usr/bin/env bash
 # Canonical tier-1 verification — the one command builders and CI invoke.
 # Extra pytest args pass through, e.g. scripts/ci_tier1.sh -k query
-# --bench-smoke additionally runs the dispatch equivalence sweeps
-# (benchmarks/bench_kernels.py --smoke: every kernel impl= path incl. the
-# stitch/local-stitch variants; benchmarks/bench_query.py --smoke: gathered
-# vs sharded-slab serving — tiny sizes, no BENCH json rewrite) so a broken
-# dispatch fails tier-1 instead of only bench runs.
+# --bench-smoke additionally runs (1) the service-API gate — the API-surface
+# snapshot (tests/test_api_surface.py) plus the facade/shim byte-compat and
+# QueryHandle anytime tests (tests/test_service_api.py) — and (2) the
+# dispatch equivalence sweeps (benchmarks/bench_kernels.py --smoke: every
+# kernel impl= path incl. the stitch/local-stitch variants;
+# benchmarks/bench_query.py --smoke: gathered vs sharded-slab vs
+# handle-driven serving — tiny sizes, no BENCH json rewrite) so a broken
+# dispatch or surface change fails tier-1 instead of only bench runs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -23,6 +26,13 @@ done
 python -m pytest -x -q ${args[@]+"${args[@]}"}
 
 if [[ "$BENCH_SMOKE" == 1 ]]; then
+  # service smoke: API-surface snapshot + facade/shim byte-compat gate.
+  # The unfiltered full-suite run above already collects these files, so
+  # only re-run them explicitly when pass-through args may have filtered
+  # them out of the main run.
+  if [[ ${#args[@]} -gt 0 ]]; then
+    python -m pytest -q tests/test_api_surface.py tests/test_service_api.py
+  fi
   PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/bench_kernels.py --smoke
   PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \

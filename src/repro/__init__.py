@@ -1,4 +1,28 @@
-"""FrogWild! reproduction package.
+"""FrogWild! reproduction package — served through one facade.
+
+The public surface is the **service API** (``repro/service.py``)::
+
+    from repro import FrogWildService, RuntimeConfig
+
+    svc = FrogWildService.open(graph_or_path, RuntimeConfig())
+    res = svc.pagerank(epsilon=0.3, delta=0.1)      # batch (auto dispatch)
+    h = svc.topk(k=10, epsilon=0.3)                 # async QueryHandle
+    while not h.poll():
+        print(h.partial().epsilon_bound)            # anytime: tightens
+    print(h.result().vertices)
+
+``FrogWildService.open`` owns graph ingestion, shard-runtime acquisition,
+and the walk-index lifecycle (build / load / reuse through ``checkpoint/``);
+``topk`` / ``ppr`` return :class:`~repro.service.QueryHandle` futures whose
+``partial()`` snapshots carry a monotonically tightening Theorem-1
+``epsilon_bound`` and which complete early once the requested (ε, δ) target
+is met. Configuration is the layered :class:`~repro.config.RuntimeConfig`
+(kernel + runtime + serving sub-configs, one definition per flag).
+
+The historical entry points (``frogwild_run``, ``distributed_frogwild``,
+``build_walk_index{,_sharded}``, ``QueryScheduler.submit/run``) remain as
+deprecation shims that delegate through the service and return
+byte-identical results.
 
 Importing ``repro`` (any submodule) installs the jax version-compat shims —
 the codebase targets the jax ≥ 0.5 public API (``jax.shard_map``,
@@ -8,3 +32,16 @@ the codebase targets the jax ≥ 0.5 public API (``jax.shard_map``,
 from repro.distributed.compat import install as _install_jax_compat
 
 _install_jax_compat()
+
+from repro.config import (KernelConfig, RuntimeConfig, ServingConfig,
+                          ShardConfig)
+from repro.service import FrogWildService, QueryHandle
+
+__all__ = [
+    "FrogWildService",
+    "QueryHandle",
+    "RuntimeConfig",
+    "KernelConfig",
+    "ShardConfig",
+    "ServingConfig",
+]

@@ -1,19 +1,22 @@
-"""Assigned-architecture configs (exact shapes from the public sources in the
-brief) + input-shape registry + reduced smoke configs."""
-from repro.configs.registry import (
-    ARCHS,
-    SHAPES,
-    get_config,
-    input_specs,
-    reduced_config,
-    shape_applicable,
-)
+"""Registered config family: the paper's graph workloads.
+
+``repro.configs`` exports only the FrogWild graph configs
+(``frogwild_graphs.py`` — LiveJournal / Twitter bench + full-scale specs).
+The LLM architecture registry that previously lived on this surface is a
+template leftover; the model-stack smoke tests and ``launch/`` tooling that
+still need it import it from ``repro.configs.registry`` explicitly.
+"""
+from repro.configs.frogwild_graphs import (GraphConfig, LIVEJOURNAL_BENCH,
+                                           LIVEJOURNAL_FULL, TWITTER_BENCH,
+                                           TWITTER_FULL)
+from repro.configs.registry import GRAPHS, get_graph_config
 
 __all__ = [
-    "ARCHS",
-    "SHAPES",
-    "get_config",
-    "input_specs",
-    "reduced_config",
-    "shape_applicable",
+    "GraphConfig",
+    "GRAPHS",
+    "get_graph_config",
+    "LIVEJOURNAL_BENCH",
+    "LIVEJOURNAL_FULL",
+    "TWITTER_BENCH",
+    "TWITTER_FULL",
 ]

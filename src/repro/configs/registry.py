@@ -1,10 +1,15 @@
-"""Architecture & input-shape registry.
+"""Config registry. The **public surface is the graph workload family**
+(``frogwild_graphs.py`` — the paper's datasets): ``GRAPHS`` /
+:func:`get_graph_config` are what ``repro.configs`` exports.
 
-``input_specs(arch, shape)`` returns weak-type-correct ShapeDtypeStruct
-stand-ins for every model input of the (architecture × shape) cell — the
-dry-run lowers from these without allocating anything.
+The LLM architecture × input-shape machinery below (``_ARCH_MODULES``,
+``ARCHS``, ``get_config``, ``input_specs``, …) is a template leftover kept
+*out* of the public surface (``__all__``): it still backs the model-stack
+smoke tests and the ``launch/`` dry-run tooling, which import it from this
+module explicitly, but it is not part of the FrogWild service API and is
+pinned out of it by ``tests/test_api_surface.py``.
 
-Shape semantics (assignment brief):
+Shape semantics for the LLM registry (assignment brief):
   * train_4k     — train_step   (tokens+labels, seq 4096, global batch 256)
   * prefill_32k  — serve prefill (forward, seq 32768, batch 32)
   * decode_32k   — serve_step    (ONE new token, KV cache of 32768, batch 128)
@@ -20,7 +25,33 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.configs.frogwild_graphs import (GraphConfig, LIVEJOURNAL_BENCH,
+                                           LIVEJOURNAL_FULL, TWITTER_BENCH,
+                                           TWITTER_FULL)
 from repro.models.config import ModelConfig
+
+__all__ = [
+    "GraphConfig",
+    "GRAPHS",
+    "get_graph_config",
+]
+
+# --- the registered config family: the paper's graph workloads --------------
+
+GRAPHS: Dict[str, GraphConfig] = {
+    cfg.name: cfg
+    for cfg in (LIVEJOURNAL_BENCH, TWITTER_BENCH,
+                LIVEJOURNAL_FULL, TWITTER_FULL)
+}
+
+
+def get_graph_config(name: str) -> GraphConfig:
+    if name not in GRAPHS:
+        raise KeyError(f"unknown graph {name!r}; known: {sorted(GRAPHS)}")
+    return GRAPHS[name]
+
+
+# --- LLM template machinery (internal; NOT exported) ------------------------
 
 _ARCH_MODULES = {
     "h2o-danube-3-4b": "repro.configs.h2o_danube3_4b",

@@ -48,23 +48,14 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.config import FrogWildConfig, warn_deprecated
 from repro.core.blocking import (channel_enum_draw, coin_uniform,
                                  rejection_blocking_draw,
                                  rejection_is_profitable)
 from repro.graph.csr import CSRGraph, uniform_successor
 
-
-@dataclasses.dataclass(frozen=True)
-class FrogWildConfig:
-    num_frogs: int = 100_000          # N  (paper uses 800K on 41.6M-vertex Twitter)
-    num_steps: int = 4                # t  (paper: good results with 3–4 iterations)
-    p_T: float = 0.15                 # teleport/death probability
-    p_s: float = 1.0                  # synchronization probability
-    erasure: str = "none"             # none | independent | channel
-    num_shards: int = 16              # channel model: destination shards
-    draw: str = "auto"                # auto | rejection | cumsum
-    step_impl: str = "xla"            # xla | pallas | stream | auto | ref
-                                      # (plain-step backend; see kernels/README)
+# FrogWildConfig is defined in repro/config.py (the layered-config module —
+# single definition per flag) and re-exported here for back-compat.
 
 
 @dataclasses.dataclass
@@ -181,6 +172,20 @@ def frogwild_run(
     cfg: FrogWildConfig,
     key: jax.Array,
 ) -> FrogWildResult:
+    """Deprecated entry point — use :meth:`repro.service.FrogWildService.
+    pagerank` (or :func:`repro.service.batch_pagerank`). Delegates through
+    the service so the answer is byte-identical to the facade's."""
+    warn_deprecated("frogwild_run", "FrogWildService.pagerank")
+    from repro import service
+
+    return service.batch_pagerank(g, cfg, key=key)
+
+
+def _frogwild_walks(
+    g: CSRGraph,
+    cfg: FrogWildConfig,
+    key: jax.Array,
+) -> FrogWildResult:
     """Runs the FrogWild! process and returns the stop-counter estimator."""
     n = g.n
     N, t = cfg.num_frogs, cfg.num_steps
@@ -235,7 +240,7 @@ def frogwild(
     g: CSRGraph, cfg: FrogWildConfig, seed: int = 0
 ) -> FrogWildResult:
     key = jax.random.PRNGKey(seed)
-    run = jax.jit(lambda k: _as_tuple(frogwild_run(g, cfg, k)))
+    run = jax.jit(lambda k: _as_tuple(_frogwild_walks(g, cfg, k)))
     counts, pi_hat = run(key)
     return FrogWildResult(counts=counts, pi_hat=pi_hat, num_frogs=cfg.num_frogs)
 

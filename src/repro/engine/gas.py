@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.config import EngineConfig, warn_deprecated
 from repro.core.blocking import (channel_enum_draw, coin_uniform,
                                  rejection_is_profitable)
 from repro.distributed.runtime import ShardRuntime
@@ -41,19 +42,8 @@ from repro.graph.csr import CSRGraph
 from repro.graph.partition import partition_graph
 from repro.kernels.frog_step_stream import BlockedCSR
 
-
-@dataclasses.dataclass(frozen=True)
-class EngineConfig:
-    num_frogs: int = 100_000
-    num_steps: int = 4
-    p_T: float = 0.15
-    p_s: float = 1.0
-    capacity_factor: float = 4.0     # per-channel buffer slack (≥ 1)
-    axis_name: str = "vertex"
-    draw: str = "auto"               # auto | rejection | cumsum
-    step_impl: str = "xla"           # xla | pallas | stream | auto | ref —
-    # p_s = 1 shard-local move+tally backend; "stream"/"auto" need the
-    # blocked slabs (build_distributed_graph(vertex_block=...)).
+# EngineConfig is defined in repro/config.py (the layered-config module —
+# single definition per flag) and re-exported here for back-compat.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -493,6 +483,18 @@ def _sharded_fn(dg: DistributedGraph, cfg: EngineConfig, mesh: Mesh):
 
 
 def distributed_frogwild(
+    dg: DistributedGraph, cfg: EngineConfig, mesh: Mesh, seed: int = 0
+) -> EngineResult:
+    """Deprecated entry point — use :meth:`repro.service.FrogWildService.
+    pagerank` with a mesh (or :func:`repro.service.batch_pagerank`).
+    Delegates through the service so the answer is byte-identical."""
+    warn_deprecated("distributed_frogwild", "FrogWildService.pagerank")
+    from repro import service
+
+    return service.batch_pagerank(dg, cfg, mesh=mesh, seed=seed)
+
+
+def _distributed_frogwild(
     dg: DistributedGraph, cfg: EngineConfig, mesh: Mesh, seed: int = 0
 ) -> EngineResult:
     """Runs the full FrogWild! process under ``mesh`` and returns π̂ + stats."""

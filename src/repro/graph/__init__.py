@@ -4,8 +4,8 @@ Graphs are immutable, host-generated (numpy) and converted to device arrays
 once. All downstream code (core walkers, distributed engine, kernels) consumes
 the :class:`~repro.graph.csr.CSRGraph` container.
 """
-from repro.graph.csr import (CSRGraph, build_csr, transition_edges,
-                             uniform_successor)
+from repro.graph.csr import (CSRGraph, build_csr, load_graph, save_graph,
+                             transition_edges, uniform_successor)
 from repro.graph.generators import (
     barabasi_albert,
     chung_lu_powerlaw,
@@ -17,6 +17,8 @@ from repro.graph.partition import VertexPartition, partition_graph, to_ell
 __all__ = [
     "CSRGraph",
     "build_csr",
+    "load_graph",
+    "save_graph",
     "transition_edges",
     "uniform_successor",
     "barabasi_albert",

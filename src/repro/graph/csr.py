@@ -186,6 +186,33 @@ def build_csr(
     )
 
 
+def save_graph(path: str, g: CSRGraph) -> str:
+    """Persists a graph as a single ``.npz`` (the service-facade ingestion
+    format — ``FrogWildService.open`` accepts this path directly)."""
+    gn = g.to_numpy()
+    np.savez_compressed(path, n=np.int64(g.n), row_ptr=gn.row_ptr,
+                        col_idx=gn.col_idx)
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def load_graph(path: str) -> CSRGraph:
+    """Restores a :func:`save_graph` ``.npz`` (degrees are re-derived)."""
+    with np.load(path) as z:
+        n = int(z["n"])
+        row_ptr = np.asarray(z["row_ptr"], dtype=np.int64)
+        col_idx = np.asarray(z["col_idx"], dtype=np.int64)
+    if row_ptr.shape != (n + 1,):
+        raise ValueError(
+            f"{path!r}: row_ptr has shape {row_ptr.shape}, wanted ({n + 1},)")
+    deg = row_ptr[1:] - row_ptr[:-1]
+    return CSRGraph(
+        n=n,
+        row_ptr=jnp.asarray(row_ptr, dtype=jnp.int32),
+        col_idx=jnp.asarray(col_idx, dtype=jnp.int32),
+        out_deg=jnp.asarray(deg, dtype=jnp.int32),
+    )
+
+
 def uniform_successor(
     row_ptr: jnp.ndarray,
     col_idx: jnp.ndarray,

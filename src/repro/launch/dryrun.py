@@ -23,8 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs import SHAPES, get_config, input_specs, shape_applicable
-from repro.configs.registry import ARCHS, param_specs
+from repro.configs.registry import (ARCHS, SHAPES, get_config, input_specs,
+                                    param_specs, shape_applicable)
 from repro.distributed.sharding import (
     MeshAxes,
     batch_pspec,

@@ -10,7 +10,7 @@ import time
 
 import jax
 
-from repro.configs import get_config, reduced_config
+from repro.configs.registry import get_config, reduced_config
 from repro.models.transformer import init_params
 from repro.serving import BatchScheduler, Request
 

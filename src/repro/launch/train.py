@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer, latest_step, restore_checkpoint
-from repro.configs import get_config, reduced_config
+from repro.configs.registry import get_config, reduced_config
 from repro.data import SyntheticTokens
 from repro.training import AdamWConfig, PartialSyncConfig, TrainStepConfig
 from repro.training.train_step import init_train_state, make_train_step

@@ -1,8 +1,10 @@
 """Walk-index query engine: FrogWild as an online serving primitive.
 
-The batch reproduction answers one offline top-k question per
-``frogwild_run``. This subsystem turns the same random-walk machinery into a
-*query* primitive (PowerWalk-style), executing on the shard runtime layer
+The public front door is :class:`repro.service.FrogWildService` — its
+``topk`` / ``ppr`` methods return anytime :class:`~repro.service.
+QueryHandle` futures served by this subsystem. The modules here are the
+engine room (PowerWalk-style precompute + FAST-PPR-style per-query
+confidence), executing on the shard runtime layer
 (``distributed/runtime.py``):
 
 * ``index.py``     — offline walk-segment index: for every vertex, ``R``
@@ -51,6 +53,7 @@ from repro.query.engine import (
 )
 from repro.query.scheduler import (
     AdmissionDecision,
+    QueryPartial,
     QueryRequest,
     QueryResult,
     QueryScheduler,
@@ -72,6 +75,7 @@ __all__ = [
     "sample_walk_lengths",
     "walk_wave",
     "AdmissionDecision",
+    "QueryPartial",
     "QueryRequest",
     "QueryResult",
     "QueryScheduler",

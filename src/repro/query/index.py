@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import latest_step, save_checkpoint
+from repro.config import WalkIndexConfig, warn_deprecated
 from repro.distributed.runtime import (ShardRuntime, list_shard_dirs,
                                        load_checkpoint_tree,
                                        load_shard_checkpoints,
@@ -61,14 +62,8 @@ from repro.distributed.runtime import (ShardRuntime, list_shard_dirs,
 from repro.graph.csr import CSRGraph, uniform_successor
 from repro.graph.partition import partition_graph
 
-
-@dataclasses.dataclass(frozen=True)
-class WalkIndexConfig:
-    segments_per_vertex: int = 16     # R — endpoints stored per vertex
-    segment_len: int = 4              # L — steps per precomputed segment
-    num_shards: int = 8               # build sharding (graph/partition.py)
-    step_impl: str = "xla"            # xla | pallas | stream | auto | ref
-    seed: int = 0
+# WalkIndexConfig is defined in repro/config.py (the layered-config module —
+# single definition per flag) and re-exported here for back-compat.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -207,6 +202,18 @@ class _ShardWalker:
 def build_walk_index(
     g: CSRGraph, cfg: WalkIndexConfig, key: Optional[jax.Array] = None
 ) -> WalkIndex:
+    """Deprecated entry point — use :meth:`repro.service.FrogWildService.
+    ensure_index` (or :func:`repro.service.build_index`). Delegates through
+    the service so the slab is byte-identical to the facade's."""
+    warn_deprecated("build_walk_index", "FrogWildService.ensure_index")
+    from repro import service
+
+    return service.build_index(g, cfg, key=key)
+
+
+def _build_walk_index(
+    g: CSRGraph, cfg: WalkIndexConfig, key: Optional[jax.Array] = None
+) -> WalkIndex:
     """Builds the ``int32[n, R]`` endpoint slab, one range shard at a time
     (the runtime's single-device host-loop dispatch)."""
     if cfg.segment_len < 1:
@@ -232,6 +239,27 @@ def build_walk_index(
 
 
 def build_walk_index_sharded(
+    g: CSRGraph,
+    cfg: WalkIndexConfig,
+    mesh,
+    directory: Optional[str] = None,
+    key: Optional[jax.Array] = None,
+    axis_name: str = "vertex",
+    step: int = 0,
+    reassemble: bool = True,
+) -> Union[WalkIndex, ShardedWalkIndex]:
+    """Deprecated entry point — use :meth:`repro.service.FrogWildService.
+    ensure_index` (or :func:`repro.service.build_index` with ``mesh=``).
+    Delegates through the service so the slab is byte-identical."""
+    warn_deprecated("build_walk_index_sharded", "FrogWildService.ensure_index")
+    from repro import service
+
+    return service.build_index(g, cfg, mesh=mesh, directory=directory,
+                               key=key, axis_name=axis_name, step=step,
+                               reassemble=reassemble)
+
+
+def _build_walk_index_sharded(
     g: CSRGraph,
     cfg: WalkIndexConfig,
     mesh,

@@ -31,10 +31,13 @@ loop, one block resident at a time. All three paths draw from the same key
 stream, so with the same slab content they produce byte-identical answers
 (tests assert it).
 
-**Admission** is deadline-aware: ``QueryRequest.slo_s`` declares a latency
-SLO, and ``submit()`` checks the Theorem-1 ``(t, N)`` plan against the
-remaining wave budget (measured wave time × waves needed at full machine
-allocation — the FAST-PPR-style per-query budget). An infeasible query is
+**Admission** is deadline- and queue-depth-aware: ``QueryRequest.slo_s``
+declares a latency SLO, and ``submit()`` checks the Theorem-1 ``(t, N)``
+plan against the remaining wave budget (measured wave time × waves at full
+machine throughput — the FAST-PPR-style per-query budget), charged for the
+already-admitted walk demand that outranks the request under EDF
+(earlier-or-equal deadlines; no-SLO work is never charged). An infeasible
+query is
 rejected up front, or — with ``allow_downgrade`` — its walk count is
 clamped to what fits and the weakened guarantee is *recorded* in
 ``QueryPlan.epsilon_bound`` (never a silent miss). Plans are also clamped
@@ -46,6 +49,15 @@ Different queries in one wave may have different planned truncations ``t``
 (per-walk ``t_cap``) and different kinds (global top-k draws uniform starts,
 personalized PageRank pins the start vertex) — the program shape never
 changes, so XLA compiles exactly once per scheduler.
+
+**Anytime serving** (PR 5): per-query tallies track the walks *executed*
+so far, and :meth:`QueryScheduler.partial` exposes the estimate together
+with the ε Theorem 1 certifies for those walks — monotone non-increasing
+wave over wave. A request with ``early_stop`` finishes as soon as that
+bound reaches its requested ``epsilon``, even with walk budget left. The
+public way to drive all of this is the :class:`repro.service.QueryHandle`
+future (``submit()`` / ``run()`` here are deprecation shims kept for the
+legacy callers).
 """
 from __future__ import annotations
 
@@ -58,6 +70,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.config import warn_deprecated
+from repro.core import theory
 from repro.distributed.runtime import ShardRuntime
 from repro.graph.csr import CSRGraph
 from repro.kernels import ops
@@ -77,6 +91,8 @@ class QueryRequest:
     num_walks: Optional[int] = None  # override the (ε, δ) plan's walk count
     slo_s: Optional[float] = None    # latency SLO (deadline = submit + slo_s)
     allow_downgrade: bool = False    # shrink the plan to fit the SLO budget
+    early_stop: bool = False         # finish once the anytime Theorem-1
+                                     # bound reaches epsilon (QueryHandle mode)
     t_submit: Optional[float] = None # stamped by QueryScheduler.submit()
 
 
@@ -105,13 +121,35 @@ class QueryResult:
     kind: str
     vertices: np.ndarray             # int64[k] — estimated top-k
     scores: np.ndarray               # f64[k]  — π̂ / PPR estimates
-    num_walks: int
+    num_walks: int                   # walks actually executed (≤ budget)
     num_steps: int
     waves: int                       # device waves this query spanned
     latency_s: float
     epsilon_bound: float = 0.0       # the ε Theorem 1 certifies for (t, N)
     downgraded: bool = False         # admission shrank the plan to fit SLO
     met_slo: Optional[bool] = None   # None when no SLO was requested
+    early_stopped: bool = False      # anytime bound met before the budget
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPartial:
+    """Anytime snapshot of an in-flight (or finished) query.
+
+    ``epsilon_bound`` is the ε Theorem 1 certifies for the walks tallied
+    *so far* (``math.inf`` before the first wave lands); it tightens
+    monotonically as waves accumulate — the anytime property the
+    :class:`repro.service.QueryHandle` future exposes.
+    """
+
+    rid: int
+    kind: str
+    k: int
+    vertices: np.ndarray             # int64[≤k] — current top-k estimate
+    scores: np.ndarray               # f64[≤k]
+    walks_done: int
+    waves: int
+    epsilon_bound: float
+    done: bool
 
 
 @dataclasses.dataclass
@@ -134,6 +172,7 @@ class _Active:
     t_submit: float
     deadline: float
     downgraded: bool
+    executed: int = 0                # walks whose tallies have landed
 
 
 class QueryScheduler:
@@ -163,6 +202,7 @@ class QueryScheduler:
         self.active: Dict[int, _Active] = {}
         self.finished: List[QueryResult] = []
         self.rejected: List[AdmissionDecision] = []
+        self.cancelled: List[int] = []
         self._key = jax.random.PRNGKey(seed)
         self._wave_time = wave_time_estimate_s   # EMA of measured wave s
         self._waves_run = 0
@@ -370,6 +410,13 @@ class QueryScheduler:
     # --- admission (deadline-aware) --------------------------------------
 
     def submit(self, req: QueryRequest) -> AdmissionDecision:
+        """Deprecated entry point — use :meth:`repro.service.
+        FrogWildService.topk` / :meth:`~repro.service.FrogWildService.ppr`,
+        whose :class:`~repro.service.QueryHandle` futures delegate here."""
+        warn_deprecated("QueryScheduler.submit", "FrogWildService.topk/ppr")
+        return self._submit(req)
+
+    def _submit(self, req: QueryRequest) -> AdmissionDecision:
         """Validates, plans, and admission-checks a request.
 
         Returns the :class:`AdmissionDecision`; rejected requests are
@@ -404,31 +451,44 @@ class QueryScheduler:
         downgraded = False
 
         if req.slo_s is not None and self._wave_time is not None:
-            # Remaining wave budget under the SLO, assuming best-case (full
-            # machine) allocation — an optimistic bound, so a rejection
-            # here is certain to be correct.
+            # Remaining wave budget under the SLO at full-machine
+            # throughput (max_walks walks per wave) — charged for *queue
+            # depth*: already-admitted walk demand whose deadline is at or
+            # before this request's outranks it under EDF and drains from
+            # the same wave budget first (no-SLO work, deadline = ∞, is
+            # never charged — EDF orders it behind every deadline). This
+            # is an estimate, not a certainty: fair-share allocation still
+            # guarantees every active query its per-wave share, so a
+            # charged query can finish sooner than the model says — the
+            # estimate deliberately errs toward protecting the SLOs
+            # already admitted.
+            deadline_new = req.t_submit + req.slo_s
+            backlog = (sum(e.walks for e in self.queue
+                           if e.deadline <= deadline_new)
+                       + sum(a.remaining for a in self.active.values()
+                             if a.deadline <= deadline_new))
             feasible = int(req.slo_s / self._wave_time)
-            needed = -(-walks // self.max_walks)
+            needed = -(-(walks + backlog) // self.max_walks)
             if feasible < 1:
                 return self._reject(
                     req, plan,
                     f"SLO {req.slo_s:.3g}s is shorter than one wave "
                     f"(≈{self._wave_time:.3g}s)")
             if needed > feasible:
-                if not req.allow_downgrade:
+                budget = feasible * self.max_walks - backlog
+                if not req.allow_downgrade or budget < 1:
                     return self._reject(
                         req, plan,
-                        f"plan needs {needed} waves, only {feasible} fit "
-                        f"the {req.slo_s:.3g}s SLO")
-                walks = feasible * self.max_walks
+                        f"plan needs {needed} waves ({backlog} walks "
+                        f"queued ahead at earlier deadlines), only "
+                        f"{feasible} fit the {req.slo_s:.3g}s SLO")
                 plan = plan_query(
                     req.k, req.epsilon, req.delta, p_T=self.p_T,
-                    max_walks=walks, max_steps=self.max_steps,
+                    max_walks=budget, max_steps=self.max_steps,
                     segments_per_vertex=self.index.segments_per_vertex,
                     segment_len=self.index.segment_len)
-                walks = min(walks, plan.num_walks if req.num_walks is None
+                walks = min(budget, plan.num_walks if req.num_walks is None
                             else req.num_walks)
-                walks = min(walks, feasible * self.max_walks)
                 downgraded = True
 
         deadline = (math.inf if req.slo_s is None
@@ -529,29 +589,138 @@ class QueryScheduler:
             a = self.active[s]
             a.counts += counts[s]
             a.remaining -= w
+            a.executed += w
             a.waves += 1
-            if a.remaining == 0:
-                self.finished.append(self._finalize(a, now))
+            early = (a.remaining > 0 and a.req.early_stop
+                     and self._anytime_bound(a.plan.num_steps, a.req.k,
+                                             a.req.delta, a.executed)
+                     <= a.req.epsilon)
+            if a.remaining == 0 or early:
+                self.finished.append(self._finalize(a, now, early=early))
                 del self.active[s]
         return True
 
-    def _finalize(self, a: _Active, now: float) -> QueryResult:
-        scores = a.counts / float(a.total_walks)
+    # --- anytime (ε, δ) refinement ---------------------------------------
+
+    def _anytime_bound(self, num_steps: int, k: int, delta: float,
+                       executed: int) -> float:
+        """The ε Theorem 1 certifies for the walks tallied so far (p_s = 1
+        serving walks, p_cap = 0). Monotone non-increasing in ``executed``
+        — every extra wave tightens it; ``inf`` before the first wave."""
+        if executed < 1:
+            return math.inf
+        return theory.epsilon_bound(self.p_T, num_steps, k, delta,
+                                    executed, 1.0, 0.0)
+
+    def _finalize(self, a: _Active, now: float,
+                  early: bool = False) -> QueryResult:
+        scores = a.counts / float(a.executed)
         k = min(a.req.k, self.g.n)
         top = np.argsort(-scores, kind="stable")[:k]
         latency = now - a.t_submit
+        # Early-stopped (anytime) queries carry the bound their executed
+        # walks actually certify; budget-drained queries keep the plan's
+        # recorded bound (incl. any admission downgrade).
+        bound = (self._anytime_bound(a.plan.num_steps, a.req.k, a.req.delta,
+                                     a.executed)
+                 if a.req.early_stop else a.plan.epsilon_bound)
         return QueryResult(
             rid=a.req.rid, kind=a.req.kind, vertices=top,
-            scores=scores[top], num_walks=a.total_walks,
+            scores=scores[top], num_walks=a.executed,
             num_steps=a.plan.num_steps, waves=a.waves,
             latency_s=latency,
-            epsilon_bound=a.plan.epsilon_bound,
+            epsilon_bound=bound,
             downgraded=a.downgraded,
             met_slo=(None if a.req.slo_s is None
                      else bool(latency <= a.req.slo_s)),
+            early_stopped=early,
         )
 
+    # --- anytime introspection (the QueryHandle surface) ------------------
+
+    def query_state(self, rid: int) -> str:
+        """``queued`` | ``active`` | ``finished`` | ``rejected`` |
+        ``cancelled`` | ``unknown``."""
+        if any(r.rid == rid for r in self.finished):
+            return "finished"
+        if any(a.req.rid == rid for a in self.active.values()):
+            return "active"
+        if any(e.req.rid == rid for e in self.queue):
+            return "queued"
+        if rid in self.cancelled:
+            return "cancelled"
+        if any(d.rid == rid for d in self.rejected):
+            return "rejected"
+        return "unknown"
+
+    def result_for(self, rid: int) -> QueryResult:
+        for r in self.finished:
+            if r.rid == rid:
+                return r
+        raise KeyError(f"query {rid} has no finished result "
+                       f"(state: {self.query_state(rid)})")
+
+    def partial(self, rid: int) -> QueryPartial:
+        """Anytime snapshot: the current top-k estimate plus the ε the
+        tallied walks certify so far (``inf`` before the first wave)."""
+        for r in self.finished:
+            if r.rid == rid:
+                return QueryPartial(
+                    rid=rid, kind=r.kind, k=len(r.vertices),
+                    vertices=r.vertices, scores=r.scores,
+                    walks_done=r.num_walks, waves=r.waves,
+                    epsilon_bound=r.epsilon_bound, done=True)
+        for a in self.active.values():
+            if a.req.rid != rid:
+                continue
+            k = min(a.req.k, self.g.n)
+            if a.executed:
+                scores = a.counts / float(a.executed)
+                top = np.argsort(-scores, kind="stable")[:k]
+                vertices, top_scores = top, scores[top]
+            else:
+                vertices = np.zeros(0, np.int64)
+                top_scores = np.zeros(0, np.float64)
+            return QueryPartial(
+                rid=rid, kind=a.req.kind, k=k, vertices=vertices,
+                scores=top_scores, walks_done=a.executed, waves=a.waves,
+                epsilon_bound=self._anytime_bound(
+                    a.plan.num_steps, a.req.k, a.req.delta, a.executed),
+                done=False)
+        for e in self.queue:
+            if e.req.rid == rid:
+                return QueryPartial(
+                    rid=rid, kind=e.req.kind, k=min(e.req.k, self.g.n),
+                    vertices=np.zeros(0, np.int64),
+                    scores=np.zeros(0, np.float64),
+                    walks_done=0, waves=0, epsilon_bound=math.inf,
+                    done=False)
+        raise KeyError(f"no in-flight query {rid} "
+                       f"(state: {self.query_state(rid)})")
+
+    def cancel(self, rid: int) -> bool:
+        """Drops a queued or in-flight query (its tallies are discarded).
+        Returns False when there is nothing left to cancel."""
+        for i, e in enumerate(self.queue):
+            if e.req.rid == rid:
+                del self.queue[i]
+                self.cancelled.append(rid)
+                return True
+        for s, a in list(self.active.items()):
+            if a.req.rid == rid:
+                del self.active[s]
+                self.cancelled.append(rid)
+                return True
+        return False
+
     def run(self) -> List[QueryResult]:
+        """Deprecated entry point — use :meth:`repro.service.
+        FrogWildService.drain` (or drive :class:`~repro.service.QueryHandle`
+        futures via ``poll()`` / ``result()``)."""
+        warn_deprecated("QueryScheduler.run", "FrogWildService.drain")
+        return self._drain()
+
+    def _drain(self) -> List[QueryResult]:
         """Drains queue + in-flight queries; returns results in finish order."""
         while self.step_wave():
             pass

@@ -1,0 +1,504 @@
+"""Unified service facade: one front door for batch, index, and serving.
+
+FrogWild is an *anytime* estimator — every extra wave of walks tightens the
+Theorem-1 bound — but the repo historically exposed it through four
+divergent entry points (``frogwild_run``, ``distributed_frogwild``,
+``build_walk_index{,_sharded}``, ``QueryScheduler.submit/run``) with three
+overlapping config dataclasses. This module is the redesigned surface:
+
+* :class:`FrogWildService` — ``open(graph_or_path, config)`` owns graph
+  ingestion (a :class:`~repro.graph.csr.CSRGraph` or a ``save_graph``
+  ``.npz`` path), :class:`~repro.distributed.runtime.ShardRuntime`
+  acquisition, and the walk-index lifecycle (build / load / reuse through
+  ``checkpoint/`` when ``RuntimeConfig.serving.checkpoint_dir`` is set).
+  ``pagerank(eps, delta)`` is the batch estimator, dispatching the
+  single-device walker oracle or the mesh engine automatically; ``topk``
+  and ``ppr`` return :class:`QueryHandle` futures served by the
+  continuous-batching scheduler (admission, EDF allocation, and downgrade
+  semantics unchanged underneath).
+
+* :class:`QueryHandle` — a future with ``poll()`` / ``partial()`` /
+  ``result()`` / ``cancel()``. Each ``partial()`` snapshot carries the ε
+  Theorem 1 certifies for the walks tallied *so far* — monotonically
+  tightening wave over wave (FAST-PPR's per-query confidence, PowerWalk's
+  index-then-serve decomposition) — and with ``early_stop`` (the default)
+  the query completes as soon as the requested ``(ε, δ)`` bound is met,
+  even if its walk budget is not drained.
+
+* :func:`batch_pagerank` / :func:`build_index` — the canonical module-level
+  dispatchers the legacy entry points now delegate through (they emit
+  ``DeprecationWarning`` and return byte-identical results).
+
+Config is the layered :class:`~repro.config.RuntimeConfig` (kernel +
+runtime + serving sub-configs — see ``repro/config.py``); the legacy
+dataclasses are accepted everywhere a shim needs them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import List, Optional, Union
+
+import jax
+
+from repro.config import (EngineConfig, FrogWildConfig, KernelConfig,
+                          RuntimeConfig, ServingConfig, ShardConfig,
+                          WalkIndexConfig)
+from repro.core.frogwild import (FrogWildResult, _as_tuple,
+                                 _frogwild_walks)
+from repro.distributed.runtime import ShardRuntime
+from repro.engine import gas as _gas
+from repro.graph.csr import CSRGraph, load_graph
+from repro.query import index as _qindex
+from repro.query.engine import plan_query
+from repro.query.index import ShardedWalkIndex, WalkIndex
+from repro.query.scheduler import (QueryPartial, QueryRequest, QueryResult,
+                                   QueryScheduler)
+
+__all__ = [
+    "FrogWildService",
+    "QueryHandle",
+    "QueryPartial",
+    "RuntimeConfig",
+    "KernelConfig",
+    "ShardConfig",
+    "ServingConfig",
+    "batch_pagerank",
+    "build_index",
+]
+
+
+# ---------------------------------------------------------------------------
+# canonical module-level dispatchers (the legacy shims delegate through these)
+# ---------------------------------------------------------------------------
+
+
+def _as_runtime_config(config) -> RuntimeConfig:
+    if isinstance(config, RuntimeConfig):
+        return config
+    if isinstance(config, FrogWildConfig):
+        return RuntimeConfig.from_frogwild(config)
+    if isinstance(config, EngineConfig):
+        return RuntimeConfig.from_engine(config)
+    if isinstance(config, WalkIndexConfig):
+        return RuntimeConfig.from_walk_index(config)
+    raise TypeError(f"unsupported config type {type(config).__name__}")
+
+
+def batch_pagerank(
+    graph: Union[CSRGraph, "_gas.DistributedGraph"],
+    config: Union[RuntimeConfig, FrogWildConfig, EngineConfig],
+    *,
+    key: Optional[jax.Array] = None,
+    seed: Optional[int] = None,
+    mesh=None,
+):
+    """One batch FrogWild run — the single dispatch point under both the
+    service's :meth:`FrogWildService.pagerank` and the legacy
+    ``frogwild_run`` / ``distributed_frogwild`` shims.
+
+    A mesh (or a prebuilt :class:`~repro.engine.gas.DistributedGraph`)
+    routes to the distributed engine (seeded by ``seed``); otherwise the
+    single-device walker oracle runs with ``key`` (or ``PRNGKey(seed)``).
+    """
+    if isinstance(graph, _gas.DistributedGraph):
+        if mesh is None:
+            raise ValueError("a DistributedGraph run needs mesh=")
+        cfg = (config.engine() if isinstance(config, RuntimeConfig)
+               else config)
+        return _gas._distributed_frogwild(graph, cfg, mesh,
+                                          seed=0 if seed is None else seed)
+    if mesh is not None:
+        rc = _as_runtime_config(config)
+        rt = ShardRuntime.for_mesh(mesh, rc.runtime.axis_name)
+        dg = _gas.build_distributed_graph(
+            graph, rt.num_shards, vertex_block=rc.runtime.vertex_block)
+        return _gas._distributed_frogwild(dg, rc.engine(), mesh,
+                                          seed=0 if seed is None else seed)
+    cfg = config.frogwild() if isinstance(config, RuntimeConfig) else config
+    if key is None:
+        key = jax.random.PRNGKey(0 if seed is None else seed)
+    return _frogwild_walks(graph, cfg, key)
+
+
+def build_index(
+    graph: CSRGraph,
+    config: Union[RuntimeConfig, WalkIndexConfig],
+    *,
+    key: Optional[jax.Array] = None,
+    mesh=None,
+    directory: Optional[str] = None,
+    axis_name: str = "vertex",
+    step: int = 0,
+    reassemble: bool = True,
+) -> Union[WalkIndex, ShardedWalkIndex]:
+    """One walk-index build — the single dispatch point under the service's
+    index lifecycle and the legacy ``build_walk_index{,_sharded}`` shims.
+
+    With a mesh the build runs as one ``shard_map`` (each device
+    materializes only its slab block); otherwise the host shard loop. With
+    ``directory`` the result is persisted through ``checkpoint/``.
+    """
+    cfg = (config.walk_index() if isinstance(config, RuntimeConfig)
+           else config)
+    if mesh is not None:
+        return _qindex._build_walk_index_sharded(
+            graph, cfg, mesh, directory=directory, key=key,
+            axis_name=axis_name, step=step, reassemble=reassemble)
+    idx = _qindex._build_walk_index(graph, cfg, key)
+    if directory is not None:
+        _qindex.save_walk_index(directory, idx, step=step)
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# the async query surface
+# ---------------------------------------------------------------------------
+
+
+class QueryHandle:
+    """Future for one submitted query, with anytime (ε, δ) refinement.
+
+    * ``poll()``    — advance the service by at most one wave; True when done.
+    * ``partial()`` — snapshot of the current estimate; its
+      ``epsilon_bound`` (the ε certified for the walks tallied so far)
+      tightens monotonically wave over wave.
+    * ``result()``  — drive waves until this query completes.
+    * ``cancel()``  — drop it from the queue / its slot.
+
+    Handles are cooperative: any handle's ``poll()`` / ``result()``
+    advances the shared scheduler, so all in-flight queries make progress
+    together (continuous batching).
+    """
+
+    def __init__(self, service: "FrogWildService", request: QueryRequest,
+                 decision):
+        self._service = service
+        self.request = request
+        self.decision = decision
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    @property
+    def admitted(self) -> bool:
+        return bool(self.decision.admitted)
+
+    def status(self) -> str:
+        """``rejected`` | ``queued`` | ``active`` | ``finished`` |
+        ``cancelled``."""
+        if not self.admitted:
+            return "rejected"
+        return self._service.scheduler.query_state(self.rid)
+
+    def done(self) -> bool:
+        return self.status() in ("finished", "cancelled", "rejected")
+
+    def poll(self) -> bool:
+        """Advances the service by one wave unless already done."""
+        if not self.done():
+            self._service.step()
+        return self.done()
+
+    def partial(self) -> QueryPartial:
+        """Current anytime snapshot (no waves are driven)."""
+        st = self.status()
+        if st in ("rejected", "cancelled"):
+            raise RuntimeError(
+                f"query {self.rid} is {st}"
+                + (f": {self.decision.reason}" if st == "rejected" else ""))
+        return self._service.scheduler.partial(self.rid)
+
+    def result(self, max_waves: Optional[int] = None) -> QueryResult:
+        """Drives waves until this query finishes and returns its result."""
+        if not self.admitted:
+            raise RuntimeError(
+                f"query {self.rid} rejected at admission: "
+                f"{self.decision.reason}")
+        waves = 0
+        while True:
+            st = self.status()
+            if st == "finished":
+                return self._service.scheduler.result_for(self.rid)
+            if st == "cancelled":
+                raise RuntimeError(f"query {self.rid} was cancelled")
+            if max_waves is not None and waves >= max_waves:
+                raise TimeoutError(
+                    f"query {self.rid} still {st} after {waves} waves")
+            if not self._service.step():
+                raise RuntimeError(
+                    f"scheduler idle but query {self.rid} is {st}")
+            waves += 1
+
+    def cancel(self) -> bool:
+        """Drops the query; False when it already finished (or never ran)."""
+        if not self.admitted:
+            return False
+        return self._service.scheduler.cancel(self.rid)
+
+
+# ---------------------------------------------------------------------------
+# the facade
+# ---------------------------------------------------------------------------
+
+
+class FrogWildService:
+    """The one front door: batch PageRank, walk-index lifecycle, and async
+    top-k / PPR serving over a single graph.
+
+    Build one with :meth:`open`; everything else (runtime acquisition,
+    index build-or-load, scheduler construction) is lazy and owned by the
+    service.
+    """
+
+    def __init__(self, graph: CSRGraph, config: RuntimeConfig, *,
+                 mesh=None, index=None):
+        self.graph = graph
+        self.config = config
+        self._mesh = mesh
+        if mesh is not None:
+            self.runtime = ShardRuntime.for_mesh(mesh,
+                                                 config.runtime.axis_name)
+        elif config.runtime.num_shards > 1:
+            self.runtime = ShardRuntime.acquire(config.runtime.num_shards,
+                                                config.runtime.axis_name)
+        else:
+            self.runtime = None
+        self._index = index
+        self._scheduler: Optional[QueryScheduler] = None
+        self._dg = None                  # cached DistributedGraph
+        self._dg_key = None
+        self._next_rid = 0
+
+    # --- lifecycle -------------------------------------------------------
+
+    @classmethod
+    def open(
+        cls,
+        graph_or_path: Union[CSRGraph, str, os.PathLike],
+        config: Optional[RuntimeConfig] = None,
+        *,
+        mesh=None,
+        index: Union[WalkIndex, ShardedWalkIndex, None] = None,
+    ) -> "FrogWildService":
+        """Opens a service over a graph (or a ``save_graph`` ``.npz`` path).
+
+        ``mesh`` routes batch runs through the distributed engine and (when
+        its shard count matches ``config.runtime.num_shards``) sharded
+        serving through one ``shard_map``; ``index`` short-circuits the
+        index lifecycle with a prebuilt slab.
+        """
+        if config is None:
+            config = RuntimeConfig()
+        elif not isinstance(config, RuntimeConfig):
+            config = _as_runtime_config(config)
+        if isinstance(graph_or_path, (str, os.PathLike)):
+            graph = load_graph(os.fspath(graph_or_path))
+        elif isinstance(graph_or_path, CSRGraph):
+            graph = graph_or_path
+        else:
+            raise TypeError(
+                f"graph_or_path must be a CSRGraph or a path, got "
+                f"{type(graph_or_path).__name__}")
+        return cls(graph, config, mesh=mesh, index=index)
+
+    def close(self) -> None:
+        """Drops the scheduler / index / graph caches (idempotent)."""
+        self._scheduler = None
+        self._index = None
+        self._dg = None
+        self._dg_key = None
+
+    def __enter__(self) -> "FrogWildService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # --- walk-index lifecycle -------------------------------------------
+
+    def ensure_index(self) -> Union[WalkIndex, ShardedWalkIndex]:
+        """Build / load / reuse the walk index (idempotent).
+
+        With ``serving.checkpoint_dir`` set, an existing on-disk index is
+        loaded (and validated against the configured geometry); otherwise
+        the index is built — as one ``shard_map`` when the service owns a
+        multi-device mesh matching ``runtime.num_shards``, else via the
+        host shard loop — and persisted to the checkpoint dir if given.
+        The slab is served sharded (never reassembled) whenever
+        ``runtime.num_shards > 1``.
+        """
+        if self._index is None:
+            self._index = self._load_or_build_index()
+        S = self.config.runtime.num_shards
+        if S > 1:
+            # runtime.num_shards declares the serving layout: a dense slab
+            # (built, loaded, or passed in) is range-partitioned here, and
+            # a sharded one laid out for a different shard count (e.g. a
+            # checkpoint from a differently-configured run) is re-split —
+            # never silently served at the checkpoint's layout.
+            if isinstance(self._index, WalkIndex):
+                self._index = _qindex.shard_walk_index(self._index, S)
+            elif self._index.num_shards != S:
+                self._index = _qindex.shard_walk_index(
+                    self._index.reassemble(), S)
+        return self._index
+
+    def _load_or_build_index(self) -> Union[WalkIndex, ShardedWalkIndex]:
+        icfg = self.config.walk_index()
+        S = self.config.runtime.num_shards
+        directory = self.config.serving.checkpoint_dir
+        if directory is not None:
+            try:
+                idx = _qindex.load_walk_index(directory,
+                                              reassemble=(S <= 1))
+            except FileNotFoundError:
+                idx = None
+            if idx is not None:
+                if (idx.segments_per_vertex != icfg.segments_per_vertex
+                        or idx.segment_len != icfg.segment_len):
+                    raise ValueError(
+                        f"walk index under {directory!r} has (R, L) = "
+                        f"({idx.segments_per_vertex}, {idx.segment_len}) "
+                        f"but the config wants "
+                        f"({icfg.segments_per_vertex}, {icfg.segment_len});"
+                        f" rebuild or point checkpoint_dir elsewhere")
+                return idx
+        if (S > 1 and self.runtime is not None and self.runtime.is_mesh
+                and self.runtime.num_shards == S):
+            return build_index(
+                self.graph, icfg, mesh=self.runtime.mesh,
+                axis_name=self.config.runtime.axis_name,
+                directory=directory, reassemble=False)
+        return build_index(self.graph, icfg, directory=directory)
+
+    # --- batch -----------------------------------------------------------
+
+    def pagerank(
+        self,
+        epsilon: Optional[float] = None,
+        delta: float = 0.1,
+        k: int = 10,
+        *,
+        key: Optional[jax.Array] = None,
+        seed: Optional[int] = None,
+        config: Optional[RuntimeConfig] = None,
+    ):
+        """One batch FrogWild estimate of the full PageRank vector.
+
+        With ``epsilon`` given, Theorem 1 is inverted into ``(t, N)`` for a
+        ``μ_k`` guarantee at confidence ``1 − delta`` (plans at p_s = 1);
+        otherwise the config's ``num_frogs`` / ``num_steps`` run as-is.
+        Dispatch is automatic: a service opened with a mesh runs the
+        distributed engine (returns :class:`~repro.engine.gas.
+        EngineResult`), else the single-device walker oracle (returns
+        :class:`~repro.core.frogwild.FrogWildResult`).
+        """
+        rc = config if config is not None else self.config
+        if epsilon is not None:
+            plan = plan_query(k, epsilon, delta, p_T=rc.p_T,
+                              max_steps=rc.serving.max_steps)
+            rc = dataclasses.replace(rc, num_frogs=plan.num_walks,
+                                     num_steps=plan.num_steps)
+        if self._mesh is not None:
+            return batch_pagerank(
+                self._dgraph(rc), rc.engine(), mesh=self._mesh,
+                seed=rc.runtime.seed if seed is None else seed)
+        cfg = rc.frogwild()
+        if key is None:
+            key = jax.random.PRNGKey(rc.runtime.seed if seed is None
+                                     else seed)
+        run = jax.jit(
+            lambda kk: _as_tuple(_frogwild_walks(self.graph, cfg, kk)))
+        counts, pi_hat = run(key)
+        return FrogWildResult(counts=counts, pi_hat=pi_hat,
+                              num_frogs=cfg.num_frogs)
+
+    def _dgraph(self, rc: RuntimeConfig) -> "_gas.DistributedGraph":
+        """Per-shard CSR blocks for the engine path (cached per shape)."""
+        shape = (self.runtime.num_shards, rc.runtime.vertex_block)
+        if self._dg is None or self._dg_key != shape:
+            self._dg = _gas.build_distributed_graph(
+                self.graph, shape[0], vertex_block=shape[1])
+            self._dg_key = shape
+        return self._dg
+
+    # --- serving ---------------------------------------------------------
+
+    @property
+    def scheduler(self) -> QueryScheduler:
+        """The (lazily built) continuous-batching scheduler."""
+        if self._scheduler is None:
+            index = self.ensure_index()
+            scfg = self.config.serving
+            runtime = None
+            if (isinstance(index, ShardedWalkIndex)
+                    and self.runtime is not None
+                    and self.runtime.num_shards == index.num_shards):
+                runtime = self.runtime
+            self._scheduler = QueryScheduler(
+                self.graph, index,
+                max_walks=scfg.max_walks, max_queries=scfg.max_queries,
+                max_steps=scfg.max_steps, p_T=self.config.p_T,
+                impl=self.config.kernel.stitch_impl,
+                tally_impl=self.config.kernel.tally_impl,
+                seed=self.config.runtime.seed, runtime=runtime,
+                wave_time_estimate_s=scfg.wave_time_estimate_s)
+        return self._scheduler
+
+    def topk(
+        self,
+        k: int = 10,
+        epsilon: float = 0.3,
+        delta: float = 0.1,
+        *,
+        num_walks: Optional[int] = None,
+        slo_s: Optional[float] = None,
+        allow_downgrade: bool = False,
+        early_stop: bool = True,
+    ) -> QueryHandle:
+        """Submits a global top-k query; returns its :class:`QueryHandle`.
+
+        ``num_walks`` overrides the Theorem-1 walk budget (a larger budget
+        plus ``early_stop`` gives pure anytime behaviour: the query runs
+        until the requested ε is certified, then stops). ``slo_s`` engages
+        deadline-aware admission exactly as before.
+        """
+        return self._submit_request(
+            kind="topk", k=k, source=0, epsilon=epsilon, delta=delta,
+            num_walks=num_walks, slo_s=slo_s,
+            allow_downgrade=allow_downgrade, early_stop=early_stop)
+
+    def ppr(
+        self,
+        source: int,
+        k: int = 10,
+        epsilon: float = 0.3,
+        delta: float = 0.1,
+        *,
+        num_walks: Optional[int] = None,
+        slo_s: Optional[float] = None,
+        allow_downgrade: bool = False,
+        early_stop: bool = True,
+    ) -> QueryHandle:
+        """Submits a personalized-PageRank query pinned at ``source``."""
+        return self._submit_request(
+            kind="ppr", k=k, source=source, epsilon=epsilon, delta=delta,
+            num_walks=num_walks, slo_s=slo_s,
+            allow_downgrade=allow_downgrade, early_stop=early_stop)
+
+    def _submit_request(self, **kw) -> QueryHandle:
+        req = QueryRequest(rid=self._next_rid, **kw)
+        self._next_rid += 1
+        decision = self.scheduler._submit(req)
+        return QueryHandle(self, req, decision)
+
+    def step(self) -> bool:
+        """Runs one device wave; False when nothing is in flight."""
+        return self.scheduler.step_wave()
+
+    def drain(self) -> List[QueryResult]:
+        """Drives waves until queue + slots are empty; returns all results
+        finished so far (in finish order)."""
+        return self.scheduler._drain()

@@ -8,7 +8,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import ARCHS, get_config, reduced_config
+# The LLM arch registry is a template leftover kept off the public
+# ``repro.configs`` surface — these smoke tests import it explicitly.
+from repro.configs.registry import ARCHS, get_config, reduced_config
 from repro.models import decode_step, forward_train, init_decode_state, init_params
 from repro.training import AdamWConfig, TrainStepConfig
 from repro.training.train_step import init_train_state, make_train_step

@@ -1,0 +1,329 @@
+"""Service-facade contract tests (PR 5).
+
+Three claims are enforced here:
+
+* **Back-compat**: the legacy entry points (``frogwild_run``,
+  ``distributed_frogwild``, ``build_walk_index``, ``QueryScheduler.
+  submit/run``) emit ``DeprecationWarning`` and return answers
+  *byte-identical* to the service facade under one shared key stream —
+  they are thin shims delegating through ``repro/service.py``, so the
+  equality is structural, not parallel-edit discipline.
+
+* **Anytime refinement**: ``QueryHandle.partial()`` snapshots carry a
+  monotonically non-increasing Theorem-1 ``epsilon_bound``, and with a walk
+  budget larger than the plan needs, early termination fires before the
+  budget (and before ``max_waves``) on both the gathered and the sharded
+  dispatch paths.
+
+* **Queue-depth admission**: ``submit()`` charges an SLO for walks already
+  admitted (queued + in-flight), not just the wave-time EMA.
+"""
+import dataclasses
+import math
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from repro import (FrogWildService, KernelConfig, RuntimeConfig,
+                   ServingConfig, ShardConfig)
+from repro.config import (EngineConfig, FrogWildConfig, WalkIndexConfig)
+from repro.core import frogwild_run
+from repro.distributed.runtime import ShardRuntime
+from repro.engine import build_distributed_graph, distributed_frogwild
+from repro.graph import chung_lu_powerlaw
+from repro.graph.csr import load_graph, save_graph
+from repro.query import (QueryRequest, QueryScheduler, build_walk_index,
+                         shard_walk_index)
+from repro.query.index import _build_walk_index
+
+
+def _graph(n=512, seed=2):
+    return chung_lu_powerlaw(n=n, avg_out_deg=8, seed=seed)
+
+
+def _rc(num_shards=1, **serving_kw):
+    serving = dict(segments_per_vertex=12, segment_len=3, build_shards=2,
+                   max_walks=512, max_queries=3, max_steps=32)
+    serving.update(serving_kw)
+    return RuntimeConfig(runtime=ShardConfig(num_shards=num_shards, seed=11),
+                         serving=ServingConfig(**serving))
+
+
+# --- back-compat shims -------------------------------------------------------
+
+
+def test_frogwild_run_shim_byte_identical():
+    g = _graph()
+    cfg = FrogWildConfig(num_frogs=3000, num_steps=4, p_s=0.7,
+                         erasure="channel", num_shards=4)
+    key = jax.random.PRNGKey(5)
+    with pytest.deprecated_call():
+        legacy = frogwild_run(g, cfg, key)
+    svc = FrogWildService.open(g, RuntimeConfig.from_frogwild(cfg))
+    new = svc.pagerank(key=key)
+    assert (np.asarray(legacy.counts) == np.asarray(new.counts)).all()
+    assert int(new.counts.sum()) == cfg.num_frogs
+
+
+def test_distributed_shim_byte_identical():
+    g = _graph(n=256)
+    ecfg = EngineConfig(num_frogs=2048, num_steps=3, p_s=0.5)
+    mesh = ShardRuntime.acquire(1).require_mesh()
+    dg = build_distributed_graph(g, 1)
+    with pytest.deprecated_call():
+        legacy = distributed_frogwild(dg, ecfg, mesh, seed=3)
+    svc = FrogWildService.open(g, RuntimeConfig.from_engine(ecfg), mesh=mesh)
+    new = svc.pagerank(seed=3)
+    assert (np.asarray(legacy.counts) == np.asarray(new.counts)).all()
+    assert legacy.overflow == new.overflow
+
+
+def test_build_walk_index_shim_byte_identical():
+    g = _graph(n=256)
+    icfg = WalkIndexConfig(segments_per_vertex=6, segment_len=2,
+                           num_shards=2, seed=4)
+    with pytest.deprecated_call():
+        legacy = build_walk_index(g, icfg)
+    svc = FrogWildService.open(g, RuntimeConfig.from_walk_index(icfg))
+    new = svc.ensure_index()
+    assert (np.asarray(legacy.endpoints) == np.asarray(new.endpoints)).all()
+
+
+@pytest.mark.parametrize("num_shards", [1, 4])
+def test_scheduler_shims_match_service_handles(num_shards):
+    """Legacy submit()/run() and service QueryHandles share one key stream
+    → identical answers, on both the gathered and sharded dispatch."""
+    g = _graph()
+    rc = _rc(num_shards=num_shards)
+    idx = _build_walk_index(g, rc.walk_index())
+    svc = FrogWildService.open(g, rc)           # builds the same slab itself
+    handles = []
+    for i in range(4):
+        if i % 3 == 2:
+            handles.append(svc.ppr(17 * i + 1, k=5, epsilon=0.3,
+                                   early_stop=False))
+        else:
+            handles.append(svc.topk(k=5, epsilon=0.3, early_stop=False))
+    assert all(h.admitted for h in handles)
+    results = {h.rid: h.result() for h in handles}
+
+    sched = QueryScheduler(
+        g, idx if num_shards <= 1 else shard_walk_index(idx, num_shards),
+        max_walks=rc.serving.max_walks, max_queries=rc.serving.max_queries,
+        max_steps=rc.serving.max_steps, seed=rc.runtime.seed)
+    for i in range(4):
+        kind = "ppr" if i % 3 == 2 else "topk"
+        with pytest.deprecated_call():
+            d = sched.submit(QueryRequest(rid=i, kind=kind,
+                                          source=17 * i + 1, k=5,
+                                          epsilon=0.3))
+        assert d.admitted
+    with pytest.deprecated_call():
+        legacy = {r.rid: r for r in sched.run()}
+
+    assert sorted(legacy) == sorted(results)
+    for rid, lr in legacy.items():
+        assert (lr.vertices == results[rid].vertices).all(), rid
+        assert np.allclose(lr.scores, results[rid].scores), rid
+        assert lr.epsilon_bound == results[rid].epsilon_bound
+
+
+# --- anytime (ε, δ) refinement ----------------------------------------------
+
+
+@pytest.mark.parametrize("num_shards", [1, 4])
+def test_partial_bounds_monotone_and_early_termination(num_shards):
+    g = _graph()
+    svc = FrogWildService.open(g, _rc(num_shards=num_shards))
+    budget = 8192                              # ≫ the ε = 0.4 plan's walks
+    h = svc.topk(k=5, epsilon=0.4, delta=0.1, num_walks=budget)
+    assert h.admitted and h.request.early_stop
+
+    bounds = [h.partial().epsilon_bound]
+    assert bounds[0] == math.inf               # queued: nothing tallied yet
+    while not h.poll():
+        bounds.append(h.partial().epsilon_bound)
+    res = h.result()
+    bounds.append(res.epsilon_bound)
+
+    assert all(b1 >= b2 for b1, b2 in zip(bounds, bounds[1:])), bounds
+    # early termination: bound met well before the budget drained
+    budget_waves = -(-budget // svc.config.serving.max_walks)
+    assert res.early_stopped
+    assert res.num_walks < budget
+    assert res.waves < budget_waves
+    assert res.epsilon_bound <= 0.4
+    # the walks executed genuinely certify the requested ε
+    from repro.core import theory
+    assert theory.epsilon_bound(0.15, res.num_steps, 5, 0.1,
+                                res.num_walks, 1.0, 0.0) <= 0.4
+
+
+def test_handle_poll_partial_result_cancel():
+    g = _graph(n=256)
+    svc = FrogWildService.open(g, _rc())
+    h1 = svc.topk(k=5, epsilon=0.3, early_stop=False)
+    h2 = svc.ppr(3, k=5, epsilon=0.3, early_stop=False)
+    assert h1.status() == "queued" and not h1.done()
+    h1.poll()                                  # one wave: both make progress
+    p1, p2 = h1.partial(), h2.partial()
+    assert p1.walks_done > 0 and p2.walks_done > 0
+    assert p1.kind == "topk" and p2.kind == "ppr"
+    assert h2.cancel()
+    assert h2.status() == "cancelled" and h2.done()
+    with pytest.raises(RuntimeError, match="cancelled"):
+        h2.result()
+    r1 = h1.result()
+    assert r1.rid == h1.rid and len(r1.vertices) == 5
+    assert not h1.cancel()                     # already finished
+    # a finished handle's partial() reports done
+    assert h1.partial().done
+
+
+def test_rejected_handle_surface():
+    g = _graph(n=256)
+    rc = _rc(wave_time_estimate_s=1.0)
+    svc = FrogWildService.open(g, rc)
+    h = svc.topk(k=5, num_walks=4096, slo_s=2.0)   # needs 8 waves, 2 fit
+    assert not h.admitted and h.status() == "rejected" and h.done()
+    with pytest.raises(RuntimeError, match="rejected"):
+        h.result()
+    with pytest.raises(RuntimeError, match="rejected"):
+        h.partial()
+    assert not h.cancel()
+
+
+# --- queue-depth admission (PR-4 leftover) -----------------------------------
+
+
+def test_admission_charges_queue_depth():
+    g = _graph(n=256)
+    svc = FrogWildService.open(g, _rc(max_queries=4, max_steps=12,
+                                      wave_time_estimate_s=1.0))
+    sched = svc.scheduler
+    # 1500 walks of deadline-carrying work queue up first (3 ≤ 3 waves)
+    a = sched._submit(QueryRequest(rid=100, kind="topk", k=5,
+                                   num_walks=1500, slo_s=3.0))
+    assert a.admitted and not a.downgraded
+    # alone, 1000 walks fit a 3 s SLO (2 ≤ 3 waves) — but the admitted
+    # demand at earlier-or-equal deadlines outranks this request under
+    # EDF: 2500 walks ⇒ 5 waves > 3 ⇒ reject.
+    b = sched._submit(QueryRequest(rid=101, kind="topk", k=5,
+                                   num_walks=1000, slo_s=3.0))
+    assert not b.admitted and "queued ahead at earlier deadlines" in b.reason
+    # with downgrade the query is clamped to the budget the backlog leaves
+    c = sched._submit(QueryRequest(rid=102, kind="topk", k=5,
+                                   num_walks=1000, slo_s=3.0,
+                                   allow_downgrade=True))
+    assert c.admitted and c.downgraded
+    assert c.num_walks == 3 * 512 - 1500
+    # no budget left at all ⇒ reject even with allow_downgrade
+    d = sched._submit(QueryRequest(rid=103, kind="topk", k=5,
+                                   num_walks=100, slo_s=3.5,
+                                   allow_downgrade=True))
+    assert not d.admitted
+    results = {r.rid: r for r in svc.drain()}
+    assert sorted(results) == [100, 102]
+    assert results[102].num_walks == c.num_walks
+
+
+def test_admission_does_not_charge_no_slo_backlog():
+    """No-SLO work (deadline = ∞) is behind every deadline under EDF, and
+    fair-share allocation guarantees a deadline query its per-wave share —
+    so a huge batch query in flight must not get SLO queries rejected."""
+    g = _graph(n=256)
+    svc = FrogWildService.open(g, _rc(max_queries=4, max_steps=12,
+                                      wave_time_estimate_s=1.0))
+    sched = svc.scheduler
+    assert sched._submit(QueryRequest(rid=0, kind="topk", k=5,
+                                      num_walks=5000)).admitted
+    d = sched._submit(QueryRequest(rid=1, kind="topk", k=5,
+                                   num_walks=1000, slo_s=3.0))
+    assert d.admitted and not d.downgraded and d.num_walks == 1000
+
+
+# --- layered config ----------------------------------------------------------
+
+
+def test_layered_config_single_definition_per_flag():
+    # legacy defaults are sourced from the layer defaults — one definition
+    k, s = KernelConfig(), ShardConfig()
+    assert FrogWildConfig().draw == EngineConfig().draw == k.draw
+    assert (FrogWildConfig().step_impl == EngineConfig().step_impl
+            == WalkIndexConfig().step_impl == k.step_impl)
+    assert EngineConfig().capacity_factor == s.capacity_factor
+    assert EngineConfig().axis_name == s.axis_name
+    assert WalkIndexConfig().seed == s.seed
+    assert RuntimeConfig().p_s == FrogWildConfig().p_s == EngineConfig().p_s
+
+
+def test_runtime_config_round_trips():
+    fw = FrogWildConfig(num_frogs=7, num_steps=3, p_T=0.2, p_s=0.5,
+                        erasure="independent", num_shards=4,
+                        draw="cumsum", step_impl="ref")
+    assert RuntimeConfig.from_frogwild(fw).frogwild() == fw
+    ec = EngineConfig(num_frogs=9, num_steps=2, p_s=0.4,
+                      capacity_factor=2.0, draw="rejection")
+    assert RuntimeConfig.from_engine(ec).engine() == ec
+    ic = WalkIndexConfig(segments_per_vertex=5, segment_len=2,
+                         num_shards=3, step_impl="ref", seed=7)
+    assert RuntimeConfig.from_walk_index(ic).walk_index() == ic
+
+
+# --- lifecycle ---------------------------------------------------------------
+
+
+def test_index_checkpoint_reuse(tmp_path):
+    g = _graph(n=256)
+    d = str(tmp_path / "ckpt")
+    rc = _rc(checkpoint_dir=d, segments_per_vertex=6, segment_len=2)
+    svc1 = FrogWildService.open(g, rc)
+    idx1 = svc1.ensure_index()
+    assert os.path.isdir(d)
+    # a second service with a DIFFERENT build seed still reuses the saved
+    # slab — proof it loaded rather than rebuilt
+    rc2 = dataclasses.replace(rc, runtime=ShardConfig(seed=99))
+    svc2 = FrogWildService.open(g, rc2)
+    idx2 = svc2.ensure_index()
+    assert (np.asarray(idx1.endpoints) == np.asarray(idx2.endpoints)).all()
+    # geometry mismatch is an error, not a silent rebuild
+    rc3 = dataclasses.replace(
+        rc, serving=dataclasses.replace(rc.serving, segments_per_vertex=9))
+    with pytest.raises(ValueError, match=r"\(R, L\)"):
+        FrogWildService.open(g, rc3).ensure_index()
+
+
+def test_checkpoint_reuse_resharded_to_config(tmp_path):
+    """A reused checkpoint is re-split to the *configured* serving layout:
+    a monolithic (or differently-sharded) on-disk index must never be
+    silently served at the checkpoint's shard count."""
+    g = _graph(n=256)
+    d = str(tmp_path / "ckpt")
+    rc = _rc(checkpoint_dir=d, segments_per_vertex=6, segment_len=2)
+    FrogWildService.open(g, rc).ensure_index()       # monolithic save
+    rc4 = dataclasses.replace(rc,
+                              runtime=ShardConfig(num_shards=4, seed=11))
+    svc4 = FrogWildService.open(g, rc4)
+    idx4 = svc4.ensure_index()
+    from repro.query.index import ShardedWalkIndex
+    assert isinstance(idx4, ShardedWalkIndex) and idx4.num_shards == 4
+    # same slab, same key stream ⇒ sharded serving matches dense exactly
+    svc1 = FrogWildService.open(g, rc)
+    r1 = svc1.topk(k=5, epsilon=0.35, early_stop=False).result()
+    r4 = svc4.topk(k=5, epsilon=0.35, early_stop=False).result()
+    assert (r1.vertices == r4.vertices).all()
+    assert np.allclose(r1.scores, r4.scores)
+
+
+def test_open_from_graph_path(tmp_path):
+    g = _graph(n=128)
+    path = save_graph(str(tmp_path / "g.npz"), g)
+    g2 = load_graph(path)
+    assert (np.asarray(g2.col_idx) == np.asarray(g.col_idx)).all()
+    svc = FrogWildService.open(path, RuntimeConfig(num_frogs=500))
+    res = svc.pagerank(seed=1)
+    assert int(res.counts.sum()) == 500
+    with pytest.raises(TypeError, match="CSRGraph or a path"):
+        FrogWildService.open(12345)
