@@ -19,15 +19,24 @@ and the same per-query walk budgets:
   handle-mode overhead so later PRs can't regress it silently.
 * **restart** — the pre-index serving story: every query reruns the full
   ``t``-superstep walk from scratch, one query at a time.
+* **supervised / faulted** — the fault-tolerance arms (PR 6): the same
+  sharded workload with the wave supervisor armed and an *empty* fault
+  plan (byte-identical answers; the row records the supervision overhead,
+  acceptance target < 5%), and with one of the shards evicted mid-stream
+  (degraded serving: renormalized tallies, Theorem-1-widened
+  ``epsilon_bound``).
 
 Emits ``BENCH_query.json`` with queries/sec and p50/p99 latency for all
 paths, plus the index build cost. ``--smoke`` instead runs a tiny
-gathered-vs-sharded-vs-handle dispatch equivalence sweep (no timing, no
-JSON rewrite; wired into ``scripts/ci_tier1.sh --bench-smoke``).
+gathered-vs-sharded-vs-handle dispatch equivalence sweep plus a
+fault-injection sweep (zero-fault byte-identity + seeded shard-loss
+degradation; no timing, no JSON rewrite; wired into
+``scripts/ci_tier1.sh --bench-smoke``).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -37,7 +46,9 @@ import numpy as np
 from benchmarks.common import emit, emit_json
 from repro import FrogWildService, RuntimeConfig, ServingConfig, ShardConfig
 from repro.config import FrogWildConfig, KernelConfig
+from repro.core import theory
 from repro.core.frogwild import _frogwild_walks
+from repro.distributed.faults import FaultPlan
 from repro.graph import chung_lu_powerlaw
 from repro.kernels import ops
 from repro.query import plan_query
@@ -119,6 +130,36 @@ def smoke():
             assert np.allclose(a.scores, b.scores), (name, a.rid)
     print("smoke OK: gathered, sharded, and handle-driven serving answers "
           "identical")
+
+    # fault-injection sweep: supervision armed with an *empty* plan must
+    # stay byte-identical to the plain sharded path; a seeded shard loss
+    # must serve degraded with the Theorem-1 widened bound (never an
+    # unflagged answer).
+    def sharded_svc(faults):
+        return FrogWildService.open(g, RuntimeConfig(
+            runtime=ShardConfig(num_shards=4, seed=7), serving=serving,
+            faults=faults))
+
+    svc = sharded_svc(FaultPlan())
+    _submit_all(svc, num=4)
+    for a, b in zip(results["sharded"],
+                    sorted(svc.drain(), key=lambda r: r.rid)):
+        assert (a.vertices == b.vertices).all(), ("supervised", a.rid)
+        assert np.allclose(a.scores, b.scores), ("supervised", a.rid)
+        assert not b.degraded
+    print("smoke query_serving supervised-zero-fault OK (byte-identical)")
+
+    import math
+    svc = sharded_svc(FaultPlan(shard_losses=((0, 1),)))
+    _submit_all(svc, num=4)
+    degraded = sorted(svc.drain(), key=lambda r: r.rid)
+    assert svc.lost_shards == frozenset({1})
+    for r in degraded:
+        assert r.degraded and r.walks_lost > 0, r.rid
+        want = theory.epsilon_bound(svc.config.p_T, r.num_steps, K, DELTA,
+                                    r.num_walks, 1.0, 0.0)
+        assert math.isclose(r.epsilon_bound, want), r.rid
+    print("smoke query_serving faulted OK (degraded + widened bound)")
 
 
 def _restart_latencies(g, plan, p_T=0.15):
@@ -231,6 +272,52 @@ def main():
                  f"{slab_mb / NUM_SHARDS:.2f} dispatch="
                  f"{'mesh' if svc_sh.scheduler.runtime.is_mesh else 'host_loop'}"))
 
+    # fault supervision, zero faults: the overhead arm. Same sharded
+    # workload with the injector attached (empty plan) and the per-wave
+    # timeout armed — answers stay byte-identical; the row records what
+    # the supervision machinery costs when nothing goes wrong (<5% is the
+    # acceptance target).
+    svc_sup = FrogWildService.open(
+        g, RuntimeConfig(runtime=ShardConfig(num_shards=NUM_SHARDS),
+                         serving=dataclasses.replace(serving,
+                                                     wave_timeout_s=60.0),
+                         faults=FaultPlan()),
+        index=index)
+    serve(svc_sup)                                   # warm
+    t0 = time.perf_counter()
+    results_sup = serve(svc_sup)
+    dt_sup = time.perf_counter() - t0
+    qps_sup = NUM_QUERIES / dt_sup
+    for a, b in zip(results_sh, results_sup):        # still byte-identical
+        assert (a.vertices == b.vertices).all() and not b.degraded
+    overhead = dt_sup / dt_sh - 1.0
+    rows.append(("query/query_serving_supervised", dt_sup * 1e6 / NUM_QUERIES,
+                 f"qps={qps_sup:.1f} overhead_vs_sharded="
+                 f"{overhead * 100:+.1f}% (zero faults, timeout armed)"))
+
+    # fault supervision, one shard lost mid-stream: degraded serving.
+    svc_flt = FrogWildService.open(
+        g, RuntimeConfig(runtime=ShardConfig(num_shards=NUM_SHARDS),
+                         serving=serving,
+                         faults=FaultPlan(shard_losses=((2, 1),))),
+        index=index)
+    serve(svc_flt)          # warm; the injected loss fires here (wave 2),
+    t0 = time.perf_counter()  # so the timed run is steady-state degraded
+    results_flt = serve(svc_flt)
+    dt_flt = time.perf_counter() - t0
+    qps_flt = NUM_QUERIES / dt_flt
+    n_deg = sum(r.degraded for r in results_flt)
+    lost_frac = (sum(r.walks_lost for r in results_flt)
+                 / sum(r.num_walks + r.walks_lost for r in results_flt))
+    bound_widening = np.mean([
+        r.epsilon_bound / plan.epsilon_bound
+        for r in results_flt if r.degraded]) if n_deg else 1.0
+    rows.append(("query/query_serving_faulted", dt_flt * 1e6 / NUM_QUERIES,
+                 f"qps={qps_flt:.1f} degraded={n_deg}/{NUM_QUERIES} "
+                 f"walks_lost={lost_frac * 100:.1f}% "
+                 f"bound_widening={bound_widening:.2f}x "
+                 f"(1 of {NUM_SHARDS} shards evicted)"))
+
     t0 = time.perf_counter()
     lat_rst = _restart_latencies(g, plan)
     dt_rst = time.perf_counter() - t0
@@ -264,6 +351,12 @@ def main():
         "speedup": round(speedup, 2),
         "sharded_vs_gathered": round(qps_sh / qps_idx, 3),
         "handle_vs_drain": round(qps_h / qps_idx, 3),
+        "qps_supervised": round(qps_sup, 2),
+        "supervised_overhead": round(overhead, 4),
+        "qps_faulted": round(qps_flt, 2),
+        "faulted_degraded_queries": int(n_deg),
+        "faulted_walks_lost_frac": round(float(lost_frac), 4),
+        "faulted_bound_widening": round(float(bound_widening), 3),
     })
 
 

@@ -7,8 +7,11 @@
 # dispatch equivalence sweeps (benchmarks/bench_kernels.py --smoke: every
 # kernel impl= path incl. the stitch/local-stitch variants;
 # benchmarks/bench_query.py --smoke: gathered vs sharded-slab vs
-# handle-driven serving — tiny sizes, no BENCH json rewrite) so a broken
-# dispatch or surface change fails tier-1 instead of only bench runs.
+# handle-driven serving, plus the fault-injection sweep — supervised
+# zero-fault byte-identity and seeded shard-loss degradation with the
+# Theorem-1-widened bound — tiny sizes, no BENCH json rewrite) so a broken
+# dispatch, surface, or degradation change fails tier-1 instead of only
+# bench runs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

@@ -1,5 +1,7 @@
-"""Fault-tolerance substrate: atomic async checkpoints + elastic restore."""
+"""Fault-tolerance substrate: atomic, checksummed, async checkpoints +
+elastic restore."""
 from repro.checkpoint.checkpointer import (
+    CheckpointCorruptError,
     Checkpointer,
     latest_step,
     restore_checkpoint,
@@ -7,6 +9,7 @@ from repro.checkpoint.checkpointer import (
 )
 
 __all__ = [
+    "CheckpointCorruptError",
     "Checkpointer",
     "latest_step",
     "restore_checkpoint",

@@ -5,11 +5,18 @@ Layout: ``<dir>/step_<k>/``
   * ``arrays.npz``    — leaf data, keyed by flattened index
 
 Fault-tolerance properties:
-  * **atomic** — written to ``step_<k>.tmp`` then os.rename'd: a crash
-    mid-write never corrupts the latest checkpoint;
+  * **atomic** — written to ``step_<k>.tmp``, fsynced, then os.rename'd:
+    a crash mid-write never leaves a half-written ``step_<k>/`` visible to
+    ``latest_step`` (the ``.tmp`` / ``.old`` suffixes are filtered);
+  * **verified** — ``tree.json`` carries a per-leaf crc32 manifest;
+    ``restore_checkpoint`` recomputes every leaf's checksum and raises
+    :class:`CheckpointCorruptError` (naming the step dir and leaf) on a
+    corrupt or truncated payload instead of silently consuming it;
   * **async**  — ``Checkpointer.save_async`` snapshots to host memory
     synchronously (cheap) and writes on a background thread, so the train
-    loop is blocked only for the device→host copy;
+    loop is blocked only for the device→host copy; a background-write
+    failure is re-raised at the next ``wait()`` / ``save_async()`` rather
+    than vanishing with the thread;
   * **elastic** — restore takes the *target* mesh + spec tree and
     ``jax.device_put``s each leaf with the new sharding: a checkpoint
     written on N chips restores onto M ≠ N chips (scale up/down without
@@ -22,11 +29,18 @@ import dataclasses
 import json
 import os
 import threading
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint payload failed integrity verification (bad checksum,
+    truncated archive, missing member/metadata). The message names the
+    offending step dir so callers can quarantine and rebuild it."""
 
 
 def _flatten_with_paths(tree):
@@ -37,8 +51,25 @@ def _flatten_with_paths(tree):
     return paths, leaves, treedef
 
 
+def _fsync_path(path: str) -> None:
+    """fsyncs a file or directory so the atomic rename publishes durable
+    bytes, not page-cache promises."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save_checkpoint(directory: str, step: int, tree: Any) -> str:
-    """Synchronous atomic save. Returns the final checkpoint path."""
+    """Synchronous atomic save. Returns the final checkpoint path.
+
+    Write protocol: payload + manifest land in ``step_<k>.tmp``, both
+    files and the tmp dir are fsynced, and only then is the dir renamed to
+    ``step_<k>`` (and the parent fsynced) — a crash at any point leaves
+    either the previous complete checkpoint or a ``.tmp``/``.old`` dir
+    that ``latest_step`` ignores, never a torn ``step_<k>/``.
+    """
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -58,12 +89,18 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
         "dtypes": [str(np.asarray(l).dtype) for l in leaves],
         "shapes": [list(np.asarray(l).shape) for l in leaves],
         "treedef": str(treedef),
+        # per-leaf integrity manifest, verified on restore
+        "crc32": [int(zlib.crc32(a.tobytes())) for a in arrays.values()],
     }
     with open(os.path.join(tmp, "tree.json"), "w") as f:
         json.dump(meta, f)
+    for name in ("arrays.npz", "tree.json"):
+        _fsync_path(os.path.join(tmp, name))
+    _fsync_path(tmp)
     if os.path.exists(final):
         os.rename(final, final + ".old")
     os.rename(tmp, final)
+    _fsync_path(directory)
     old = final + ".old"
     if os.path.exists(old):
         import shutil
@@ -87,23 +124,56 @@ def restore_checkpoint(
     pspecs: Any = None,
 ) -> Any:
     """Restores into the structure of ``like``. With (mesh, pspecs) the
-    leaves are placed with the *target* sharding — the elastic path."""
+    leaves are placed with the *target* sharding — the elastic path.
+
+    Integrity: every leaf's bytes are checked against the crc32 manifest
+    recorded at save time (when present — pre-manifest checkpoints load
+    unverified); a truncated / unreadable archive or a checksum mismatch
+    raises :class:`CheckpointCorruptError` naming the step dir, so the
+    caller can quarantine and rebuild instead of consuming garbage.
+    """
     import json as _json
 
     import ml_dtypes  # noqa: F401 — registers bf16 etc. with numpy
 
     path = os.path.join(directory, f"step_{step:08d}")
-    data = np.load(os.path.join(path, "arrays.npz"))
-    with open(os.path.join(path, "tree.json")) as f:
-        meta = _json.load(f)
+    if not os.path.isdir(path):
+        raise FileNotFoundError(f"no checkpoint step dir {path!r}")
+    meta_path = os.path.join(path, "tree.json")
+    if not os.path.isfile(meta_path):
+        raise CheckpointCorruptError(
+            f"checkpoint {path!r} has no tree.json — partial or torn write")
+    with open(meta_path) as f:
+        try:
+            meta = _json.load(f)
+        except ValueError as e:
+            raise CheckpointCorruptError(
+                f"checkpoint {path!r} has unreadable tree.json: {e}") from e
     _, like_leaves, treedef = _flatten_with_paths(like)
     if len(meta["paths"]) != len(like_leaves):
         raise ValueError(
             f"checkpoint has {len(meta['paths'])} leaves but the restore "
             f"template has {len(like_leaves)} — tree structure mismatch")
+    crcs = meta.get("crc32")
+    raw = []
+    try:
+        data = np.load(os.path.join(path, "arrays.npz"))
+        for i in range(len(like_leaves)):
+            raw.append(data[f"a{i}"])
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {path!r} payload arrays.npz is corrupt or "
+            f"truncated ({type(e).__name__}: {e})") from e
+    if crcs is not None:
+        for i, a in enumerate(raw):
+            got = int(zlib.crc32(np.ascontiguousarray(a).tobytes()))
+            if got != crcs[i]:
+                raise CheckpointCorruptError(
+                    f"checkpoint {path!r} leaf {meta['paths'][i]!r} failed "
+                    f"its crc32 check (stored {crcs[i]}, recomputed {got})"
+                    " — payload corrupted on disk")
     leaves = [
-        data[f"a{i}"].view(np.dtype(meta["dtypes"][i])).reshape(
-            meta["shapes"][i])
+        raw[i].view(np.dtype(meta["dtypes"][i])).reshape(meta["shapes"][i])
         for i in range(len(like_leaves))
     ]
     if mesh is not None and pspecs is not None:
@@ -120,17 +190,29 @@ def restore_checkpoint(
 
 
 class Checkpointer:
-    """Async wrapper: snapshot now, write in the background."""
+    """Async wrapper: snapshot now, write in the background.
+
+    A failed background write (disk full, permissions, torn filesystem) is
+    captured and re-raised at the next :meth:`wait` or :meth:`save_async`
+    — the failure surfaces at a call site instead of dying silently with
+    the daemon thread.
+    """
 
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
 
     def wait(self) -> None:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"background checkpoint write to {self.directory!r} "
+                f"failed") from err
 
     def save_async(self, step: int, tree: Any) -> None:
         self.wait()
@@ -139,8 +221,11 @@ class Checkpointer:
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
 
         def _write():
-            save_checkpoint(self.directory, step, host_tree)
-            self._gc()
+            try:
+                save_checkpoint(self.directory, step, host_tree)
+                self._gc()
+            except BaseException as e:   # surfaces at the next wait()
+                self._error = e
 
         self._thread = threading.Thread(target=_write, daemon=True)
         self._thread.start()

@@ -32,7 +32,11 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
+
+if TYPE_CHECKING:  # stdlib-only module; safe for type checkers, but not
+    # imported at runtime — this module stays jax- and repro-free.
+    from repro.distributed.faults import FaultPlan
 
 # Walk-process defaults (paper §2.2: N frogs, t supersteps, teleport p_T,
 # synchronization probability p_s) — shared by RuntimeConfig and the legacy
@@ -82,6 +86,13 @@ class ServingConfig:
     determines the per-shard key folding, hence the slab content);
     ``checkpoint_dir`` makes the service persist / reuse the index through
     ``checkpoint/`` atomic step dirs.
+
+    The fault-supervision knobs govern the scheduler's wave supervisor
+    (``query/scheduler.py``): a wave that raises a transient fault or
+    exceeds ``wave_timeout_s`` is retried up to ``max_retries`` times with
+    exponential backoff + jitter before failing over (mesh → host loop) or
+    raising; a permanent shard fault instead evicts the shard and serves
+    degraded waves with a widened ``epsilon_bound``.
     """
 
     segments_per_vertex: int = 16    # R — endpoints stored per vertex
@@ -92,6 +103,10 @@ class ServingConfig:
     max_steps: int = 32              # walk-truncation cap for query plans
     checkpoint_dir: Optional[str] = None
     wave_time_estimate_s: Optional[float] = None  # seeds the admission EMA
+    wave_timeout_s: Optional[float] = None  # per-wave deadline (None = off)
+    max_retries: int = 2             # bounded retry of a faulted wave
+    backoff_base_s: float = 0.02     # exponential backoff: base · 2^(a−1)
+    backoff_max_s: float = 0.5       # … clamped here (± jitter)
 
 
 _KERNEL = KernelConfig()
@@ -117,6 +132,10 @@ class RuntimeConfig:
     kernel: KernelConfig = _KERNEL
     runtime: ShardConfig = _SHARD
     serving: ServingConfig = _SERVING
+    # Deterministic fault-injection schedule (repro.distributed.faults.
+    # FaultPlan) threaded to the scheduler's wave supervisor; None = no
+    # injection (the supervisor still handles real faults/timeouts).
+    faults: Optional["FaultPlan"] = None
 
     # --- projections onto the legacy per-subsystem views -----------------
 

@@ -1,9 +1,19 @@
 """Distribution substrate: shard-execution runtime, sharding rules,
-pipeline parallelism, elastic resharding."""
+pipeline parallelism, elastic resharding, fault injection."""
+from repro.distributed.faults import (
+    FaultError,
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    ShardFault,
+    WaveFailedError,
+    WaveTimeout,
+)
 from repro.distributed.runtime import (
     ShardRuntime,
     load_checkpoint_tree,
     load_shard_checkpoints,
+    quarantine_shard_dir,
     save_shard_checkpoint,
     shard_dir,
 )
@@ -16,9 +26,17 @@ from repro.distributed.sharding import (
 )
 
 __all__ = [
+    "FaultError",
+    "FaultEvent",
+    "FaultInjector",
+    "FaultPlan",
+    "ShardFault",
+    "WaveFailedError",
+    "WaveTimeout",
     "ShardRuntime",
     "load_checkpoint_tree",
     "load_shard_checkpoints",
+    "quarantine_shard_dir",
     "save_shard_checkpoint",
     "shard_dir",
     "MeshAxes",

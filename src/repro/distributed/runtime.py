@@ -38,7 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.checkpoint import (CheckpointCorruptError, latest_step,
+                              restore_checkpoint, save_checkpoint)
 
 DEFAULT_AXIS = "vertex"
 
@@ -210,13 +211,30 @@ def save_shard_checkpoint(directory: str, shard: int, tree: Any,
 
 def load_checkpoint_tree(directory: str, step: Optional[int] = None) -> dict:
     """Self-describing restore: the template comes from the checkpoint's
-    own ``tree.json`` metadata, so callers need not know shapes up front."""
+    own ``tree.json`` metadata, so callers need not know shapes up front.
+
+    A missing checkpoint raises :class:`FileNotFoundError`; a present but
+    torn / corrupt one raises :class:`~repro.checkpoint.
+    CheckpointCorruptError` naming the step dir — both actionable,
+    neither a bare ``KeyError`` or shape mismatch.
+    """
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {directory!r}")
-    with open(os.path.join(directory, f"step_{step:08d}", "tree.json")) as f:
-        meta = json.load(f)
+    step_dir = os.path.join(directory, f"step_{step:08d}")
+    meta_path = os.path.join(step_dir, "tree.json")
+    if not os.path.isfile(meta_path):
+        raise CheckpointCorruptError(
+            f"checkpoint {step_dir!r} has no tree.json — partial or torn "
+            f"write; quarantine and rebuild this shard dir")
+    with open(meta_path) as f:
+        try:
+            meta = json.load(f)
+        except ValueError as e:
+            raise CheckpointCorruptError(
+                f"checkpoint {step_dir!r} has unreadable tree.json: "
+                f"{e}") from e
     like = {
         path: np.zeros(shape, dtype=np.dtype(dtype))
         for path, shape, dtype in zip(
@@ -225,20 +243,49 @@ def load_checkpoint_tree(directory: str, step: Optional[int] = None) -> dict:
     return restore_checkpoint(directory, step, like)
 
 
+def quarantine_shard_dir(directory: str, shard: int) -> str:
+    """Moves a corrupt shard checkpoint dir aside (``quarantine.shard_<s>``
+    — invisible to :func:`list_shard_dirs`) so a rebuild can atomically
+    write a fresh one in its place. Returns the quarantine path."""
+    src = shard_dir(directory, shard)
+    dst = os.path.join(directory, f"quarantine.shard_{shard:04d}")
+    k = 0
+    while os.path.exists(dst):
+        k += 1
+        dst = os.path.join(directory, f"quarantine.shard_{shard:04d}.{k}")
+    os.rename(src, dst)
+    return dst
+
+
 def load_shard_checkpoints(
-    directory: str, step: Optional[int] = None
+    directory: str, step: Optional[int] = None, on_error: str = "raise"
 ) -> Dict[int, dict]:
     """Restores every shard checkpoint under ``directory``.
 
     Returns ``{shard_index_from_dirname: tree}``; shard-content validation
     (consistent metadata, no missing shards) belongs to the caller, which
     knows what the trees mean.
+
+    ``on_error="raise"`` (default) propagates the first corrupt / partial
+    shard; ``on_error="collect"`` instead maps each failing shard to its
+    exception in the result (``{shard: tree_or_exception}``) so callers
+    like :func:`repro.query.index.load_or_repair_walk_index` can
+    quarantine and rebuild exactly the broken shards.
     """
+    if on_error not in ("raise", "collect"):
+        raise ValueError(f"on_error must be 'raise' or 'collect', "
+                         f"got {on_error!r}")
     dirs = list_shard_dirs(directory)
     if not dirs:
         raise FileNotFoundError(f"no shard checkpoints under {directory!r}")
     out: Dict[int, dict] = {}
     for d in dirs:
-        out[int(d.split("_")[1])] = load_checkpoint_tree(
-            os.path.join(directory, d), step)
+        shard = int(d.split("_")[1])
+        try:
+            out[shard] = load_checkpoint_tree(os.path.join(directory, d),
+                                              step)
+        except (CheckpointCorruptError, FileNotFoundError) as e:
+            if on_error == "raise":
+                raise
+            out[shard] = e
     return out

@@ -39,7 +39,9 @@ from repro.query.index import (
     WalkIndexConfig,
     build_walk_index,
     build_walk_index_sharded,
+    load_or_repair_walk_index,
     load_walk_index,
+    rebuild_shard_blocks,
     save_walk_index,
     save_walk_index_shard,
     shard_walk_index,
@@ -65,7 +67,9 @@ __all__ = [
     "WalkIndexConfig",
     "build_walk_index",
     "build_walk_index_sharded",
+    "load_or_repair_walk_index",
     "load_walk_index",
+    "rebuild_shard_blocks",
     "save_walk_index",
     "save_walk_index_shard",
     "shard_walk_index",

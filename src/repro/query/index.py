@@ -46,19 +46,23 @@ straight to the serving layer (``reassemble=False`` →
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Optional, Union
+import os
+from typing import Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import latest_step, save_checkpoint
+from repro.checkpoint import (CheckpointCorruptError, latest_step,
+                              save_checkpoint)
 from repro.config import WalkIndexConfig, warn_deprecated
 from repro.distributed.runtime import (ShardRuntime, list_shard_dirs,
                                        load_checkpoint_tree,
                                        load_shard_checkpoints,
-                                       save_shard_checkpoint)
+                                       quarantine_shard_dir,
+                                       save_shard_checkpoint, shard_dir)
 from repro.graph.csr import CSRGraph, uniform_successor
 from repro.graph.partition import partition_graph
 
@@ -396,26 +400,159 @@ def load_walk_index(
         )
         return index if reassemble else shard_walk_index(index, 1)
 
-    blocks, meta = {}, None
-    for tree in load_shard_checkpoints(directory, step).values():
-        cur = (int(tree["num_shards"]), int(tree["n"]),
-               int(tree["segment_len"]), int(tree["seed"]),
-               int(tree["segments_per_vertex"]))
-        if meta is None:
-            meta = cur
-        elif cur != meta:
-            raise ValueError(
-                f"inconsistent shard metadata under {directory!r}: "
-                f"{cur} vs {meta}")
-        blocks[int(tree["shard"])] = np.asarray(tree["endpoints"])
-    num_shards, n, segment_len, seed, _ = meta
-    missing = sorted(set(range(num_shards)) - set(blocks))
+    trees = load_shard_checkpoints(directory, step, on_error="collect")
+    good, bad = _split_shard_trees(directory, trees)
+    meta = _shard_meta_consensus(directory, good, bad)
+    if bad:
+        R, L = (meta.R, meta.L) if meta is not None else ("?", "?")
+        detail = "; ".join(f"{shard_dir(directory, s)}: {e}"
+                           for s, e in sorted(bad.items()))
+        raise CheckpointCorruptError(
+            f"walk index under {directory!r} has corrupt or partial shard "
+            f"checkpoints (expected int32[shard_size, R={R}] blocks of "
+            f"L={L}-step segments): {detail} — quarantine and rebuild "
+            f"them (load_or_repair_walk_index does both)")
+    missing = sorted(set(range(meta.num_shards)) - set(good))
     if missing:
         raise FileNotFoundError(
-            f"walk index under {directory!r} is missing shards {missing}")
+            f"walk index under {directory!r} is missing shards {missing} "
+            f"(expected {meta.num_shards} shard dirs of "
+            f"int32[shard_size, R={meta.R}] blocks, L={meta.L})")
+    return _assemble_sharded(good, meta, reassemble)
+
+
+_ShardMeta = collections.namedtuple(
+    "_ShardMeta", ["num_shards", "n", "L", "seed", "R"])
+
+
+def _split_shard_trees(directory, trees):
+    """Separates healthy shard trees from failed loads; a tree whose
+    payload shape contradicts its own metadata counts as corrupt."""
+    good: Dict[int, dict] = {}
+    bad: Dict[int, Exception] = {}
+    for s, tree in trees.items():
+        if isinstance(tree, Exception):
+            bad[s] = tree
+            continue
+        try:
+            R = int(tree["segments_per_vertex"])
+            ep = np.asarray(tree["endpoints"])
+            if ep.ndim != 2 or ep.shape[1] != R:
+                raise CheckpointCorruptError(
+                    f"shard block has shape {ep.shape}, metadata says "
+                    f"R={R}")
+            good[s] = tree
+        except (KeyError, CheckpointCorruptError) as e:
+            bad[s] = e if isinstance(e, CheckpointCorruptError) else (
+                CheckpointCorruptError(
+                    f"shard checkpoint is missing leaf {e}"))
+    return good, bad
+
+
+def _shard_meta_consensus(directory, good, bad):
+    """Majority metadata across healthy shards; dissenting shards are
+    reclassified as corrupt (moved to ``bad``). None when no healthy
+    shard survives."""
+    metas = {
+        s: _ShardMeta(int(t["num_shards"]), int(t["n"]),
+                      int(t["segment_len"]), int(t["seed"]),
+                      int(t["segments_per_vertex"]))
+        for s, t in good.items()
+    }
+    if not metas:
+        return None
+    consensus, _ = collections.Counter(metas.values()).most_common(1)[0]
+    for s, m in metas.items():
+        if m != consensus:
+            bad[s] = CheckpointCorruptError(
+                f"shard metadata {tuple(m)} disagrees with the "
+                f"{tuple(consensus)} consensus under {directory!r}")
+            del good[s]
+    return consensus
+
+
+def _assemble_sharded(good, meta, reassemble):
     sharded = ShardedWalkIndex(
-        blocks=np.stack([blocks[s] for s in range(num_shards)]).astype(
-            np.int32),
-        n=n, segment_len=segment_len, seed=seed,
+        blocks=np.stack([np.asarray(good[s]["endpoints"])
+                         for s in range(meta.num_shards)]).astype(np.int32),
+        n=meta.n, segment_len=meta.L, seed=meta.seed,
     )
     return sharded.reassemble() if reassemble else sharded
+
+
+def rebuild_shard_blocks(
+    g: CSRGraph, cfg: WalkIndexConfig, shards: List[int]
+) -> Dict[int, np.ndarray]:
+    """Rebuilds just the named shards' slab blocks with the build's exact
+    key stream (``fold_in(PRNGKey(cfg.seed), shard)`` over the
+    ``partition_graph(g, cfg.num_shards)`` ranges) — byte-identical to the
+    blocks the original host-loop *or* ``shard_map`` build produced, so a
+    quarantined shard can be regenerated without touching the others."""
+    gp, part = partition_graph(g, cfg.num_shards)
+    walker = _ShardWalker(
+        row_ptr=gp.row_ptr, col_idx=gp.col_idx, deg=gp.out_deg, n=gp.n,
+        shard_size=part.shard_size, cfg=cfg,
+    )
+    run = jax.jit(walker.__call__)
+    key = jax.random.PRNGKey(cfg.seed)
+    return {
+        s: np.asarray(run(jnp.int32(part.bounds(s)[0]),
+                          jax.random.fold_in(key, s)))
+        for s in shards
+    }
+
+
+def load_or_repair_walk_index(
+    directory: str,
+    g: CSRGraph,
+    cfg: WalkIndexConfig,
+    step: Optional[int] = None,
+    reassemble: bool = True,
+) -> Union[WalkIndex, ShardedWalkIndex]:
+    """Like :func:`load_walk_index`, but self-healing for the per-shard
+    layout: a corrupt, torn, or missing shard checkpoint is quarantined
+    (``quarantine.shard_<s>`` — kept for forensics, invisible to loaders)
+    and its slab block rebuilt via :func:`rebuild_shard_blocks` with the
+    original build's key stream, then persisted and served. Only the
+    broken shards are rebuilt; healthy blocks are never re-walked.
+
+    The monolithic (dense) layout has no sub-unit to repair — corruption
+    there propagates as :class:`~repro.checkpoint.CheckpointCorruptError`
+    and the caller rebuilds the whole index.
+    """
+    if not list_shard_dirs(directory):
+        return load_walk_index(directory, step, reassemble)
+
+    trees = load_shard_checkpoints(directory, step, on_error="collect")
+    good, bad = _split_shard_trees(directory, trees)
+    meta = _shard_meta_consensus(directory, good, bad)
+    if meta is None:
+        # every shard is broken: fall back to the caller's config geometry
+        meta = _ShardMeta(cfg.num_shards, g.n, cfg.segment_len, cfg.seed,
+                          cfg.segments_per_vertex)
+    if meta.n != g.n:
+        raise ValueError(
+            f"walk index under {directory!r} was built for n={meta.n} but "
+            f"the service graph has n={g.n}; refusing to repair across "
+            f"graphs — point checkpoint_dir elsewhere or rebuild")
+    missing = sorted(set(range(meta.num_shards)) - set(good))
+    broken = sorted(set(bad) | set(missing))
+    if not broken:
+        return _assemble_sharded(good, meta, reassemble)
+
+    build_cfg = dataclasses.replace(
+        cfg, num_shards=meta.num_shards, segments_per_vertex=meta.R,
+        segment_len=meta.L, seed=meta.seed)
+    rebuilt = rebuild_shard_blocks(g, build_cfg, broken)
+    healthy_step = step
+    if healthy_step is None:
+        steps = [latest_step(shard_dir(directory, s)) for s in good]
+        healthy_step = next((s for s in steps if s is not None), 0)
+    for s in broken:
+        if os.path.isdir(shard_dir(directory, s)):
+            quarantine_shard_dir(directory, s)
+        save_walk_index_shard(
+            directory, s, meta.num_shards, g.n, rebuilt[s], meta.L,
+            meta.seed, step=healthy_step)
+        good[s] = {"endpoints": rebuilt[s]}
+    return _assemble_sharded(good, meta, reassemble)

@@ -58,13 +58,42 @@ bound reaches its requested ``epsilon``, even with walk budget left. The
 public way to drive all of this is the :class:`repro.service.QueryHandle`
 future (``submit()`` / ``run()`` here are deprecation shims kept for the
 legacy callers).
+
+**Degradation contract** (PR 6). FrogWild tolerates missing contributions
+by design — partial synchronization drops mirror updates and Theorem 1
+prices the loss — and the wave supervisor extends that lens to serving
+faults:
+
+* a **transient** fault or a wave exceeding ``wave_timeout_s`` is retried
+  (bounded by ``max_retries``, exponential backoff + jitter) from the
+  *same* wave key, so a successful retry is byte-identical to an unfaulted
+  wave; a mesh dispatch that keeps failing fails over once to the
+  host-loop dispatch of the identical per-shard program (byte-identical
+  answers — failover is principled, not best-effort);
+* a **permanent** shard fault evicts the shard: subsequent stitch rounds
+  mask its endpoint range (a walk needing a gather from — or a final tally
+  in — a lost range is dropped), per-query scores renormalize by the walks
+  that actually completed, and ``epsilon_bound`` widens to exactly the ε
+  Theorem 1 certifies for those surviving walks (the early-stopping
+  accounting applied to loss instead of budget). Results carry
+  ``degraded`` / ``shards_lost`` / ``walks_lost`` provenance, queued SLO
+  work is re-admitted against the shrunken capacity, and with zero faults
+  the masked programs are bit-for-bit the unfaulted ones;
+* retried / stalled / degraded waves never feed the admission wave-time
+  EMA (and clean outliers are clamped), so one bad wave cannot poison
+  ``wave_time_estimate_s`` into spurious SLO rejections.
+
+Injection (:class:`~repro.distributed.faults.FaultPlan`) drives all of the
+above deterministically in-process; ``WaveFailedError`` is the only way a
+wave surfaces an error, and it leaves no partial tallies behind.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import random
 import time
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, Optional, Set, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -72,12 +101,18 @@ import numpy as np
 
 from repro.config import warn_deprecated
 from repro.core import theory
+from repro.distributed.faults import (FaultEvent, FaultInjector, ShardFault,
+                                      WaveFailedError, WaveTimeout)
 from repro.distributed.runtime import ShardRuntime
 from repro.graph.csr import CSRGraph
 from repro.kernels import ops
 from repro.query.engine import (QueryPlan, _plain_steps, plan_query,
                                 sample_walk_lengths)
 from repro.query.index import ShardedWalkIndex, WalkIndex
+
+# A "clean" wave more than this factor above the EMA is clamped before the
+# fold — one GC pause or page-fault storm must not trip SLO rejections.
+_EMA_OUTLIER_CLAMP = 4.0
 
 
 @dataclasses.dataclass
@@ -129,6 +164,9 @@ class QueryResult:
     downgraded: bool = False         # admission shrank the plan to fit SLO
     met_slo: Optional[bool] = None   # None when no SLO was requested
     early_stopped: bool = False      # anytime bound met before the budget
+    degraded: bool = False           # some walks died on evicted shards
+    shards_lost: Tuple[int, ...] = ()  # shards evicted while this query ran
+    walks_lost: int = 0              # allocated walks that never tallied
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,6 +188,9 @@ class QueryPartial:
     waves: int
     epsilon_bound: float
     done: bool
+    degraded: bool = False
+    shards_lost: Tuple[int, ...] = ()
+    walks_lost: int = 0
 
 
 @dataclasses.dataclass
@@ -173,6 +214,8 @@ class _Active:
     deadline: float
     downgraded: bool
     executed: int = 0                # walks whose tallies have landed
+    lost: int = 0                    # allocated walks that died on a lost shard
+    shards_lost: Tuple[int, ...] = ()  # evicted shards seen by this query
 
 
 class QueryScheduler:
@@ -189,6 +232,11 @@ class QueryScheduler:
         seed: int = 0,
         runtime: Optional[ShardRuntime] = None,
         wave_time_estimate_s: Optional[float] = None,
+        fault_injector: Optional[FaultInjector] = None,
+        wave_timeout_s: Optional[float] = None,
+        max_retries: int = 2,
+        backoff_base_s: float = 0.02,
+        backoff_max_s: float = 0.5,
     ):
         self.g = g
         self.index = index
@@ -206,6 +254,22 @@ class QueryScheduler:
         self._key = jax.random.PRNGKey(seed)
         self._wave_time = wave_time_estimate_s   # EMA of measured wave s
         self._waves_run = 0
+        # --- fault-tolerance state (PR 6) ---
+        self._injector = fault_injector
+        self.wave_timeout_s = wave_timeout_s
+        self.max_retries = max_retries
+        self.backoff_base_s = backoff_base_s
+        self.backoff_max_s = backoff_max_s
+        self.lost_shards: Set[int] = set()
+        self.fault_log: List[FaultEvent] = []
+        self._backoff_rng = random.Random(seed)
+        self._failed_over = False
+        # bool[S] eviction mask, a replicated wave operand: all-False (the
+        # zero-fault case) leaves every masked program bit-identical to the
+        # unmasked one. Dense slabs get a 1-wide mask that never flips.
+        self._lost = np.zeros(
+            index.num_shards if isinstance(index, ShardedWalkIndex) else 1,
+            bool)
         if isinstance(index, ShardedWalkIndex):
             self.runtime = (runtime if runtime is not None
                             else ShardRuntime.acquire(index.num_shards))
@@ -275,7 +339,7 @@ class QueryScheduler:
                     index.endpoints, n, impl=impl)
                 return nxt
 
-            pos = self._stitch_rounds(pos, q, round_fn)
+            pos, _ = self._stitch_rounds(pos, q, round_fn)
             # one histogram for the whole wave: vertex id offset by the
             # walk's query slot; row Q is the idle-slot discard bin.
             # ``tally_impl``: "ref" (XLA scatter-add — fastest on CPU) or
@@ -285,7 +349,10 @@ class QueryScheduler:
             return counts.reshape(Q + 1, n)[:Q]
 
         fn = jax.jit(wave)
-        return lambda *args: np.asarray(fn(*args))
+        # a dense slab has no shard granularity, so the eviction mask is
+        # accepted (uniform wave signature) and ignored.
+        return lambda start, uniform, qid, t_cap, key, lost: np.asarray(
+            fn(start, uniform, qid, t_cap, key))
 
     def _shard_round(self, block_flat, base, pos, q, s0, j):
         """One stitch round against one shard's slab block: owned walks
@@ -321,14 +388,31 @@ class QueryScheduler:
         counts = ops.frog_count(bins, (Q + 1) * sz + 1, impl=self.tally_impl)
         return counts[: (Q + 1) * sz].reshape(Q + 1, sz)[:Q]
 
-    def _stitch_rounds(self, pos, q, round_fn):
+    def _stitch_rounds(self, pos, q, round_fn, lost_of=None):
         """Applies ``q_max`` stitch rounds where ``round_fn(pos, j)`` sums
         per-shard contributions; stopped walks (``j ≥ q``) keep their
-        position. Shared by the mesh and host-loop waves."""
+        position. Shared by the gathered, mesh, and host-loop waves.
+
+        ``lost_of(pos) -> bool[W]`` marks walks sitting in an evicted
+        shard's endpoint range. A walk that still needs a gather from a
+        lost range (``j < q``) — or whose *final* vertex lands in one —
+        dies: ``alive`` goes False and its position freezes, so the tally
+        can route it to the discard bin. With no evictions the mask is
+        all-False and the emitted program is bit-identical to the unmasked
+        one. Returns ``(pos, alive)`` (``alive is None`` without a mask).
+        """
+        alive = None
+        if lost_of is not None:
+            alive = jnp.ones(pos.shape, bool)
         for j in range(self._q_max):
+            if lost_of is not None:
+                alive = alive & ~(lost_of(pos) & (j < q))
             nxt = round_fn(pos, j)
-            pos = jnp.where(j < q, nxt, pos)
-        return pos
+            adv = (j < q) if alive is None else ((j < q) & alive)
+            pos = jnp.where(adv, nxt, pos)
+        if lost_of is not None:
+            alive = alive & ~lost_of(pos)
+        return pos, alive
 
     def _build_mesh_wave(self):
         """Sharded wave: one ``shard_map`` over the runtime's vertex axis.
@@ -340,10 +424,11 @@ class QueryScheduler:
         """
         rt, index = self.runtime, self.index
         Q = self.max_queries
+        S = rt.num_shards
         sz = index.shard_size
         ax = rt.axis_name
 
-        def body(blocks, start, uniform, qid, t_cap, key_data):
+        def body(blocks, start, uniform, qid, t_cap, key_data, lost):
             block_flat = blocks[0].reshape(-1)
             base = jax.lax.axis_index(ax) * sz
             key = jax.random.wrap_key_data(key_data, impl="threefry2x32")
@@ -355,13 +440,18 @@ class QueryScheduler:
                 # contribute 0 everywhere and are restored by the caller.
                 return jax.lax.psum(contrib, ax)
 
-            pos = self._stitch_rounds(pos, q, round_fn)
-            return self._shard_tally(pos, qid, base)[None]
+            # an evicted shard's range is masked identically on every
+            # device (``lost`` is replicated) — the mesh simulates loss;
+            # real device loss is handled by failover to the host loop.
+            lost_of = lambda p: lost[jnp.clip(p // sz, 0, S - 1)]
+            pos, alive = self._stitch_rounds(pos, q, round_fn, lost_of)
+            qid_eff = jnp.where(alive, qid, Q)   # dead walks → discard bin
+            return self._shard_tally(pos, qid_eff, base)[None]
 
         # check_vma=False: the fused stitch backends lower through
         # pallas_call (no replication rule), and the body mixes replicated
         # walk state with per-shard slab blocks by construction.
-        fn = rt.sharded_call(body, num_sharded=1, num_replicated=5,
+        fn = rt.sharded_call(body, num_sharded=1, num_replicated=6,
                              check_vma=False)
         # kept as an attribute so tests can assert the per-device placement
         # (each device holds exactly one [shard_size, R] block — 4nR/S
@@ -369,9 +459,10 @@ class QueryScheduler:
         self._placed_blocks = blocks = rt.place_sharded(
             jnp.asarray(self.index.blocks))
 
-        def wave(start, uniform, qid, t_cap, key):
+        def wave(start, uniform, qid, t_cap, key, lost):
             out = np.asarray(fn(blocks, start, uniform, qid, t_cap,
-                                ShardRuntime.key_data(key)))  # [S, Q, sz]
+                                ShardRuntime.key_data(key),
+                                lost))              # [S, Q, sz]
             return out.transpose(1, 0, 2).reshape(Q, -1)[:, : self.g.n]
 
         return wave
@@ -382,6 +473,7 @@ class QueryScheduler:
         R]`` block resident per call, cross-shard sums on the host."""
         rt, index = self.runtime, self.index
         Q = self.max_queries
+        S = rt.num_shards
         sz = index.shard_size
 
         prep = jax.jit(lambda start, uniform, t_cap, key:
@@ -391,18 +483,27 @@ class QueryScheduler:
         blocks = [jnp.asarray(index.blocks[s].reshape(-1))
                   for s in range(rt.num_shards)]
 
-        def wave(start, uniform, qid, t_cap, key):
+        def wave(start, uniform, qid, t_cap, key, lost):
             pos, q, s0 = prep(start, uniform, t_cap, key)
+            lost_host = np.asarray(lost)
 
             def round_fn(pos, j):
-                contribs = rt.map_shards(
-                    lambda s: round_s(blocks[s], jnp.int32(s * sz),
-                                      pos, q, s0, jnp.int32(j)))
+                # an evicted shard's block is genuinely never touched on
+                # this path: walks needing it are dead (masked below), so
+                # skipping its contribution changes no surviving value.
+                contribs = [
+                    round_s(blocks[s], jnp.int32(s * sz),
+                            pos, q, s0, jnp.int32(j))
+                    for s in range(S) if not lost_host[s]]
                 return sum(contribs)
 
-            pos = self._stitch_rounds(pos, q, round_fn)
-            out = np.stack(rt.map_shards(
-                lambda s: np.asarray(tally_s(pos, qid, jnp.int32(s * sz)))))
+            lost_of = lambda p: lost[jnp.clip(p // sz, 0, S - 1)]
+            pos, alive = self._stitch_rounds(pos, q, round_fn, lost_of)
+            qid_eff = jnp.where(alive, qid, Q)   # dead walks → discard bin
+            out = np.stack([
+                np.zeros((Q, sz), np.int32) if lost_host[s]
+                else np.asarray(tally_s(pos, qid_eff, jnp.int32(s * sz)))
+                for s in range(S)])
             return out.transpose(1, 0, 2).reshape(Q, -1)[:, : self.g.n]
 
         return wave
@@ -468,14 +569,15 @@ class QueryScheduler:
                        + sum(a.remaining for a in self.active.values()
                              if a.deadline <= deadline_new))
             feasible = int(req.slo_s / self._wave_time)
-            needed = -(-(walks + backlog) // self.max_walks)
+            eff = self._effective_walks()
+            needed = -(-(walks + backlog) // eff)
             if feasible < 1:
                 return self._reject(
                     req, plan,
                     f"SLO {req.slo_s:.3g}s is shorter than one wave "
                     f"(≈{self._wave_time:.3g}s)")
             if needed > feasible:
-                budget = feasible * self.max_walks - backlog
+                budget = feasible * eff - backlog
                 if not req.allow_downgrade or budget < 1:
                     return self._reject(
                         req, plan,
@@ -570,27 +672,38 @@ class QueryScheduler:
             cursor += w
 
         self._key, k_wave = jax.random.split(self._key)
-        t0 = time.perf_counter()
-        counts = self._wave(
-            jnp.asarray(start), jnp.asarray(uniform), jnp.asarray(qid),
-            jnp.asarray(t_cap), k_wave)
+        counts, clean, dt = self._run_wave(start, uniform, qid, t_cap, k_wave)
         now = time.perf_counter()
         # EMA of measured wave time — feeds the admission budget check. The
         # scheduler's very first wave includes jit compilation (seconds vs
         # steady-state ms) and would poison the estimate into rejecting
-        # feasible SLOs, so it is never folded in.
+        # feasible SLOs, so it is never folded in. Faulted / stalled /
+        # retried waves are skipped too (their wall time measures the fault,
+        # not the machine), and a clean outlier is clamped to a bounded
+        # multiple of the current estimate.
         self._waves_run += 1
-        if self._waves_run > 1:
-            dt = now - t0
+        if self._waves_run > 1 and clean:
+            if self._wave_time is not None:
+                dt = min(dt, _EMA_OUTLIER_CLAMP * self._wave_time)
             self._wave_time = (dt if self._wave_time is None
                                else 0.5 * self._wave_time + 0.5 * dt)
 
         for s, w in alloc.items():
+            if s not in self.active:         # evicted mid-wave? impossible
+                continue                     # today, but stay defensive
             a = self.active[s]
-            a.counts += counts[s]
+            row = counts[s]
+            # every surviving walk lands in exactly one tally bin, so the
+            # slot's landed count is the row sum — lost walks need no extra
+            # program output.
+            landed = int(row.sum())
+            a.counts += row
             a.remaining -= w
-            a.executed += w
+            a.executed += landed
             a.waves += 1
+            if landed < w:
+                a.lost += w - landed
+                a.shards_lost = tuple(sorted(self.lost_shards))
             early = (a.remaining > 0 and a.req.early_stop
                      and self._anytime_bound(a.plan.num_steps, a.req.k,
                                              a.req.delta, a.executed)
@@ -599,6 +712,195 @@ class QueryScheduler:
                 self.finished.append(self._finalize(a, now, early=early))
                 del self.active[s]
         return True
+
+    # --- wave supervision (fault tolerance) -------------------------------
+
+    def _run_wave(self, start, uniform, qid, t_cap, k_wave):
+        """Runs one wave under supervision: injector hooks fire first, the
+        dispatch is retried (same key — a successful retry is byte-identical)
+        on transient faults / timeouts with exponential backoff, permanent
+        shard faults evict the shard and re-run degraded, and a mesh that
+        keeps failing fails over once to the host-loop dispatch. Exhausting
+        every option raises :class:`WaveFailedError` with nothing tallied.
+
+        Returns ``(counts, clean, dt)`` — ``clean`` is False for any wave
+        that saw a fault, stall, retry, or eviction (the EMA skips those).
+        """
+        wave_no = self._waves_run
+        attempt = 0
+        clean = True
+        if self._injector is not None:
+            for shard in self._injector.shard_losses_at(wave_no):
+                clean = False
+                self._evict_shard(shard, wave_no)
+        while True:
+            t0 = time.perf_counter()
+            try:
+                if self._injector is not None:
+                    stall = self._injector.stall_s(wave_no)
+                    if stall:
+                        clean = False
+                        time.sleep(stall)
+                    kind = self._injector.fail_attempt(wave_no, attempt)
+                    if kind == "timeout":
+                        raise WaveTimeout(
+                            f"injected hang (wave {wave_no}, attempt "
+                            f"{attempt})")
+                    if kind == "transient":
+                        raise ShardFault(
+                            f"injected transient fault (wave {wave_no}, "
+                            f"attempt {attempt})", transient=True)
+                counts = self._wave(
+                    jnp.asarray(start), jnp.asarray(uniform),
+                    jnp.asarray(qid), jnp.asarray(t_cap), k_wave,
+                    jnp.asarray(self._lost))
+                dt = time.perf_counter() - t0
+                if self.wave_timeout_s is not None and dt > self.wave_timeout_s:
+                    raise WaveTimeout(
+                        f"wave {wave_no} took {dt:.3g}s > wave_timeout_s="
+                        f"{self.wave_timeout_s:.3g}s — result discarded")
+                return counts, clean, dt
+            except ShardFault as e:
+                clean = False
+                if not e.transient:
+                    if e.shard is None:
+                        raise WaveFailedError(
+                            f"wave {wave_no}: permanent fault named no "
+                            f"shard to evict: {e}") from e
+                    self._evict_shard(e.shard, wave_no)
+                    continue        # degraded re-run, not a retry
+                attempt = self._count_retry(wave_no, attempt, e)
+            except WaveTimeout as e:
+                clean = False
+                attempt = self._count_retry(wave_no, attempt, e)
+
+    def _count_retry(self, wave_no: int, attempt: int,
+                     err: Exception) -> int:
+        """Charges one retry; past ``max_retries`` tries the mesh→host-loop
+        failover (attempt counter resets — a fresh dispatch path earns a
+        fresh budget), then gives up with :class:`WaveFailedError`."""
+        attempt += 1
+        self.fault_log.append(FaultEvent(
+            kind="retry", wave=wave_no, attempt=attempt, detail=str(err)))
+        if attempt > self.max_retries:
+            if self._failover_to_loop(wave_no, str(err)):
+                return 0
+            raise WaveFailedError(
+                f"wave {wave_no} failed after {attempt} attempts "
+                f"(max_retries={self.max_retries}, no failover path left): "
+                f"{err}") from err
+        time.sleep(self._backoff_s(attempt))
+        return attempt
+
+    def _backoff_s(self, attempt: int) -> float:
+        """Exponential backoff with ×[0.5, 1.5) seeded jitter."""
+        base = min(self.backoff_max_s,
+                   self.backoff_base_s * (2 ** (attempt - 1)))
+        return base * (0.5 + self._backoff_rng.random())
+
+    def _evict_shard(self, shard: int, wave_no: int) -> None:
+        """Permanently removes a shard from serving: flips its eviction
+        mask bit (subsequent waves drop walks touching its range) and
+        re-runs admission for queued SLO work against the shrunken
+        capacity. Evicting the last shard is unservable and raises."""
+        if not isinstance(self.index, ShardedWalkIndex):
+            raise WaveFailedError(
+                f"shard {shard} reported lost but the slab is dense — "
+                f"gathered serving has no shard granularity to degrade to; "
+                f"rebuild the index")
+        S = self.index.num_shards
+        if not (0 <= shard < S):
+            raise ValueError(f"lost shard {shard} outside [0, {S})")
+        if shard in self.lost_shards:
+            return
+        if len(self.lost_shards) + 1 >= S:
+            raise WaveFailedError(
+                f"shard {shard} lost but shards "
+                f"{sorted(self.lost_shards)} are already evicted — no "
+                f"shard left to serve from; rebuild the index")
+        self.lost_shards.add(shard)
+        self._lost[shard] = True
+        self.fault_log.append(FaultEvent(
+            kind="shard_loss", wave=wave_no, shard=shard))
+        self._readmit_queued(wave_no)
+
+    def _failover_to_loop(self, wave_no: int, reason: str) -> bool:
+        """Mesh→host-loop failover: rebuilds the wave as the runtime's
+        host-loop dispatch of the identical per-shard program (byte-identical
+        answers — the PR-4 contract). One shot: a host loop has nothing
+        further to fail over to."""
+        if (self._failed_over
+                or not isinstance(self.index, ShardedWalkIndex)
+                or self.runtime is None or not self.runtime.is_mesh):
+            return False
+        self._failed_over = True
+        self.runtime = ShardRuntime(num_shards=self.runtime.num_shards,
+                                    axis_name=self.runtime.axis_name,
+                                    mesh=None)
+        self._wave = self._build_loop_wave()
+        self.fault_log.append(FaultEvent(
+            kind="failover", wave=wave_no,
+            detail=f"mesh dispatch abandoned for host loop: {reason}"))
+        return True
+
+    def _effective_walks(self) -> int:
+        """Walks the admission model charges per wave: losing shards kills
+        the walks that land in their ranges, so full-machine throughput
+        shrinks by the surviving-shard fraction (first-order — endpoint
+        mass is roughly balanced across range shards)."""
+        if isinstance(self.index, ShardedWalkIndex) and self.lost_shards:
+            S = self.index.num_shards
+            return max(1, int(self.max_walks * (S - len(self.lost_shards))
+                              / S))
+        return self.max_walks
+
+    def _readmit_queued(self, wave_no: int) -> None:
+        """Re-runs admission for queued SLO work after capacity shrank.
+
+        Every queued deadline entry is re-checked (EDF order) against the
+        post-eviction effective throughput: still-feasible work stays,
+        downgradable work is re-clamped, and the rest moves to
+        ``rejected`` — an honest late rejection instead of a silent SLO
+        miss discovered at the deadline. No-SLO work is untouched."""
+        if self._wave_time is None or not self.queue:
+            return
+        now = time.perf_counter()
+        eff = self._effective_walks()
+        keep: List[_Queued] = []
+        for e in sorted(self.queue,
+                        key=lambda e: (e.deadline, e.req.t_submit)):
+            if e.deadline == math.inf:
+                keep.append(e)
+                continue
+            feasible = int((e.deadline - now) / self._wave_time)
+            backlog = (sum(q.walks for q in keep
+                           if q.deadline <= e.deadline)
+                       + sum(a.remaining for a in self.active.values()
+                             if a.deadline <= e.deadline))
+            needed = -(-(e.walks + backlog) // eff)
+            if feasible >= needed:
+                keep.append(e)
+                continue
+            budget = feasible * eff - backlog
+            if e.req.allow_downgrade and budget >= 1:
+                e.walks = min(e.walks, budget)
+                e.downgraded = True
+                keep.append(e)
+                self.fault_log.append(FaultEvent(
+                    kind="readmit", wave=wave_no,
+                    detail=f"rid={e.req.rid} downgraded to {e.walks} walks"))
+            else:
+                self.rejected.append(AdmissionDecision(
+                    rid=e.req.rid, admitted=False,
+                    reason=(f"re-admission after shard loss (shards "
+                            f"{sorted(self.lost_shards)} evicted): plan "
+                            f"needs {needed} waves, {feasible} fit the "
+                            f"SLO at degraded throughput"),
+                    plan=e.plan))
+                self.fault_log.append(FaultEvent(
+                    kind="readmit", wave=wave_no,
+                    detail=f"rid={e.req.rid} rejected"))
+        self.queue = keep
 
     # --- anytime (ε, δ) refinement ---------------------------------------
 
@@ -614,16 +916,25 @@ class QueryScheduler:
 
     def _finalize(self, a: _Active, now: float,
                   early: bool = False) -> QueryResult:
-        scores = a.counts / float(a.executed)
+        # scores renormalize by the walks that actually completed — lost
+        # walks shrink the denominator rather than biasing the estimate
+        # (max() only guards the all-walks-lost corner: counts are all
+        # zero there and the bound below is already inf).
+        scores = a.counts / float(max(1, a.executed))
         k = min(a.req.k, self.g.n)
         top = np.argsort(-scores, kind="stable")[:k]
         latency = now - a.t_submit
         # Early-stopped (anytime) queries carry the bound their executed
         # walks actually certify; budget-drained queries keep the plan's
-        # recorded bound (incl. any admission downgrade).
+        # recorded bound (incl. any admission downgrade). A degraded query
+        # — walks died on evicted shards — widens to exactly the ε
+        # Theorem 1 certifies at N = executed: the lost-walk fraction
+        # enters through the sampling term, never silently.
+        degraded = a.lost > 0
         bound = (self._anytime_bound(a.plan.num_steps, a.req.k, a.req.delta,
                                      a.executed)
-                 if a.req.early_stop else a.plan.epsilon_bound)
+                 if (a.req.early_stop or degraded)
+                 else a.plan.epsilon_bound)
         return QueryResult(
             rid=a.req.rid, kind=a.req.kind, vertices=top,
             scores=scores[top], num_walks=a.executed,
@@ -634,6 +945,9 @@ class QueryScheduler:
             met_slo=(None if a.req.slo_s is None
                      else bool(latency <= a.req.slo_s)),
             early_stopped=early,
+            degraded=degraded,
+            shards_lost=a.shards_lost,
+            walks_lost=a.lost,
         )
 
     # --- anytime introspection (the QueryHandle surface) ------------------
@@ -669,7 +983,9 @@ class QueryScheduler:
                     rid=rid, kind=r.kind, k=len(r.vertices),
                     vertices=r.vertices, scores=r.scores,
                     walks_done=r.num_walks, waves=r.waves,
-                    epsilon_bound=r.epsilon_bound, done=True)
+                    epsilon_bound=r.epsilon_bound, done=True,
+                    degraded=r.degraded, shards_lost=r.shards_lost,
+                    walks_lost=r.walks_lost)
         for a in self.active.values():
             if a.req.rid != rid:
                 continue
@@ -686,7 +1002,9 @@ class QueryScheduler:
                 scores=top_scores, walks_done=a.executed, waves=a.waves,
                 epsilon_bound=self._anytime_bound(
                     a.plan.num_steps, a.req.k, a.req.delta, a.executed),
-                done=False)
+                done=False,
+                degraded=a.lost > 0, shards_lost=a.shards_lost,
+                walks_lost=a.lost)
         for e in self.queue:
             if e.req.rid == rid:
                 return QueryPartial(

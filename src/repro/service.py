@@ -41,11 +41,13 @@ from typing import List, Optional, Union
 
 import jax
 
+from repro.checkpoint import CheckpointCorruptError
 from repro.config import (EngineConfig, FrogWildConfig, KernelConfig,
                           RuntimeConfig, ServingConfig, ShardConfig,
                           WalkIndexConfig)
 from repro.core.frogwild import (FrogWildResult, _as_tuple,
                                  _frogwild_walks)
+from repro.distributed.faults import FaultInjector
 from repro.distributed.runtime import ShardRuntime
 from repro.engine import gas as _gas
 from repro.graph.csr import CSRGraph, load_graph
@@ -223,6 +225,14 @@ class QueryHandle:
                 return self._service.scheduler.result_for(self.rid)
             if st == "cancelled":
                 raise RuntimeError(f"query {self.rid} was cancelled")
+            if st == "rejected":
+                # shard loss can shrink capacity after admission: the
+                # re-admission pass moves infeasible queued work here.
+                reason = next(
+                    (d.reason for d in self._service.scheduler.rejected
+                     if d.rid == self.rid), "")
+                raise RuntimeError(
+                    f"query {self.rid} rejected after admission: {reason}")
             if max_waves is not None and waves >= max_waves:
                 raise TimeoutError(
                     f"query {self.rid} still {st} after {waves} waves")
@@ -270,6 +280,11 @@ class FrogWildService:
         self._dg = None                  # cached DistributedGraph
         self._dg_key = None
         self._next_rid = 0
+        # one injector per service: the scheduler consults it per
+        # (wave, attempt), and the index loader lets it mangle on-disk
+        # checkpoint payloads before the first read (crash-injection).
+        self._injector = (FaultInjector(config.faults)
+                          if config.faults is not None else None)
 
     # --- lifecycle -------------------------------------------------------
 
@@ -350,10 +365,22 @@ class FrogWildService:
         S = self.config.runtime.num_shards
         directory = self.config.serving.checkpoint_dir
         if directory is not None:
+            if self._injector is not None:
+                # crash-injection hook: mangle on-disk payloads *before*
+                # the first read so the repair path below is what serves.
+                self._injector.mangle_checkpoints(directory)
             try:
-                idx = _qindex.load_walk_index(directory,
-                                              reassemble=(S <= 1))
+                # self-healing load: corrupt / torn / missing shards of a
+                # per-shard layout are quarantined and rebuilt in place
+                # with the original build's key stream.
+                idx = _qindex.load_or_repair_walk_index(
+                    directory, self.graph, icfg, reassemble=(S <= 1))
             except FileNotFoundError:
+                idx = None
+            except CheckpointCorruptError:
+                # monolithic (dense) layout: no sub-unit to repair —
+                # rebuild the whole index below (the atomic save replaces
+                # the corrupt step dir).
                 idx = None
             if idx is not None:
                 if (idx.segments_per_vertex != icfg.segments_per_vertex
@@ -444,8 +471,28 @@ class FrogWildService:
                 impl=self.config.kernel.stitch_impl,
                 tally_impl=self.config.kernel.tally_impl,
                 seed=self.config.runtime.seed, runtime=runtime,
-                wave_time_estimate_s=scfg.wave_time_estimate_s)
+                wave_time_estimate_s=scfg.wave_time_estimate_s,
+                fault_injector=self._injector,
+                wave_timeout_s=scfg.wave_timeout_s,
+                max_retries=scfg.max_retries,
+                backoff_base_s=scfg.backoff_base_s,
+                backoff_max_s=scfg.backoff_max_s)
         return self._scheduler
+
+    @property
+    def lost_shards(self) -> frozenset:
+        """Shards evicted from serving so far (empty before any fault)."""
+        if self._scheduler is None:
+            return frozenset()
+        return frozenset(self._scheduler.lost_shards)
+
+    @property
+    def fault_log(self) -> list:
+        """The wave supervisor's fault provenance log (chronological
+        :class:`~repro.distributed.faults.FaultEvent` entries)."""
+        if self._scheduler is None:
+            return []
+        return list(self._scheduler.fault_log)
 
     def topk(
         self,

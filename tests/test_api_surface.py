@@ -46,9 +46,11 @@ SURFACE = {
         "WalkIndexConfig",
         "build_walk_index",
         "build_walk_index_sharded",
+        "load_or_repair_walk_index",
         "load_walk_index",
         "plan_query",
         "query_counts",
+        "rebuild_shard_blocks",
         "sample_walk_lengths",
         "save_walk_index",
         "save_walk_index_shard",
