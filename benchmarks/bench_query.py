@@ -44,7 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, emit_json
-from repro import FrogWildService, RuntimeConfig, ServingConfig, ShardConfig
+from repro import (FrogWildService, Gateway, RuntimeConfig, ServingConfig,
+                   ShardConfig)
 from repro.config import FrogWildConfig, KernelConfig
 from repro.core import theory
 from repro.core.frogwild import _frogwild_walks
@@ -161,6 +162,44 @@ def smoke():
         assert math.isclose(r.epsilon_bound, want), r.rid
     print("smoke query_serving faulted OK (degraded + widened bound)")
 
+    # gateway sweep (PR 7): a 2-replica gateway must answer a cold miss
+    # byte-identically to a fresh direct service under the same config,
+    # and a dominated repeat must come from the cache with zero new walks
+    # — the same object, no waves run. Uses a geometry where ε=0.4 plans
+    # are feasible (at max_steps=10 every certificate is honestly > 1).
+    gserving = ServingConfig(segments_per_vertex=12, segment_len=3,
+                             build_shards=2, max_walks=512, max_queries=3,
+                             max_steps=32)
+    gcfg = RuntimeConfig(runtime=ShardConfig(num_shards=1, seed=7),
+                         serving=gserving)
+    want = FrogWildService.open(g, gcfg).topk(
+        k=K, epsilon=0.4, delta=DELTA).result()
+    with Gateway.open(g, gcfg, replicas=2) as gw:
+        got = gw.topk(k=K, epsilon=0.4, delta=DELTA).result()
+        assert (np.asarray(got.vertices) == np.asarray(want.vertices)).all()
+        assert (np.asarray(got.scores) == np.asarray(want.scores)).all()
+        assert got.num_walks == want.num_walks
+        assert got.epsilon_bound == want.epsilon_bound
+        print("smoke gateway cold-miss OK (byte-identical to direct service)")
+        waves = gw.pool.total_waves_run()
+        rep = gw.topk(k=K, epsilon=0.4, delta=DELTA)
+        assert rep.source == "cache" and rep.result() is got
+        weaker = gw.topk(k=K, epsilon=0.6, delta=0.2)
+        assert weaker.source == "cache" and weaker.result() is got
+        assert gw.pool.total_waves_run() == waves
+        s = gw.stats()
+        assert s["cache_hits"] == 2 and s["cache"]["dominated_hits"] == 2
+        print("smoke gateway dominated-hit OK (zero new walks, verbatim "
+              "result)")
+        # in-flight join identity: an identical duplicate of a live query
+        # rides its handle (zero walks of its own) and settles with the
+        # parent's QueryResult object verbatim.
+        live = gw.topk(k=K + 2, epsilon=0.4, delta=DELTA)
+        dup = gw.topk(k=K + 2, epsilon=0.4, delta=DELTA)
+        assert live.source == "live" and dup.source == "joined"
+        assert dup.result() is live.result()
+    print("smoke gateway in-flight join OK (verbatim parent result)")
+
 
 def _restart_latencies(g, plan, p_T=0.15):
     """One full from-scratch walk program per query (the no-index baseline)."""
@@ -251,6 +290,36 @@ def main():
                  f"p99_ms={np.percentile(lat_h, 99) * 1e3:.1f} "
                  f"vs_drain={qps_h / qps_idx:.3f}"))
 
+    # gateway cache-hit serving (PR 7): the same stream through a
+    # 2-replica gateway. The first pass runs live (identical concurrent
+    # top-k requests dedup onto one in-flight query — the join counter)
+    # and warms the (ε, δ)-aware cache; the timed second pass is then
+    # answered entirely by dominated certificates — zero walks, so the
+    # row measures the cache's lookup path against handle-mode serving.
+    def gw_stream(gw):
+        handles = [(gw.ppr(source, k=K, epsilon=EPSILON, delta=DELTA)
+                    if kind == "ppr"
+                    else gw.topk(k=K, epsilon=EPSILON, delta=DELTA))
+                   for kind, source in _stream()]
+        for h in handles:
+            h.result()
+        return handles
+
+    gw = Gateway.open(g, RuntimeConfig(serving=serving), replicas=2)
+    gw_stream(gw)                                    # live pass: warm cache
+    t0 = time.perf_counter()
+    hit_handles = gw_stream(gw)
+    dt_hit = time.perf_counter() - t0
+    assert all(h.source == "cache" for h in hit_handles)
+    qps_hit = NUM_QUERIES / dt_hit
+    gstats = gw.stats()
+    hit_rate, join_rate = gstats["hit_rate"], gstats["join_rate"]
+    gw.close()
+    rows.append(("query/query_cache_hit", dt_hit * 1e6 / NUM_QUERIES,
+                 f"qps={qps_hit:.0f} vs_handle={qps_hit / qps_h:.0f}x "
+                 f"hit_rate={hit_rate:.2f} join_rate={join_rate:.2f} "
+                 f"replicas=2 (dominated certs, zero walks)"))
+
     # sharded-slab serving: per-shard blocks, no slab reassembly
     # (host-loop dispatch on this 1-device bench; 4·n·R/S bytes of slab
     # resident per wave call instead of 4·n·R).
@@ -337,6 +406,10 @@ def main():
         "epsilon": EPSILON, "delta": DELTA, "k": K,
         "qps_indexed": round(qps_idx, 2),
         "qps_service_handle": round(qps_h, 2),
+        "qps_cache_hit": round(qps_hit, 2),
+        "cache_hit_vs_handle": round(qps_hit / qps_h, 1),
+        "gateway_hit_rate": round(hit_rate, 4),
+        "gateway_join_rate": round(join_rate, 4),
         "qps_sharded": round(qps_sh, 2),
         "qps_restart": round(qps_rst, 2),
         "p50_ms_indexed": round(float(np.percentile(lat_idx, 50)) * 1e3, 2),

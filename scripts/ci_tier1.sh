@@ -3,15 +3,18 @@
 # Extra pytest args pass through, e.g. scripts/ci_tier1.sh -k query
 # --bench-smoke additionally runs (1) the service-API gate — the API-surface
 # snapshot (tests/test_api_surface.py) plus the facade/shim byte-compat and
-# QueryHandle anytime tests (tests/test_service_api.py) — and (2) the
-# dispatch equivalence sweeps (benchmarks/bench_kernels.py --smoke: every
-# kernel impl= path incl. the stitch/local-stitch variants;
-# benchmarks/bench_query.py --smoke: gathered vs sharded-slab vs
-# handle-driven serving, plus the fault-injection sweep — supervised
-# zero-fault byte-identity and seeded shard-loss degradation with the
-# Theorem-1-widened bound — tiny sizes, no BENCH json rewrite) so a broken
-# dispatch, surface, or degradation change fails tier-1 instead of only
-# bench runs.
+# QueryHandle anytime tests (tests/test_service_api.py) and the gateway
+# contract tests (tests/test_gateway.py: cache dominance, in-flight dedup,
+# replica routing, structured rejection) — and (2) the dispatch equivalence
+# sweeps (benchmarks/bench_kernels.py --smoke: every kernel impl= path
+# incl. the stitch/local-stitch variants; benchmarks/bench_query.py
+# --smoke: gathered vs sharded-slab vs handle-driven serving, the
+# fault-injection sweep — supervised zero-fault byte-identity and seeded
+# shard-loss degradation with the Theorem-1-widened bound — and the
+# 2-replica gateway sweep: cold-miss byte-equivalence to a direct service
+# plus dominated cache hits with zero new walks; tiny sizes, no BENCH json
+# rewrite) so a broken dispatch, surface, cache, or degradation change
+# fails tier-1 instead of only bench runs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -34,7 +37,8 @@ if [[ "$BENCH_SMOKE" == 1 ]]; then
   # only re-run them explicitly when pass-through args may have filtered
   # them out of the main run.
   if [[ ${#args[@]} -gt 0 ]]; then
-    python -m pytest -q tests/test_api_surface.py tests/test_service_api.py
+    python -m pytest -q tests/test_api_surface.py tests/test_service_api.py \
+      tests/test_gateway.py
   fi
   PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/bench_kernels.py --smoke

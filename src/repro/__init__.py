@@ -19,6 +19,13 @@ and the walk-index lifecycle (build / load / reuse through ``checkpoint/``);
 is met. Configuration is the layered :class:`~repro.config.RuntimeConfig`
 (kernel + runtime + serving sub-configs, one definition per flag).
 
+Above the facade sits the **serving gateway** (``repro/gateway/``): a
+replica pool over one shared graph/walk-index, an (ε, δ)-aware result
+cache with in-flight dedup (dominance contract: a cached certificate
+(ε′, δ′) serves a request (ε, δ) iff ε′ ≤ ε and δ′ ≤ δ), and a metrics /
+health layer with a stdlib HTTP front-end — ``Gateway.open(graph,
+replicas=2)``.
+
 The historical entry points (``frogwild_run``, ``distributed_frogwild``,
 ``build_walk_index{,_sharded}``, ``QueryScheduler.submit/run``) remain as
 deprecation shims that delegate through the service and return
@@ -35,10 +42,12 @@ _install_jax_compat()
 
 from repro.config import (KernelConfig, RuntimeConfig, ServingConfig,
                           ShardConfig)
+from repro.gateway import Gateway
 from repro.service import FrogWildService, QueryHandle
 
 __all__ = [
     "FrogWildService",
+    "Gateway",
     "QueryHandle",
     "RuntimeConfig",
     "KernelConfig",

@@ -1,0 +1,55 @@
+"""The serving gateway: a replica pool, an (ε, δ)-aware result cache, and
+a metrics/health layer above the :class:`~repro.service.FrogWildService`
+facade.
+
+FrogWild's Theorem-1 certificates make result reuse *principled* rather
+than heuristic. The tier's one invariant — the **dominance contract** —
+is:
+
+    a cached (or in-flight) answer certified at (ε′, δ′) may serve a
+    request for (ε, δ) **iff ε′ ≤ ε and δ′ ≤ δ** — the stored guarantee
+    is at least as strong in both coordinates, so the caller receives
+    exactly the accuracy they asked for (or better) with zero new walks.
+
+Three layers enforce it:
+
+* :class:`~repro.gateway.pool.ReplicaPool` — N service replicas sharing
+  ONE graph + walk-index slab (no N-fold duplication), routed by
+  EDF-charged queue depth from each scheduler's admission accounting.
+* :class:`~repro.gateway.cache.ResultCache` — a Pareto frontier of
+  certificates per (kind, k, source, graph-epoch) key; degraded answers
+  are never cached; epoch bumps orphan stale keys.
+* :class:`~repro.gateway.gateway.Gateway` — the submit path (cache →
+  in-flight join → replica), with :class:`~repro.gateway.metrics.
+  GatewayMetrics` and the stdlib HTTP front-end
+  (:func:`~repro.gateway.http.serve_http`: ``/pagerank`` ``/topk``
+  ``/ppr`` ``/healthz`` ``/metrics``).
+
+Quickstart::
+
+    from repro.gateway import Gateway, serve_http
+
+    with Gateway.open("graph.npz", replicas=2) as gw:
+        r1 = gw.topk(k=10, epsilon=0.2, delta=0.1).result()
+        r2 = gw.topk(k=10, epsilon=0.3, delta=0.1).result()  # cache hit:
+        server = serve_http(gw)          # zero walks, dominated certificate
+        print(server.url, gw.stats()["hit_rate"])
+        server.close()
+"""
+from repro.gateway.cache import CacheEntry, Certificate, ResultCache
+from repro.gateway.gateway import Gateway, GatewayHandle
+from repro.gateway.http import GatewayHTTPServer, serve_http
+from repro.gateway.metrics import GatewayMetrics
+from repro.gateway.pool import ReplicaPool
+
+__all__ = [
+    "CacheEntry",
+    "Certificate",
+    "Gateway",
+    "GatewayHTTPServer",
+    "GatewayHandle",
+    "GatewayMetrics",
+    "ReplicaPool",
+    "ResultCache",
+    "serve_http",
+]

@@ -1,0 +1,372 @@
+"""The gateway facade: cache → in-flight join → replica routing.
+
+One :class:`Gateway` fronts a :class:`~repro.gateway.pool.ReplicaPool`
+behind a single submit path shared by ``topk`` / ``ppr`` / ``pagerank``:
+
+1. **Result cache** — if a cached certificate dominates the request
+   (ε′ ≤ ε, δ′ ≤ δ), the answer is served immediately with zero walks
+   executed, byte-identical to the originally certified answer.
+2. **In-flight dedup** — if an identical key is already being computed and
+   its target dominates the request, the request joins the live
+   :class:`~repro.service.QueryHandle` (via :meth:`~repro.service.
+   QueryHandle.join`): it is fed monotone ``partial()`` snapshots and
+   completes the wave the weaker of the two bounds certifies.
+3. **Replica routing** — otherwise the request lands on the replica with
+   the lowest EDF-charged queue depth; its completed (undegraded) result
+   is inserted into the cache for everyone after.
+
+Every request returns a :class:`GatewayHandle` whose ``source`` records
+which path served it (``"cache"`` | ``"joined"`` | ``"live"``).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, Optional, Union
+
+import numpy as np
+
+from repro.config import RuntimeConfig
+from repro.gateway.cache import CacheKey, ResultCache
+from repro.gateway.metrics import GatewayMetrics
+from repro.gateway.pool import ReplicaPool
+from repro.graph.csr import CSRGraph
+from repro.query.engine import plan_query
+from repro.query.scheduler import QueryPartial, QueryResult
+from repro.service import JoinedQueryHandle, QueryHandle
+
+__all__ = ["Gateway", "GatewayHandle"]
+
+
+class GatewayHandle:
+    """Uniform future for a gateway request, whatever path served it.
+
+    ``source`` is ``"cache"`` (settled at submit, zero walks), ``"joined"``
+    (riding another user's in-flight query), or ``"live"`` (a fresh query
+    on ``replica``). The interface mirrors :class:`~repro.service.
+    QueryHandle`: ``done()`` / ``poll()`` / ``partial()`` / ``result()``.
+    """
+
+    def __init__(self, gateway: "Gateway", source: str,
+                 replica: Optional[int], *, key: CacheKey,
+                 epsilon: float, delta: float,
+                 inner: Union[QueryHandle, JoinedQueryHandle, None] = None,
+                 result: Optional[QueryResult] = None):
+        self._gateway = gateway
+        self.source = source
+        self.replica = replica
+        self.key = key
+        self.epsilon = epsilon
+        self.delta = delta
+        self._inner = inner
+        self._result: Optional[QueryResult] = None
+        self._t0 = time.perf_counter()
+        if result is not None:           # cache hit: settled at birth
+            self._result = result
+            gateway._record_done(self, result, latency_s=0.0)
+
+    @property
+    def admitted(self) -> bool:
+        return self._result is not None or self._inner.admitted
+
+    @property
+    def decision(self):
+        """The replica's AdmissionDecision (None off the live path)."""
+        return (self._inner.decision
+                if isinstance(self._inner, QueryHandle) else None)
+
+    def done(self) -> bool:
+        return self._result is not None or self._maybe_settle()
+
+    def poll(self) -> bool:
+        """Advances the serving replica by at most one wave."""
+        if self._result is None:
+            self._inner.poll()
+        return self.done()
+
+    def partial(self) -> QueryPartial:
+        """Anytime snapshot (for a settled handle, the final state)."""
+        if self._result is not None:
+            r = self._result
+            return QueryPartial(
+                rid=r.rid, kind=r.kind, k=len(r.vertices),
+                vertices=r.vertices, scores=r.scores,
+                walks_done=r.num_walks, waves=r.waves,
+                epsilon_bound=r.epsilon_bound, done=True,
+                degraded=r.degraded, shards_lost=r.shards_lost,
+                walks_lost=r.walks_lost)
+        return self._inner.partial()
+
+    def result(self, max_waves: Optional[int] = None) -> QueryResult:
+        if self._result is None:
+            self._settle(self._inner.result(max_waves))
+        return self._result
+
+    def _maybe_settle(self) -> bool:
+        """Settles without driving waves when the inner future finished.
+
+        Rejected / cancelled queries are terminal (True) but never settle a
+        result — ``result()`` surfaces the inner handle's error instead.
+        """
+        inner = self._inner
+        if isinstance(inner, QueryHandle):
+            st = inner.status() if inner.admitted else "rejected"
+            if st == "finished":
+                self._settle(inner.result(max_waves=0))
+                return True
+            return st in ("rejected", "cancelled")
+        if inner.done():
+            self._settle(inner.result(max_waves=0))
+            return True
+        return False
+
+    def _settle(self, result: QueryResult) -> None:
+        if self._result is None:
+            self._result = result
+            self._gateway._record_done(
+                self, result, latency_s=time.perf_counter() - self._t0)
+
+
+class Gateway:
+    """Serving tier over a replica pool with an (ε, δ)-aware cache.
+
+    Build one with :meth:`open`; submit with :meth:`topk` / :meth:`ppr`
+    (async :class:`GatewayHandle`) or :meth:`pagerank` (synchronous batch);
+    observe with :meth:`stats`; mount the stdlib HTTP front-end with
+    :func:`~repro.gateway.http.serve_http`.
+    """
+
+    def __init__(self, pool: ReplicaPool, cache: Optional[ResultCache],
+                 metrics: Optional[GatewayMetrics] = None):
+        self.pool = pool
+        self.cache = cache
+        self.metrics = metrics if metrics is not None else GatewayMetrics()
+        self.epoch = 0
+        self._inflight: Dict[CacheKey, GatewayHandle] = {}
+        self._closed = False
+
+    @classmethod
+    def open(
+        cls,
+        graph_or_path: Union[CSRGraph, str, os.PathLike],
+        config: Optional[RuntimeConfig] = None,
+        *,
+        replicas: int = 2,
+        cache: bool = True,
+        cache_capacity: int = 256,
+        mesh=None,
+    ) -> "Gateway":
+        """Opens a gateway: one shared graph/index, ``replicas`` services,
+        and (unless ``cache=False``) the dominance-checked result cache."""
+        pool = ReplicaPool(graph_or_path, config, num_replicas=replicas,
+                           mesh=mesh)
+        return cls(pool, ResultCache(cache_capacity) if cache else None)
+
+    # --- lifecycle -------------------------------------------------------
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self) -> None:
+        """Closes the pool and drops gateway state (idempotent)."""
+        if self._closed:
+            return
+        self._inflight.clear()
+        if self.cache is not None:
+            self.cache.clear()
+        self.pool.close()
+        self._closed = True
+
+    def __enter__(self) -> "Gateway":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def bump_epoch(self) -> int:
+        """Advances the graph epoch: every cached certificate and in-flight
+        join key from older epochs stops matching (the dynamic-graph
+        refresh hook — ROADMAP item 4 pins the epoch at query start)."""
+        self.epoch += 1
+        self._inflight.clear()
+        if self.cache is not None:
+            self.cache.drop_epochs_before(self.epoch)
+        return self.epoch
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("Gateway is closed")
+
+    # --- the async query surface -----------------------------------------
+
+    def topk(self, k: int = 10, epsilon: float = 0.3, delta: float = 0.1,
+             *, slo_s: Optional[float] = None,
+             allow_downgrade: bool = False) -> GatewayHandle:
+        """Global top-k through the tier (cache → join → replica)."""
+        return self._submit("topk", k, 0, epsilon, delta, slo_s=slo_s,
+                            allow_downgrade=allow_downgrade)
+
+    def ppr(self, source: int, k: int = 10, epsilon: float = 0.3,
+            delta: float = 0.1, *, slo_s: Optional[float] = None,
+            allow_downgrade: bool = False) -> GatewayHandle:
+        """Personalized PageRank through the tier."""
+        return self._submit("ppr", k, source, epsilon, delta, slo_s=slo_s,
+                            allow_downgrade=allow_downgrade)
+
+    def _submit(self, kind: str, k: int, source: int, epsilon: float,
+                delta: float, *, slo_s: Optional[float],
+                allow_downgrade: bool) -> GatewayHandle:
+        self._check_open()
+        self.metrics.requests += 1
+        key = ResultCache.key(kind, k, source, self.epoch)
+
+        # 1. cache: a dominating certificate answers for free.
+        if self.cache is not None:
+            entry = self.cache.lookup(key, epsilon, delta)
+            if entry is not None:
+                self.metrics.cache_hits += 1
+                return GatewayHandle(self, "cache", None, key=key,
+                                     epsilon=epsilon, delta=delta,
+                                     result=entry.result)
+
+        # 2. in-flight dedup: ride a live duplicate whose target dominates.
+        live = self._inflight.get(key)
+        if live is not None:
+            if live.done():              # finished since last touched —
+                live = None              # its settle cached it already;
+                self._inflight.pop(key, None)  # fall through to re-lookup
+                if self.cache is not None:
+                    entry = self.cache.lookup(key, epsilon, delta)
+                    if entry is not None:
+                        self.metrics.cache_hits += 1
+                        return GatewayHandle(self, "cache", None, key=key,
+                                             epsilon=epsilon, delta=delta,
+                                             result=entry.result)
+            elif live.epsilon <= epsilon and live.delta <= delta:
+                self.metrics.joins += 1
+                joined = live._inner.join(epsilon, delta)
+                return GatewayHandle(self, "joined", live.replica, key=key,
+                                     epsilon=epsilon, delta=delta,
+                                     inner=joined)
+
+        # 3. route to the least-loaded replica.
+        ridx = self.pool.route()
+        svc = self.pool.replicas[ridx]
+        if kind == "ppr":
+            qh = svc.ppr(source, k=k, epsilon=epsilon, delta=delta,
+                         slo_s=slo_s, allow_downgrade=allow_downgrade)
+        else:
+            qh = svc.topk(k=k, epsilon=epsilon, delta=delta, slo_s=slo_s,
+                          allow_downgrade=allow_downgrade)
+        self.metrics.record_admission(qh.decision)
+        handle = GatewayHandle(self, "live", ridx, key=key,
+                               epsilon=epsilon, delta=delta, inner=qh)
+        if qh.admitted:
+            self.metrics.live += 1
+            prev = self._inflight.get(key)
+            # register for joins; a strictly stronger target displaces a
+            # weaker registrant (it can serve strictly more duplicates).
+            if (prev is None or prev.done()
+                    or (epsilon <= prev.epsilon and delta <= prev.delta)):
+                self._inflight[key] = handle
+        return handle
+
+    # --- batch -----------------------------------------------------------
+
+    def pagerank(self, epsilon: float = 0.3, delta: float = 0.1,
+                 k: int = 10) -> QueryResult:
+        """Batch full-vector PageRank, reduced to its top-k and cached.
+
+        The Theorem-1 plan meets the requested (ε, δ) by construction, so
+        the certificate is the plan's recorded ``epsilon_bound`` (which
+        also honestly widens when a cap binds the plan).
+        """
+        self._check_open()
+        self.metrics.requests += 1
+        key = ResultCache.key("pagerank", k, 0, self.epoch)
+        if self.cache is not None:
+            entry = self.cache.lookup(key, epsilon, delta)
+            if entry is not None:
+                self.metrics.cache_hits += 1
+                self.metrics.record_completion(0.0)
+                return entry.result
+        ridx = self.pool.route()
+        svc = self.pool.replicas[ridx]
+        plan = plan_query(k, epsilon, delta, p_T=svc.config.p_T,
+                          max_steps=svc.config.serving.max_steps)
+        t0 = time.perf_counter()
+        res = svc.pagerank(epsilon=epsilon, delta=delta, k=k)
+        pi = np.asarray(res.pi_hat)
+        top = np.argsort(-pi, kind="stable")[:min(k, pi.shape[0])]
+        qr = QueryResult(
+            rid=-1, kind="pagerank", vertices=top, scores=pi[top],
+            num_walks=int(getattr(res, "num_frogs", plan.num_walks)),
+            num_steps=plan.num_steps, waves=0,
+            latency_s=time.perf_counter() - t0,
+            epsilon_bound=plan.epsilon_bound)
+        self.metrics.live += 1
+        self.metrics.record_completion(qr.latency_s)
+        if self.cache is not None:
+            self.cache.insert(key, qr, delta)
+        return qr
+
+    # --- completion hook --------------------------------------------------
+
+    def _record_done(self, handle: GatewayHandle, result: QueryResult,
+                     latency_s: float) -> None:
+        self.metrics.record_completion(latency_s)
+        if handle.source != "live":
+            return
+        if self._inflight.get(handle.key) is handle:
+            del self._inflight[handle.key]
+        if self.cache is not None and not self._closed:
+            # degraded answers are refused inside insert(); the
+            # certificate's δ is the δ the bound was certified at.
+            self.cache.insert(handle.key, result, handle.delta)
+
+    # --- drive + observe --------------------------------------------------
+
+    def step(self) -> bool:
+        """One wave across the pool: advances every replica with in-flight
+        work; False when the whole tier is idle."""
+        self._check_open()
+        progressed = False
+        for r in self.pool.replicas:
+            if r.serving_stats() is not None:
+                progressed |= r.step()
+        return progressed
+
+    def healthy(self) -> bool:
+        """Liveness: open, and no replica lost a serving shard."""
+        return (not self._closed and not self.pool.closed
+                and all(not r.lost_shards for r in self.pool.replicas))
+
+    def stats(self) -> Dict[str, object]:
+        """One structured snapshot of the whole tier (what ``/metrics``
+        serves): gateway counters + per-replica scheduler stats + cache."""
+        snap = self.metrics.snapshot()
+        snap["epoch"] = self.epoch
+        snap["inflight_keys"] = len(self._inflight)
+        snap["closed"] = self._closed
+        snap["cache"] = (self.cache.stats() if self.cache is not None
+                         else None)
+        replicas = []
+        for i, r in enumerate(self.pool.replicas):
+            st = r.serving_stats()
+            replicas.append({
+                "replica": i,
+                "queue_depth_walks": 0 if st is None else st.backlog_walks,
+                "queued": 0 if st is None else st.queued,
+                "active": 0 if st is None else st.active,
+                "finished": 0 if st is None else st.finished,
+                "rejected": 0 if st is None else st.rejected,
+                "waves_run": 0 if st is None else st.waves_run,
+                "walks_executed": 0 if st is None else st.walks_executed,
+                "wave_occupancy": (0.0 if st is None
+                                   else round(st.wave_occupancy, 4)),
+                "wave_time_ema_s": None if st is None else st.wave_time_ema_s,
+                "lost_shards": [] if st is None else list(st.lost_shards),
+            })
+        snap["replicas"] = replicas
+        return snap

@@ -1,0 +1,107 @@
+"""Replica pool: N ``FrogWildService`` replicas over ONE shared graph and
+walk index.
+
+The expensive state — the CSR graph and the ``int32[n, R]`` walk-index
+slab (or its per-shard blocks) — is built or loaded exactly once and the
+*same arrays* are handed to every replica, so an N-replica pool costs N
+schedulers (host state + one compiled wave program each), not N slabs.
+Replicas are seeded identically, which keeps the cold-replica contract
+from the rest of the stack: the first query on any fresh replica is
+byte-identical to the first query on a fresh standalone service with the
+same config.
+
+Routing is queue-depth-aware: :meth:`ReplicaPool.route` picks the replica
+with the smallest EDF-charged backlog as reported by its scheduler's own
+admission accounting (:meth:`~repro.query.scheduler.QueryScheduler.stats`
+``backlog_walks`` — the demand a new request would be charged behind),
+breaking ties toward the replica that has run the fewest waves.
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Optional, Union
+
+from repro.config import RuntimeConfig
+from repro.graph.csr import CSRGraph
+from repro.service import FrogWildService
+
+__all__ = ["ReplicaPool"]
+
+
+class ReplicaPool:
+    def __init__(
+        self,
+        graph_or_path: Union[CSRGraph, str, os.PathLike],
+        config: Optional[RuntimeConfig] = None,
+        *,
+        num_replicas: int = 2,
+        mesh=None,
+    ):
+        if num_replicas < 1:
+            raise ValueError(f"num_replicas must be ≥ 1, got {num_replicas}")
+        primary = FrogWildService.open(graph_or_path, config, mesh=mesh)
+        # one build/load; every replica serves the same slab arrays (and,
+        # for a sharded layout, the same per-shard blocks) — no N-fold
+        # duplication, asserted in tests via object identity.
+        index = primary.ensure_index()
+        self.replicas: List[FrogWildService] = [primary]
+        for _ in range(num_replicas - 1):
+            self.replicas.append(FrogWildService.open(
+                primary.graph, primary.config, mesh=mesh, index=index))
+        self._closed = False
+
+    def __len__(self) -> int:
+        return len(self.replicas)
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    @property
+    def graph(self) -> CSRGraph:
+        return self.replicas[0].graph
+
+    @property
+    def config(self) -> RuntimeConfig:
+        return self.replicas[0].config
+
+    def route(self) -> int:
+        """Index of the replica a new request should land on.
+
+        Orders by (EDF-charged backlog walks, waves run, replica index):
+        the backlog is the scheduler's own admission charge — queued plus
+        in-flight walk demand — so routing and admission agree about what
+        "loaded" means. A replica whose scheduler does not exist yet is
+        unloaded by definition (depth 0, zero waves).
+        """
+        if self._closed:
+            raise RuntimeError("ReplicaPool is closed")
+
+        def load(i: int):
+            st = self.replicas[i].serving_stats()
+            if st is None:
+                return (0, 0, i)
+            return (st.backlog_walks, st.waves_run, i)
+
+        return min(range(len(self.replicas)), key=load)
+
+    def total_waves_run(self) -> int:
+        """Waves executed across the pool — the cache tests' "zero new
+        walks" witness (a dominated hit must not move this)."""
+        return sum(st.waves_run for st in
+                   (r.serving_stats() for r in self.replicas)
+                   if st is not None)
+
+    def close(self) -> None:
+        """Closes every replica (idempotent — replica close is too)."""
+        if self._closed:
+            return
+        for r in self.replicas:
+            r.close()
+        self._closed = True
+
+    def __enter__(self) -> "ReplicaPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -59,6 +59,8 @@ from repro.query.scheduler import (
     QueryRequest,
     QueryResult,
     QueryScheduler,
+    RejectReason,
+    SchedulerStats,
 )
 
 __all__ = [
@@ -83,4 +85,6 @@ __all__ = [
     "QueryRequest",
     "QueryResult",
     "QueryScheduler",
+    "RejectReason",
+    "SchedulerStats",
 ]

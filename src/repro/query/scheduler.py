@@ -90,6 +90,7 @@ wave surfaces an error, and it leaves no partial tallies behind.
 from __future__ import annotations
 
 import dataclasses
+import enum
 import math
 import random
 import time
@@ -131,20 +132,44 @@ class QueryRequest:
     t_submit: Optional[float] = None # stamped by QueryScheduler.submit()
 
 
+class RejectReason(str, enum.Enum):
+    """Why admission refused a request — structured, so a routing layer
+    (the gateway) can branch on it without string-matching ``reason``.
+
+    * ``NONE``           — not rejected (the decision admitted the request).
+    * ``INFEASIBLE_SLO`` — the SLO is shorter than a single wave: no walk
+      budget could ever fit it, retrying elsewhere with the same SLO is
+      pointless.
+    * ``CAPACITY``       — the Theorem-1 plan (plus the EDF-charged
+      backlog) needs more waves than the SLO leaves; another, less loaded
+      replica may well admit it.
+    * ``SHARD_LOSS``     — a post-admission re-check after shard eviction
+      shrank capacity; the replica is degraded and a healthy replica
+      should be preferred.
+    """
+
+    NONE = "none"
+    INFEASIBLE_SLO = "infeasible_slo"
+    CAPACITY = "capacity"
+    SHARD_LOSS = "shard_loss"
+
+
 @dataclasses.dataclass(frozen=True)
 class AdmissionDecision:
     """What the admission controller did with a ``submit()``.
 
     ``admitted=False`` means the request was dropped at the door (its
     Theorem-1 plan cannot fit the remaining wave budget before the
-    deadline); ``downgraded=True`` means it was admitted with a clamped
-    walk count whose weaker guarantee is recorded in
-    ``plan.epsilon_bound``.
+    deadline) with the *kind* of refusal in ``reason_code`` (a
+    :class:`RejectReason`) and the human-readable detail in ``reason``;
+    ``downgraded=True`` means it was admitted with a clamped walk count
+    whose weaker guarantee is recorded in ``plan.epsilon_bound``.
     """
 
     rid: int
     admitted: bool
     reason: str = ""
+    reason_code: RejectReason = RejectReason.NONE
     downgraded: bool = False
     plan: Optional[QueryPlan] = None
     num_walks: int = 0
@@ -191,6 +216,32 @@ class QueryPartial:
     degraded: bool = False
     shards_lost: Tuple[int, ...] = ()
     walks_lost: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerStats:
+    """One structured snapshot of the scheduler's serving/admission state.
+
+    ``backlog_walks`` is the scheduler's own admission accounting — the
+    queued plus in-flight walk demand a new no-SLO request would be
+    EDF-charged behind (every outstanding deadline outranks ∞). The
+    gateway's replica router keys on it; everything else feeds the
+    metrics/health layer.
+    """
+
+    queued: int                      # requests waiting for a query slot
+    active: int                      # requests occupying a slot
+    finished: int                    # results retired so far
+    rejected: int                    # admission refusals so far
+    cancelled: int
+    backlog_walks: int               # queued + in-flight walk demand
+    waves_run: int
+    walks_executed: int              # walks whose tallies landed
+    wave_time_ema_s: Optional[float]
+    wave_occupancy: float            # allocated walk slots / capacity
+    lost_shards: Tuple[int, ...]
+    max_walks: int
+    max_queries: int
 
 
 @dataclasses.dataclass
@@ -254,6 +305,8 @@ class QueryScheduler:
         self._key = jax.random.PRNGKey(seed)
         self._wave_time = wave_time_estimate_s   # EMA of measured wave s
         self._waves_run = 0
+        self._walks_allocated = 0    # walk slots handed out across all waves
+        self._walks_executed = 0     # walks whose tallies actually landed
         # --- fault-tolerance state (PR 6) ---
         self._injector = fault_injector
         self.wave_timeout_s = wave_timeout_s
@@ -575,7 +628,8 @@ class QueryScheduler:
                 return self._reject(
                     req, plan,
                     f"SLO {req.slo_s:.3g}s is shorter than one wave "
-                    f"(≈{self._wave_time:.3g}s)")
+                    f"(≈{self._wave_time:.3g}s)",
+                    RejectReason.INFEASIBLE_SLO)
             if needed > feasible:
                 budget = feasible * eff - backlog
                 if not req.allow_downgrade or budget < 1:
@@ -583,7 +637,8 @@ class QueryScheduler:
                         req, plan,
                         f"plan needs {needed} waves ({backlog} walks "
                         f"queued ahead at earlier deadlines), only "
-                        f"{feasible} fit the {req.slo_s:.3g}s SLO")
+                        f"{feasible} fit the {req.slo_s:.3g}s SLO",
+                        RejectReason.CAPACITY)
                 plan = plan_query(
                     req.k, req.epsilon, req.delta, p_T=self.p_T,
                     max_walks=budget, max_steps=self.max_steps,
@@ -601,10 +656,11 @@ class QueryScheduler:
                                  downgraded=downgraded, plan=plan,
                                  num_walks=walks)
 
-    def _reject(self, req: QueryRequest, plan: QueryPlan,
-                reason: str) -> AdmissionDecision:
+    def _reject(self, req: QueryRequest, plan: QueryPlan, reason: str,
+                code: RejectReason) -> AdmissionDecision:
         decision = AdmissionDecision(rid=req.rid, admitted=False,
-                                     reason=reason, plan=plan)
+                                     reason=reason, reason_code=code,
+                                     plan=plan)
         self.rejected.append(decision)
         return decision
 
@@ -674,6 +730,7 @@ class QueryScheduler:
         self._key, k_wave = jax.random.split(self._key)
         counts, clean, dt = self._run_wave(start, uniform, qid, t_cap, k_wave)
         now = time.perf_counter()
+        self._walks_allocated += sum(alloc.values())
         # EMA of measured wave time — feeds the admission budget check. The
         # scheduler's very first wave includes jit compilation (seconds vs
         # steady-state ms) and would poison the estimate into rejecting
@@ -700,12 +757,13 @@ class QueryScheduler:
             a.counts += row
             a.remaining -= w
             a.executed += landed
+            self._walks_executed += landed
             a.waves += 1
             if landed < w:
                 a.lost += w - landed
                 a.shards_lost = tuple(sorted(self.lost_shards))
             early = (a.remaining > 0 and a.req.early_stop
-                     and self._anytime_bound(a.plan.num_steps, a.req.k,
+                     and self.anytime_bound(a.plan.num_steps, a.req.k,
                                              a.req.delta, a.executed)
                      <= a.req.epsilon)
             if a.remaining == 0 or early:
@@ -896,15 +954,47 @@ class QueryScheduler:
                             f"{sorted(self.lost_shards)} evicted): plan "
                             f"needs {needed} waves, {feasible} fit the "
                             f"SLO at degraded throughput"),
+                    reason_code=RejectReason.SHARD_LOSS,
                     plan=e.plan))
                 self.fault_log.append(FaultEvent(
                     kind="readmit", wave=wave_no,
                     detail=f"rid={e.req.rid} rejected"))
         self.queue = keep
 
+    # --- introspection (gateway routing + metrics) ------------------------
+
+    def stats(self) -> SchedulerStats:
+        """Structured snapshot of serving/admission state (no waves driven).
+
+        ``backlog_walks`` is exactly the demand ``_submit`` would charge a
+        new no-SLO request with under EDF (every outstanding deadline
+        outranks ∞): queued walk counts plus the remaining budgets of every
+        active slot. The gateway's replica router picks the replica where
+        this is smallest.
+        """
+        backlog = (sum(e.walks for e in self.queue)
+                   + sum(a.remaining for a in self.active.values()))
+        capacity = self._waves_run * self.max_walks
+        return SchedulerStats(
+            queued=len(self.queue),
+            active=len(self.active),
+            finished=len(self.finished),
+            rejected=len(self.rejected),
+            cancelled=len(self.cancelled),
+            backlog_walks=backlog,
+            waves_run=self._waves_run,
+            walks_executed=self._walks_executed,
+            wave_time_ema_s=self._wave_time,
+            wave_occupancy=(self._walks_allocated / capacity
+                            if capacity else 0.0),
+            lost_shards=tuple(sorted(self.lost_shards)),
+            max_walks=self.max_walks,
+            max_queries=self.max_queries,
+        )
+
     # --- anytime (ε, δ) refinement ---------------------------------------
 
-    def _anytime_bound(self, num_steps: int, k: int, delta: float,
+    def anytime_bound(self, num_steps: int, k: int, delta: float,
                        executed: int) -> float:
         """The ε Theorem 1 certifies for the walks tallied so far (p_s = 1
         serving walks, p_cap = 0). Monotone non-increasing in ``executed``
@@ -931,7 +1021,7 @@ class QueryScheduler:
         # Theorem 1 certifies at N = executed: the lost-walk fraction
         # enters through the sampling term, never silently.
         degraded = a.lost > 0
-        bound = (self._anytime_bound(a.plan.num_steps, a.req.k, a.req.delta,
+        bound = (self.anytime_bound(a.plan.num_steps, a.req.k, a.req.delta,
                                      a.executed)
                  if (a.req.early_stop or degraded)
                  else a.plan.epsilon_bound)
@@ -1000,7 +1090,7 @@ class QueryScheduler:
             return QueryPartial(
                 rid=rid, kind=a.req.kind, k=k, vertices=vertices,
                 scores=top_scores, walks_done=a.executed, waves=a.waves,
-                epsilon_bound=self._anytime_bound(
+                epsilon_bound=self.anytime_bound(
                     a.plan.num_steps, a.req.k, a.req.delta, a.executed),
                 done=False,
                 degraded=a.lost > 0, shards_lost=a.shards_lost,

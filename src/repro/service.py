@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import time
 from typing import List, Optional, Union
 
 import jax
@@ -55,10 +56,11 @@ from repro.query import index as _qindex
 from repro.query.engine import plan_query
 from repro.query.index import ShardedWalkIndex, WalkIndex
 from repro.query.scheduler import (QueryPartial, QueryRequest, QueryResult,
-                                   QueryScheduler)
+                                   QueryScheduler, SchedulerStats)
 
 __all__ = [
     "FrogWildService",
+    "JoinedQueryHandle",
     "QueryHandle",
     "QueryPartial",
     "RuntimeConfig",
@@ -192,6 +194,10 @@ class QueryHandle:
         ``cancelled``."""
         if not self.admitted:
             return "rejected"
+        if self._service.closed:
+            # close() cancels in-flight work; a handle outliving its
+            # service reports that instead of resurrecting a scheduler.
+            return "cancelled"
         return self._service.scheduler.query_state(self.rid)
 
     def done(self) -> bool:
@@ -243,9 +249,132 @@ class QueryHandle:
 
     def cancel(self) -> bool:
         """Drops the query; False when it already finished (or never ran)."""
-        if not self.admitted:
+        if not self.admitted or self._service.closed:
             return False
         return self._service.scheduler.cancel(self.rid)
+
+    def join(self, epsilon: Optional[float] = None,
+             delta: Optional[float] = None) -> "JoinedQueryHandle":
+        """Attaches a duplicate request to this live handle (in-flight
+        dedup — the gateway's join hook).
+
+        Valid only when this handle's target **dominates** the joiner's —
+        ``self.ε ≤ ε`` and ``self.δ ≤ δ`` — because then Theorem 1
+        guarantees the walks already being executed certify the joiner's
+        weaker bound no later than this handle's own. The joined handle
+        executes zero walks of its own: it is fed this handle's monotone
+        ``partial()`` snapshots and completes the wave *its* (ε, δ) is
+        certified — at the latest, the wave this handle finishes.
+        """
+        eps = self.request.epsilon if epsilon is None else epsilon
+        dlt = self.request.delta if delta is None else delta
+        if self.request.epsilon > eps or self.request.delta > dlt:
+            raise ValueError(
+                f"cannot join query {self.rid}: its target "
+                f"(ε={self.request.epsilon}, δ={self.request.delta}) does "
+                f"not dominate the joiner's (ε={eps}, δ={dlt}) — submit a "
+                f"fresh query instead")
+        if not self.admitted:
+            raise RuntimeError(
+                f"cannot join rejected query {self.rid}: "
+                f"{self.decision.reason}")
+        return JoinedQueryHandle(self, eps, dlt)
+
+
+class JoinedQueryHandle:
+    """A duplicate request riding a live :class:`QueryHandle`.
+
+    Created by :meth:`QueryHandle.join` — the parent's (ε, δ) target must
+    dominate this one's. No walks are executed on its behalf: ``poll()`` /
+    ``result()`` drive the parent's service, ``partial()`` is the parent's
+    snapshot, and the join settles the wave its own (ε, δ) is certified by
+    the walks tallied so far. With a target identical to the parent's, the
+    settled result *is* the parent's :class:`~repro.query.scheduler.
+    QueryResult` object — byte-identical, provenance included.
+    """
+
+    def __init__(self, parent: QueryHandle, epsilon: float, delta: float):
+        self.parent = parent
+        self.epsilon = epsilon
+        self.delta = delta
+        self._result: Optional[QueryResult] = None
+        self._t_join = time.perf_counter()
+
+    @property
+    def rid(self) -> int:
+        return self.parent.rid
+
+    @property
+    def admitted(self) -> bool:
+        return self.parent.admitted
+
+    def done(self) -> bool:
+        return self._result is not None or self._settle()
+
+    def poll(self) -> bool:
+        """Advances the parent's service by one wave unless already done."""
+        if not self.done():
+            self.parent._service.step()
+        return self.done()
+
+    def partial(self) -> QueryPartial:
+        """The parent's anytime snapshot (shared tallies)."""
+        return self.parent.partial()
+
+    def _settle(self) -> bool:
+        """Settles the joined result once certifiable; False until then."""
+        parent = self.parent
+        st = parent.status()
+        if st == "finished":
+            # the parent's certificate was issued at (ε_p ≤ ε, δ_p ≤ δ), so
+            # it dominates the joiner's target: hand back the parent's
+            # result object itself — byte-identical by construction.
+            self._result = parent._service.scheduler.result_for(parent.rid)
+            return True
+        if st != "active":
+            return False             # queued: no walks yet; cancelled /
+                                     # rejected: surfaced by result()
+        if (self.epsilon, self.delta) == (parent.request.epsilon,
+                                          parent.request.delta):
+            return False             # identical target: settle with parent
+        sched = parent._service.scheduler
+        p = sched.partial(self.rid)
+        if not p.walks_done:
+            return False
+        bound = sched.anytime_bound(parent.decision.plan.num_steps,
+                                    parent.request.k, self.delta,
+                                    p.walks_done)
+        if bound > self.epsilon:
+            return False
+        # the weaker bound is certified mid-flight: freeze this wave's
+        # snapshot as the joined result while the parent keeps refining.
+        self._result = QueryResult(
+            rid=p.rid, kind=p.kind, vertices=p.vertices, scores=p.scores,
+            num_walks=p.walks_done,
+            num_steps=parent.decision.plan.num_steps, waves=p.waves,
+            latency_s=time.perf_counter() - self._t_join,
+            epsilon_bound=bound, early_stopped=True, degraded=p.degraded,
+            shards_lost=p.shards_lost, walks_lost=p.walks_lost)
+        return True
+
+    def result(self, max_waves: Optional[int] = None) -> QueryResult:
+        """Drives waves until this join's (ε, δ) is certified."""
+        waves = 0
+        while True:
+            if self.done():
+                return self._result
+            st = self.parent.status()
+            if st in ("cancelled", "rejected"):
+                raise RuntimeError(
+                    f"joined query {self.rid}: parent handle is {st}")
+            if max_waves is not None and waves >= max_waves:
+                raise TimeoutError(
+                    f"joined query {self.rid} still {st} after "
+                    f"{waves} waves")
+            if not self.parent._service.step():
+                raise RuntimeError(
+                    f"scheduler idle but joined query {self.rid} is {st}")
+            waves += 1
 
 
 # ---------------------------------------------------------------------------
@@ -280,6 +409,7 @@ class FrogWildService:
         self._dg = None                  # cached DistributedGraph
         self._dg_key = None
         self._next_rid = 0
+        self._closed = False
         # one injector per service: the scheduler consults it per
         # (wave, attempt), and the index loader lets it mangle on-disk
         # checkpoint payloads before the first read (crash-injection).
@@ -318,12 +448,41 @@ class FrogWildService:
                 f"{type(graph_or_path).__name__}")
         return cls(graph, config, mesh=mesh, index=index)
 
+    @property
+    def closed(self) -> bool:
+        """True once :meth:`close` ran; a closed service refuses new work."""
+        return self._closed
+
     def close(self) -> None:
-        """Drops the scheduler / index / graph caches (idempotent)."""
+        """Tears the service down — idempotent and safe under pool teardown.
+
+        Replicas in a :class:`~repro.gateway.ReplicaPool` share the graph
+        and walk-index arrays but each own their scheduler, so close only
+        touches per-service state: queued and in-flight queries are
+        cancelled (their :class:`QueryHandle`\\ s report ``cancelled``
+        afterwards, never an exception), the scheduler / index / graph
+        caches are dropped, and every later call — including another
+        ``close()`` — is a no-op. Submitting new work on a closed service
+        raises ``RuntimeError``.
+        """
+        if self._closed:
+            return
+        sched = self._scheduler
+        if sched is not None:
+            for rid in ([e.req.rid for e in sched.queue]
+                        + [a.req.rid for a in sched.active.values()]):
+                sched.cancel(rid)
         self._scheduler = None
         self._index = None
         self._dg = None
         self._dg_key = None
+        self._closed = True
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError(
+                "FrogWildService is closed — open a new service (or a new "
+                "gateway replica) to submit more work")
 
     def __enter__(self) -> "FrogWildService":
         return self
@@ -344,6 +503,7 @@ class FrogWildService:
         The slab is served sharded (never reassembled) whenever
         ``runtime.num_shards > 1``.
         """
+        self._check_open()
         if self._index is None:
             self._index = self._load_or_build_index()
         S = self.config.runtime.num_shards
@@ -422,6 +582,7 @@ class FrogWildService:
         EngineResult`), else the single-device walker oracle (returns
         :class:`~repro.core.frogwild.FrogWildResult`).
         """
+        self._check_open()
         rc = config if config is not None else self.config
         if epsilon is not None:
             plan = plan_query(k, epsilon, delta, p_T=rc.p_T,
@@ -456,6 +617,7 @@ class FrogWildService:
     @property
     def scheduler(self) -> QueryScheduler:
         """The (lazily built) continuous-batching scheduler."""
+        self._check_open()
         if self._scheduler is None:
             index = self.ensure_index()
             scfg = self.config.serving
@@ -485,6 +647,15 @@ class FrogWildService:
         if self._scheduler is None:
             return frozenset()
         return frozenset(self._scheduler.lost_shards)
+
+    def serving_stats(self) -> Optional[SchedulerStats]:
+        """The scheduler's admission-accounting snapshot — ``None`` until
+        the first query forces the scheduler into existence (a replica
+        that has never served is, by definition, unloaded). The gateway's
+        replica router keys on ``backlog_walks``."""
+        if self._closed or self._scheduler is None:
+            return None
+        return self._scheduler.stats()
 
     @property
     def fault_log(self) -> list:

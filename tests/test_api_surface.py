@@ -11,12 +11,14 @@ import pytest
 
 import repro
 import repro.configs
+import repro.gateway
 import repro.query
 import repro.service
 
 SURFACE = {
     repro: [
         "FrogWildService",
+        "Gateway",
         "KernelConfig",
         "QueryHandle",
         "RuntimeConfig",
@@ -25,6 +27,7 @@ SURFACE = {
     ],
     repro.service: [
         "FrogWildService",
+        "JoinedQueryHandle",
         "KernelConfig",
         "QueryHandle",
         "QueryPartial",
@@ -34,6 +37,17 @@ SURFACE = {
         "batch_pagerank",
         "build_index",
     ],
+    repro.gateway: [
+        "CacheEntry",
+        "Certificate",
+        "Gateway",
+        "GatewayHTTPServer",
+        "GatewayHandle",
+        "GatewayMetrics",
+        "ReplicaPool",
+        "ResultCache",
+        "serve_http",
+    ],
     repro.query: [
         "AdmissionDecision",
         "QueryPartial",
@@ -41,6 +55,8 @@ SURFACE = {
         "QueryRequest",
         "QueryResult",
         "QueryScheduler",
+        "RejectReason",
+        "SchedulerStats",
         "ShardedWalkIndex",
         "WalkIndex",
         "WalkIndexConfig",

@@ -1,0 +1,340 @@
+"""Serving-gateway contract tests (PR 7).
+
+Four claims are enforced here:
+
+* **Dominance**: a cached answer certified at (ε′, δ′) serves a request
+  for (ε, δ) iff ε′ ≤ ε and δ′ ≤ δ — dominated repeats come back
+  byte-identical with zero new walks; near-misses (ε < ε′) go live;
+  degraded answers are never cached; bumping the graph epoch invalidates.
+
+* **In-flight dedup**: a duplicate of a live query joins its handle
+  instead of spawning walks; with an identical target the joined result
+  is the parent's ``QueryResult`` object verbatim.
+
+* **Replica economics**: N replicas share ONE walk-index slab (object
+  identity), the router lands new work on the lowest EDF-charged queue,
+  and a cold gateway replica answers byte-identically to a cold
+  standalone service under the same config.
+
+* **Lifecycle + structured rejection**: ``close()`` is idempotent and
+  safe with handles in flight; ``AdmissionDecision.reason_code``
+  distinguishes infeasible-SLO / capacity / shard-loss refusals.
+"""
+import json
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import (FrogWildService, Gateway, RuntimeConfig, ServingConfig,
+                   ShardConfig)
+from repro.distributed.faults import FaultPlan
+from repro.gateway import Certificate, ReplicaPool, ResultCache, serve_http
+from repro.graph import chung_lu_powerlaw
+from repro.query import (QueryRequest, QueryResult, RejectReason,
+                         SchedulerStats)
+
+
+# ε=0.4 plans are feasible at max_steps=32 (certificate ≈ 0.392 ≤ 0.4);
+# tighter requests are honestly clamped wider — used for near-miss tests.
+EPS_OK = 0.4
+
+
+def _graph(n=256, seed=2):
+    return chung_lu_powerlaw(n=n, avg_out_deg=6, seed=seed)
+
+
+def _rc(num_shards=1, seed=11, **serving_kw):
+    serving = dict(segments_per_vertex=12, segment_len=3, build_shards=2,
+                   max_walks=512, max_queries=3, max_steps=32)
+    serving.update(serving_kw)
+    return RuntimeConfig(
+        runtime=ShardConfig(num_shards=num_shards, seed=seed),
+        serving=ServingConfig(**serving))
+
+
+@pytest.fixture(scope="module")
+def gw():
+    with Gateway.open(_graph(), _rc(), replicas=2) as g:
+        yield g
+
+
+# --- the cache: dominance is the whole contract ------------------------------
+
+
+def test_certificate_dominance_rule():
+    c = Certificate(epsilon=0.3, delta=0.1)
+    assert c.dominates(0.3, 0.1)            # equality is dominance
+    assert c.dominates(0.5, 0.2)
+    assert not c.dominates(0.2, 0.1)        # tighter ε refused
+    assert not c.dominates(0.5, 0.05)       # tighter δ refused
+
+
+def test_cache_keeps_a_pareto_frontier_per_key():
+    cache = ResultCache()
+    key = ResultCache.key("topk", 8, 0, 0)
+
+    def res(eps):
+        return QueryResult(rid=0, kind="topk",
+                           vertices=np.arange(8), scores=np.ones(8),
+                           num_walks=100, num_steps=8, waves=1,
+                           latency_s=0.1, epsilon_bound=eps)
+
+    assert cache.insert(key, res(0.3), delta=0.10)
+    assert cache.insert(key, res(0.2), delta=0.20)   # incomparable: kept
+    assert cache.lookup(key, 0.3, 0.1) is not None
+    assert cache.lookup(key, 0.2, 0.2) is not None
+    assert cache.lookup(key, 0.2, 0.1) is None       # dominated by neither
+    # a certificate dominated by a stored one is refused; a dominating one
+    # prunes what it obsoletes
+    assert not cache.insert(key, res(0.35), delta=0.15)
+    assert cache.insert(key, res(0.2), delta=0.10)
+    assert len(cache._entries[key]) == 1
+
+
+def test_degraded_and_uncertified_results_never_cached():
+    cache = ResultCache()
+    key = ResultCache.key("topk", 8, 0, 0)
+    bad = QueryResult(rid=0, kind="topk", vertices=np.arange(8),
+                      scores=np.ones(8), num_walks=50, num_steps=8,
+                      waves=1, latency_s=0.1, epsilon_bound=0.3,
+                      degraded=True)
+    assert not cache.insert(key, bad, delta=0.1)
+    no_cert = QueryResult(rid=1, kind="topk", vertices=np.arange(8),
+                          scores=np.ones(8), num_walks=50, num_steps=8,
+                          waves=1, latency_s=0.1, epsilon_bound=0.0)
+    assert not cache.insert(key, no_cert, delta=0.1)
+    assert cache.rejected_inserts == 2 and len(cache) == 0
+
+
+def test_ppr_sources_split_keys_but_global_kinds_ignore_source():
+    assert ResultCache.key("ppr", 8, 3, 0) != ResultCache.key("ppr", 8, 4, 0)
+    assert ResultCache.key("topk", 8, 3, 0) == ResultCache.key("topk", 8, 4, 0)
+
+
+# --- the gateway: hit / near-miss / join / epoch -----------------------------
+
+
+def test_dominated_repeat_hits_with_zero_new_walks(gw):
+    r1 = gw.topk(k=8, epsilon=EPS_OK, delta=0.1).result()
+    waves = gw.pool.total_waves_run()
+    # identical repeat and a strictly weaker request: both cache hits
+    h2 = gw.topk(k=8, epsilon=EPS_OK, delta=0.1)
+    h3 = gw.topk(k=8, epsilon=0.6, delta=0.2)
+    assert h2.source == "cache" and h3.source == "cache"
+    assert h2.result() is r1 and h3.result() is r1     # byte-identical
+    assert gw.pool.total_waves_run() == waves          # zero new walks
+
+
+def test_near_miss_tighter_than_certificate_goes_live(gw):
+    r1 = gw.topk(k=10, epsilon=EPS_OK, delta=0.1).result()
+    h = gw.topk(k=10, epsilon=r1.epsilon_bound * 0.9, delta=0.1)
+    assert h.source == "live"
+    h.result()
+    # ... and a tighter δ alone also misses
+    h2 = gw.topk(k=10, epsilon=EPS_OK, delta=0.05)
+    assert h2.source == "live"
+    h2.result()
+
+
+def test_inflight_duplicate_joins_and_identical_target_is_verbatim(gw):
+    h1 = gw.ppr(7, k=6, epsilon=0.34, delta=0.1)     # uncacheable: clamped
+    assert h1.source == "live"
+    h2 = gw.ppr(7, k=6, epsilon=0.5, delta=0.1)      # weaker: joins
+    h3 = gw.ppr(7, k=6, epsilon=0.34, delta=0.1)     # identical: joins
+    assert h2.source == "joined" and h3.source == "joined"
+    waves = gw.pool.total_waves_run()
+    r1 = h1.result()
+    assert h3.result() is r1                          # verbatim object
+    r2 = h2.result()                                  # certified no later
+    assert r2.epsilon_bound <= 0.5
+    # the joins rode h1's walks — finishing h2/h3 ran nothing new
+    assert gw.pool.total_waves_run() == waves or h2.done()
+
+
+def test_epoch_bump_invalidates_cached_certificates(gw):
+    r1 = gw.topk(k=12, epsilon=EPS_OK, delta=0.1).result()
+    assert gw.topk(k=12, epsilon=EPS_OK, delta=0.1).source == "cache"
+    gw.bump_epoch()
+    h = gw.topk(k=12, epsilon=EPS_OK, delta=0.1)
+    assert h.source == "live"                         # stale cert orphaned
+    assert h.result() is not r1
+
+
+def test_batch_pagerank_is_cached_under_its_plan_certificate(gw):
+    p1 = gw.pagerank(epsilon=0.5, delta=0.1, k=6)
+    assert gw.pagerank(epsilon=0.5, delta=0.1, k=6) is p1
+    assert gw.pagerank(epsilon=0.45, delta=0.1, k=6) is not p1
+
+
+def test_metrics_snapshot_has_the_serving_numbers(gw):
+    s = gw.stats()
+    for k in ("requests", "completed", "cache_hits", "joins", "hit_rate",
+              "join_rate", "qps", "p50_ms", "p99_ms", "rejects_by_reason",
+              "cache", "replicas", "epoch"):
+        assert k in s, k
+    assert s["cache_hits"] >= 2 and s["joins"] >= 2
+    assert len(s["replicas"]) == 2
+    for r in s["replicas"]:
+        assert r["lost_shards"] == []
+        assert 0.0 <= r["wave_occupancy"] <= 1.0
+    assert isinstance(gw.pool.replicas[0].serving_stats(), SchedulerStats)
+
+
+# --- replica economics -------------------------------------------------------
+
+
+def test_pool_shares_one_walk_index_slab():
+    with ReplicaPool(_graph(), _rc(), num_replicas=3) as pool:
+        idx = pool.replicas[0].ensure_index()
+        for r in pool.replicas[1:]:
+            assert r.ensure_index() is idx            # no N-fold slabs
+        assert pool.replicas[0].graph is pool.replicas[1].graph
+
+
+def test_router_prefers_the_lowest_charged_backlog():
+    with Gateway.open(_graph(), _rc(), replicas=2, cache=False) as gw2:
+        h1 = gw2.topk(k=8, epsilon=EPS_OK, delta=0.1)
+        assert h1.replica == 0
+        # replica 0 now carries h1's backlog → the next request (a
+        # different key, so dedup can't capture it) routes away
+        h2 = gw2.topk(k=9, epsilon=0.5, delta=0.1)
+        assert h2.source == "live" and h2.replica == 1
+        st = gw2.pool.replicas[0].serving_stats()
+        assert st.backlog_walks > 0
+        h1.result(), h2.result()
+        # drained: both replicas report empty queues again
+        assert all(r.serving_stats().backlog_walks == 0
+                   for r in gw2.pool.replicas)
+
+
+def test_cold_gateway_replica_matches_cold_standalone_service():
+    """Byte-identity across the tier: the first query through a fresh
+    gateway (replica 0) equals the same query on a fresh direct service
+    under the same config — the gateway adds routing, not noise."""
+    g = _graph()
+    direct = FrogWildService.open(g, _rc()).topk(
+        k=8, epsilon=EPS_OK, delta=0.1).result()
+    with Gateway.open(g, _rc(), replicas=2) as gw2:
+        viagw = gw2.topk(k=8, epsilon=EPS_OK, delta=0.1).result()
+    assert (np.asarray(viagw.vertices) == np.asarray(direct.vertices)).all()
+    assert (np.asarray(viagw.scores) == np.asarray(direct.scores)).all()
+    assert viagw.epsilon_bound == direct.epsilon_bound
+    assert viagw.num_walks == direct.num_walks
+
+
+# --- degraded answers stay out of the cache ----------------------------------
+
+
+def test_degraded_results_are_served_but_never_cached():
+    cfg = RuntimeConfig(
+        runtime=ShardConfig(num_shards=4, seed=3),
+        serving=ServingConfig(segments_per_vertex=6, segment_len=2,
+                              build_shards=4, max_walks=512, max_queries=4,
+                              max_steps=12),
+        faults=FaultPlan(shard_losses=((1, 0),)))
+    with Gateway.open(_graph(), cfg, replicas=1) as gw2:
+        h = gw2.topk(k=8, epsilon=0.6, delta=0.1)
+        r = h.result()
+        assert r.degraded
+        assert gw2.cache.stats()["rejected_inserts"] >= 1
+        assert len(gw2.cache) == 0
+        # the repeat goes live — the outage is not pinned into the cache
+        assert gw2.topk(k=8, epsilon=0.6, delta=0.1).source == "live"
+
+
+# --- lifecycle: close() is idempotent and pool-safe --------------------------
+
+
+def test_service_close_is_idempotent_with_inflight_handles():
+    svc = FrogWildService.open(_graph(), _rc())
+    h = svc.topk(k=8, epsilon=EPS_OK, delta=0.1)
+    h.poll()                                  # mid-flight
+    svc.close()
+    svc.close()                               # double-close: no raise
+    assert svc.closed
+    assert h.status() == "cancelled" and h.done()
+    assert not h.cancel()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.topk(k=4)
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.pagerank(epsilon=0.5)
+    assert svc.serving_stats() is None
+
+
+def test_gateway_close_is_idempotent_and_closes_every_replica():
+    gw2 = Gateway.open(_graph(), _rc(), replicas=2)
+    h = gw2.topk(k=8, epsilon=EPS_OK, delta=0.1)
+    h.poll()
+    gw2.close()
+    gw2.close()
+    assert gw2.closed and gw2.pool.closed
+    assert all(r.closed for r in gw2.pool.replicas)
+    with pytest.raises(RuntimeError, match="closed"):
+        gw2.topk(k=4)
+
+
+# --- structured rejection reasons --------------------------------------------
+
+
+def _sched(**kw):
+    from repro.query import (QueryScheduler, WalkIndexConfig,
+                             shard_walk_index)
+    from repro.query.index import _build_walk_index
+    g = _graph()
+    idx = _build_walk_index(g, WalkIndexConfig(
+        segments_per_vertex=6, segment_len=2, num_shards=4, seed=2))
+    kw.setdefault("max_walks", 512)
+    kw.setdefault("max_queries", 2)
+    kw.setdefault("max_steps", 12)
+    return QueryScheduler(g, shard_walk_index(idx, 4), seed=7, **kw)
+
+
+def test_reject_reason_codes_distinguish_the_three_refusals():
+    sched = _sched(wave_time_estimate_s=1.0, max_queries=1)
+    ok = sched._submit(QueryRequest(rid=0, num_walks=512))
+    assert ok.admitted and ok.reason_code == RejectReason.NONE
+    # (a) SLO shorter than one wave
+    d = sched._submit(QueryRequest(rid=1, num_walks=64, slo_s=0.5))
+    assert not d.admitted and d.reason_code == RejectReason.INFEASIBLE_SLO
+    # (b) feasible SLO, demand too large for the wave budget
+    d = sched._submit(QueryRequest(rid=2, num_walks=4096, slo_s=3.0))
+    assert not d.admitted and d.reason_code == RejectReason.CAPACITY
+    # (c) shard loss re-admission: queued SLO work rejected by eviction
+    sched._admit()
+    assert sched._submit(QueryRequest(rid=3, num_walks=1024,
+                                      slo_s=4.0)).admitted
+    for s in (0, 1, 3):
+        sched._evict_shard(s, wave_no=0)
+    d = next(d for d in sched.rejected if d.rid == 3)
+    assert d.reason_code == RejectReason.SHARD_LOSS
+
+
+# --- HTTP front-end ----------------------------------------------------------
+
+
+def _get(url):
+    with urllib.request.urlopen(url) as resp:
+        return resp.status, json.loads(resp.read())
+
+
+def test_http_front_end_serves_queries_health_and_metrics(gw):
+    with serve_http(gw) as srv:
+        status, body = _get(srv.url + "/healthz")
+        assert status == 200 and body["healthy"]
+        status, body = _get(srv.url + f"/topk?k=4&epsilon={EPS_OK}")
+        assert status == 200 and len(body["vertices"]) == 4
+        assert body["epsilon_bound"] <= EPS_OK
+        status, rep = _get(srv.url + f"/topk?k=4&epsilon={EPS_OK}")
+        assert rep["source"] == "cache" and rep["vertices"] == body["vertices"]
+        status, body = _get(srv.url + "/ppr?source=5&k=3&epsilon=0.6")
+        assert status == 200 and body["kind"] == "ppr"
+        status, body = _get(srv.url + "/metrics")
+        assert body["requests"] >= 3 and body["cache_hits"] >= 1
+        # bad params → 400; unknown route → 404 (stdlib raises HTTPError)
+        with pytest.raises(urllib.error.HTTPError) as e:
+            _get(srv.url + "/ppr?k=3")                # missing source
+        assert e.value.code == 400
+        with pytest.raises(urllib.error.HTTPError) as e:
+            _get(srv.url + "/nope")
+        assert e.value.code == 404
