@@ -26,12 +26,19 @@ and the same per-query walk budgets:
   (degraded serving: renormalized tallies, Theorem-1-widened
   ``epsilon_bound``).
 
+* **gateway faulted** — the gateway-tier fault-tolerance arm (PR 8): a
+  seeded replica crash mid-query, measuring the survived query's
+  failover latency, plus the shed rate when the submit stream overruns
+  the backpressure threshold (structured 503s, not a lock convoy).
+
 Emits ``BENCH_query.json`` with queries/sec and p50/p99 latency for all
 paths, plus the index build cost. ``--smoke`` instead runs a tiny
-gathered-vs-sharded-vs-handle dispatch equivalence sweep plus a
-fault-injection sweep (zero-fault byte-identity + seeded shard-loss
-degradation; no timing, no JSON rewrite; wired into
-``scripts/ci_tier1.sh --bench-smoke``).
+gathered-vs-sharded-vs-handle dispatch equivalence sweep plus two
+fault-injection sweeps — scheduler-level (zero-fault byte-identity +
+seeded shard-loss degradation) and gateway-level (crash mid-query →
+failover byte-identity + quarantine + restart over the same slab; stall
+→ quarantine + reroute; overload → shed not block) — no timing, no JSON
+rewrite; wired into ``scripts/ci_tier1.sh --bench-smoke``.
 """
 from __future__ import annotations
 
@@ -50,6 +57,7 @@ from repro.config import FrogWildConfig, KernelConfig
 from repro.core import theory
 from repro.core.frogwild import _frogwild_walks
 from repro.distributed.faults import FaultPlan
+from repro.gateway import GatewayOverloadError
 from repro.graph import chung_lu_powerlaw
 from repro.kernels import ops
 from repro.query import plan_query
@@ -199,6 +207,54 @@ def smoke():
         assert live.source == "live" and dup.source == "joined"
         assert dup.result() is live.result()
     print("smoke gateway in-flight join OK (verbatim parent result)")
+
+    # gateway fault sweep (PR 8) — the tier-1 acceptance gates.
+    # 1. seeded replica crash mid-query: the query fails over and the
+    #    survived answer is byte-identical to the fault-free run (`want`,
+    #    the direct-service reference the zero-fault gateway matched
+    #    above); the sick replica is quarantined, then restarted over the
+    #    SAME shared slab (object identity, zero index rebuild).
+    crash_cfg = dataclasses.replace(
+        gcfg, faults=FaultPlan(seed=3, replica_crashes=((0, 0),)))
+    with Gateway.open(g, crash_cfg, replicas=2, cache=False) as gwf:
+        h = gwf.topk(k=K, epsilon=0.4, delta=DELTA)
+        assert h.replica == 0                    # routed to the doomed one
+        r = h.result()
+        assert h.replica == 1 and gwf.metrics.failovers == 1
+        assert (np.asarray(r.vertices) == np.asarray(want.vertices)).all()
+        assert (np.asarray(r.scores) == np.asarray(want.scores)).all()
+        assert r.epsilon_bound == want.epsilon_bound
+        assert gwf.pool.breaker_state(0) == "open"
+        assert gwf.pool.routable() == [1]        # quarantined out of route
+        fresh = gwf.pool.restart_replica(0)
+        assert fresh.ensure_index() is gwf.pool.index
+    print("smoke gateway crash-failover OK (byte-identical, quarantine + "
+          "restart over the shared slab)")
+
+    # 2. stall past the heartbeat deadline: quarantine + reroute, and the
+    #    rerouted answer is still the fault-free answer.
+    stall_cfg = dataclasses.replace(
+        gcfg, faults=FaultPlan(seed=3, replica_stalls=((0, 0, 0.6),)))
+    with Gateway.open(g, stall_cfg, replicas=2, cache=False,
+                      heartbeat_timeout_s=0.25) as gws:
+        h = gws.topk(k=K, epsilon=0.4, delta=DELTA)
+        r = h.result()
+        assert h.replica == 1 and gws.pool.breaker_state(0) == "open"
+        assert (np.asarray(r.vertices) == np.asarray(want.vertices)).all()
+    print("smoke gateway stall OK (quarantine + reroute)")
+
+    # 3. overload: the submit is shed with a structured Retry-After —
+    #    never a blocked caller.
+    with Gateway.open(g, gcfg, replicas=2, cache=False,
+                      shed_backlog_walks=1) as gwo:
+        h = gwo.topk(k=K, epsilon=0.4, delta=DELTA)
+        try:
+            gwo.ppr(3, k=K, epsilon=0.4, delta=DELTA)
+            raise AssertionError("overloaded submit was not shed")
+        except GatewayOverloadError as e:
+            assert e.retry_after_s > 0 and gwo.metrics.sheds == 1
+        h.result()
+    print("smoke gateway overload OK (shed with Retry-After, not blocked)")
 
 
 def _restart_latencies(g, plan, p_T=0.15):
@@ -387,6 +443,41 @@ def main():
                  f"bound_widening={bound_widening:.2f}x "
                  f"(1 of {NUM_SHARDS} shards evicted)"))
 
+    # gateway fault tolerance (PR 8): failover latency and shed rate.
+    # One seeded crash of replica 0 at its first pool drive — the query
+    # migrates to replica 1 and replays from wave 0; the row's headline
+    # is the end-to-end latency of that survived query.
+    gw_f = Gateway.open(
+        g, RuntimeConfig(serving=serving,
+                         faults=FaultPlan(seed=7, replica_crashes=((0, 0),))),
+        replicas=2, cache=False)
+    t0 = time.perf_counter()
+    h_f = gw_f.topk(k=K, epsilon=EPSILON, delta=DELTA)
+    h_f.result()
+    failover_latency_s = time.perf_counter() - t0
+    n_failovers = gw_f.metrics.failovers
+    assert h_f.failovers == 1 and n_failovers == 1
+    gw_f.close()
+
+    # overload: distinct PPR keys (duplicates would join, and joins are
+    # free so they are never shed) against a one-plan backlog budget —
+    # everything past the first admitted query is shed with Retry-After.
+    gw_s = Gateway.open(g, RuntimeConfig(serving=serving), replicas=2,
+                        cache=False, shed_backlog_walks=plan.num_walks)
+    n_shed = 0
+    for i in range(NUM_QUERIES):
+        try:
+            gw_s.ppr(17 * i + 1, k=K, epsilon=EPSILON, delta=DELTA)
+        except GatewayOverloadError:
+            n_shed += 1
+    shed_rate = n_shed / NUM_QUERIES
+    gw_s.drain()                                     # finish the admitted
+    rows.append(("query/query_gateway_faulted", failover_latency_s * 1e6,
+                 f"failover_latency_ms={failover_latency_s * 1e3:.1f} "
+                 f"failovers={n_failovers} shed_rate={shed_rate:.2f} "
+                 f"(replica 0 crashed at wave 0, 2 replicas, "
+                 f"backlog_budget={plan.num_walks} walks)"))
+
     t0 = time.perf_counter()
     lat_rst = _restart_latencies(g, plan)
     dt_rst = time.perf_counter() - t0
@@ -430,6 +521,10 @@ def main():
         "faulted_degraded_queries": int(n_deg),
         "faulted_walks_lost_frac": round(float(lost_frac), 4),
         "faulted_bound_widening": round(float(bound_widening), 3),
+        "gateway_failover_latency_ms": round(failover_latency_s * 1e3, 2),
+        "gateway_failovers": int(n_failovers),
+        "gateway_shed_rate": round(shed_rate, 4),
+        "gateway_sheds": int(n_shed),
     })
 
 

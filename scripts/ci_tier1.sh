@@ -11,10 +11,15 @@
 # --smoke: gathered vs sharded-slab vs handle-driven serving, the
 # fault-injection sweep — supervised zero-fault byte-identity and seeded
 # shard-loss degradation with the Theorem-1-widened bound — and the
-# 2-replica gateway sweep: cold-miss byte-equivalence to a direct service
-# plus dominated cache hits with zero new walks; tiny sizes, no BENCH json
-# rewrite) so a broken dispatch, surface, cache, or degradation change
-# fails tier-1 instead of only bench runs.
+# 2-replica gateway sweeps: cold-miss byte-equivalence to a direct
+# service plus dominated cache hits with zero new walks, and the seeded
+# gateway fault sweep — replica crash mid-query -> failover answer
+# byte-identical to the fault-free run with the sick replica
+# quarantined then restarted over the same shared slab, stall ->
+# quarantine + reroute, overload -> structured shed with Retry-After;
+# tiny sizes, no BENCH json rewrite) so a broken dispatch, surface,
+# cache, degradation, or failover change fails tier-1 instead of only
+# bench runs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

@@ -21,6 +21,13 @@ testable in-process, deterministically:
   degraded waves), :class:`WaveTimeout` (the wave exceeded its deadline —
   result discarded, retried), :class:`WaveFailedError` (retries exhausted
   and no failover path left — the only way a wave surfaces an error).
+* The **replica-level** taxonomy the gateway tier speaks (PR 8):
+  :class:`ReplicaCrashed` / :class:`ReplicaStalled`, raised at the pool
+  boundary by :meth:`~repro.gateway.pool.ReplicaPool.step_replica` when a
+  scheduled ``replica_crash`` fires or a wave misses the heartbeat
+  deadline. The pool quarantines (breaker opens), restarts crashed
+  replicas over the same shared slab, and the gateway fails in-flight
+  queries over to a healthy replica.
 
 The module is stdlib-only so the config layer can reference
 :class:`FaultPlan` without pulling in jax.
@@ -59,6 +66,35 @@ class WaveFailedError(FaultError):
     """Retries exhausted and no failover path left. The scheduler's state
     is untouched by the failed wave (no tallies landed, no budget spent),
     so the caller can evict capacity / re-admit and drive again."""
+
+
+class ReplicaFault(FaultError):
+    """A whole serving replica misbehaved (PR 8 — the pool boundary).
+
+    Raised by :meth:`~repro.gateway.pool.ReplicaPool.step_replica`, never
+    by the scheduler: shard-level faults degrade *within* a replica, while
+    a replica fault takes the replica out of routing (breaker opens) and
+    moves its in-flight queries to a healthy replica (gateway failover).
+    """
+
+    def __init__(self, message: str, replica: int):
+        super().__init__(message)
+        self.replica = replica
+
+
+class ReplicaCrashed(ReplicaFault):
+    """The replica process died: its service is closed (in-flight handles
+    report ``cancelled``), the pool quarantines the slot and restarts a
+    fresh :class:`~repro.service.FrogWildService` over the *same* shared
+    slab — zero index rebuild, object identity preserved."""
+
+
+class ReplicaStalled(ReplicaFault):
+    """The replica missed its heartbeat deadline (wave wall-time exceeded
+    ``heartbeat_timeout_s``): progress must never be hostage to one slow
+    worker, so the pool quarantines it and the gateway reroutes. The
+    replica itself stays open — after the breaker cooldown it is probed
+    half-open and returns to rotation on the first clean wave."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +138,26 @@ class FaultPlan:
       corrupt_ckpt_shards:  shard ids whose on-disk checkpoint payload
                         :meth:`FaultInjector.mangle_checkpoints` bit-flips.
       truncate_ckpt_shards: shard ids whose payload it truncates.
+
+    Replica-level faults (PR 8) are injected at the **pool boundary** —
+    :meth:`~repro.gateway.pool.ReplicaPool.step_replica` consults them
+    before dispatching a wave to the replica's scheduler. Their wave
+    indices count the *pool's* drives of that replica, independently of
+    the scheduler-level schedule above:
+
+      replica_crashes:  ``((replica, wave), ...)`` — the replica dies at
+                        its ``wave``-th pool drive: its service closes,
+                        :class:`ReplicaCrashed` surfaces, the pool
+                        quarantines + restarts it over the same slab.
+      replica_stalls:   ``((replica, wave, seconds), ...)`` — one
+                        injected stall of ``seconds`` before that drive's
+                        wave body; a stall past the pool's
+                        ``heartbeat_timeout_s`` is detected as
+                        :class:`ReplicaStalled` (quarantine + reroute).
+      replica_slow:     ``((replica, seconds), ...)`` — persistent
+                        per-wave extra latency (a degraded-but-alive
+                        straggler): lowers the replica's health score and
+                        trips the gateway's hedging threshold.
     """
 
     seed: int = 0
@@ -112,6 +168,9 @@ class FaultPlan:
     p_transient: float = 0.0
     corrupt_ckpt_shards: Tuple[int, ...] = ()
     truncate_ckpt_shards: Tuple[int, ...] = ()
+    replica_crashes: Tuple[Tuple[int, int], ...] = ()
+    replica_stalls: Tuple[Tuple[int, int, float], ...] = ()
+    replica_slow: Tuple[Tuple[int, float], ...] = ()
 
     @property
     def empty(self) -> bool:
@@ -121,7 +180,9 @@ class FaultPlan:
                     or self.stalls or self.wave_timeouts
                     or self.p_transient > 0.0
                     or self.corrupt_ckpt_shards
-                    or self.truncate_ckpt_shards)
+                    or self.truncate_ckpt_shards
+                    or self.replica_crashes or self.replica_stalls
+                    or self.replica_slow)
 
 
 class FaultInjector:
@@ -141,6 +202,13 @@ class FaultInjector:
         self._transient = {int(w): int(c) for w, c in plan.transient_faults}
         self._timeouts = {int(w): int(c) for w, c in plan.wave_timeouts}
         self._stalls = {int(w): float(s) for w, s in plan.stalls}
+        # replica-level schedules, keyed (replica, pool-wave) — consumed by
+        # the ReplicaPool supervisor, invisible to scheduler-level hooks.
+        self._replica_crashes = {(int(r), int(w))
+                                 for r, w in plan.replica_crashes}
+        self._replica_stalls = {(int(r), int(w)): float(s)
+                                for r, w, s in plan.replica_stalls}
+        self._replica_slow = {int(r): float(s) for r, s in plan.replica_slow}
         self.fired: List[FaultEvent] = []
 
     # --- wave-supervisor hooks -------------------------------------------
@@ -179,6 +247,34 @@ class FaultInjector:
                                              detail="p_transient"))
                 return "transient"
         return None
+
+    # --- pool-boundary (replica) hooks ------------------------------------
+
+    def replica_crash_at(self, replica: int, wave: int) -> bool:
+        """True when this (replica, pool-wave) is scheduled to crash
+        (consumed once — a restarted replica does not re-crash)."""
+        if (replica, wave) in self._replica_crashes:
+            self._replica_crashes.discard((replica, wave))
+            self.fired.append(FaultEvent("replica_crash", wave,
+                                         detail=f"replica={replica}"))
+            return True
+        return False
+
+    def replica_stall_s(self, replica: int, wave: int) -> float:
+        """Injected stall (seconds) before this replica's pool drive;
+        fires once."""
+        s = self._replica_stalls.pop((replica, wave), 0.0)
+        if s:
+            self.fired.append(FaultEvent(
+                "replica_stall", wave,
+                detail=f"replica={replica} {s:.3g}s"))
+        return s
+
+    def replica_slow_s(self, replica: int) -> float:
+        """Persistent per-wave extra latency for a straggler replica
+        (0.0 for a healthy one). Not consumable — a slow replica stays
+        slow until its plan says otherwise."""
+        return self._replica_slow.get(replica, 0.0)
 
     # --- checkpoint-payload faults ---------------------------------------
 
@@ -233,6 +329,9 @@ __all__ = [
     "ShardFault",
     "WaveTimeout",
     "WaveFailedError",
+    "ReplicaFault",
+    "ReplicaCrashed",
+    "ReplicaStalled",
     "FaultEvent",
     "FaultPlan",
     "FaultInjector",

@@ -25,6 +25,40 @@ Three layers enforce it:
   (:func:`~repro.gateway.http.serve_http`: ``/pagerank`` ``/topk``
   ``/ppr`` ``/healthz`` ``/metrics``).
 
+The gateway-tier degradation contract (PR 8)
+--------------------------------------------
+
+The pool is *supervised*, and the tier degrades in defined steps instead
+of hanging or lying:
+
+* **Supervision.** All wave driving goes through the pool's
+  ``step_replica``: per-replica circuit breakers (``closed`` → ``open``
+  on crash / missed heartbeat / repeated wave failures → ``half_open``
+  after the cooldown → ``closed`` on a clean probe wave) quarantine sick
+  replicas out of ``route()``; health scores in [0, 1] fold consecutive
+  failures and a wave-time EMA straggler term.
+* **Failover byte-identity.** A query whose replica dies mid-flight is
+  *replayed* on a healthy replica with the same plan parameters. Every
+  replica is seeded identically and a fresh replica's key stream starts
+  at wave 0, so failover onto a cold (or freshly restarted) replica
+  returns an answer **byte-identical** to the fault-free run. Joined
+  handles migrate with their parent, or settle with a classified
+  ``WaveFailedError`` — never a hang.
+* **Restart.** A crashed replica is re-opened over the *same* shared
+  slab (object identity asserted, zero index rebuild) and re-enters
+  rotation through the half-open probe.
+* **Shedding.** Overload (backlog past the shed threshold, all breakers
+  open, or draining) raises :class:`~repro.gateway.gateway.
+  GatewayOverloadError` carrying ``retry_after_s`` — HTTP 503 +
+  ``Retry-After`` — instead of queueing callers into a lock convoy.
+* **Drain.** ``Gateway.drain()`` stops admitting (new submits shed with
+  ``reason="draining"``), drives every in-flight handle to completion
+  through the supervised path, then closes the pool.
+* **Epoch safety.** A certificate earned under graph epoch *e* is
+  refused by the cache once the gateway moved to *e+1* (the
+  ``min_epoch`` guard) — a ``bump_epoch()`` racing an in-flight query
+  can never resurrect a stale answer.
+
 Quickstart::
 
     from repro.gateway import Gateway, serve_http
@@ -37,10 +71,11 @@ Quickstart::
         server.close()
 """
 from repro.gateway.cache import CacheEntry, Certificate, ResultCache
-from repro.gateway.gateway import Gateway, GatewayHandle
+from repro.gateway.gateway import (Gateway, GatewayHandle,
+                                   GatewayOverloadError)
 from repro.gateway.http import GatewayHTTPServer, serve_http
 from repro.gateway.metrics import GatewayMetrics
-from repro.gateway.pool import ReplicaPool
+from repro.gateway.pool import NoReplicaAvailable, ReplicaPool
 
 __all__ = [
     "CacheEntry",
@@ -49,6 +84,8 @@ __all__ = [
     "GatewayHTTPServer",
     "GatewayHandle",
     "GatewayMetrics",
+    "GatewayOverloadError",
+    "NoReplicaAvailable",
     "ReplicaPool",
     "ResultCache",
     "serve_http",

@@ -90,10 +90,23 @@ class ResultCache:
         return None
 
     def insert(self, key: CacheKey, result: QueryResult,
-               delta: float) -> bool:
+               delta: float, min_epoch: Optional[int] = None) -> bool:
         """Caches a certified answer under ``key``; returns False when the
-        answer is uncacheable (degraded, or no finite certificate) or an
-        already-cached certificate dominates it."""
+        answer is uncacheable (degraded, no finite certificate, or — with
+        ``min_epoch`` — certified under a graph epoch older than the
+        gateway's current one) or an already-cached certificate dominates
+        it.
+
+        ``min_epoch`` is the bump-epoch race guard: a query started on
+        epoch ``e`` whose certificate lands after the gateway moved to
+        ``e+1`` must never enter the cache (its key could collide with a
+        fresh epoch-``e`` lookup only through ``drop_epochs_before``
+        ordering bugs, and even inert stale entries burn capacity).
+        Refused stale inserts count in ``rejected_inserts``.
+        """
+        if min_epoch is not None and key[3] < min_epoch:
+            self.rejected_inserts += 1
+            return False
         if (result.degraded or result.epsilon_bound <= 0.0
                 or not math.isfinite(result.epsilon_bound)):
             self.rejected_inserts += 1

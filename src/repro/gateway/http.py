@@ -4,18 +4,31 @@ Gateway` — enough surface to curl the tier, not a web framework.
 Routes (all GET, all JSON):
 
 * ``/pagerank?epsilon=&delta=&k=``        — batch top-k of the full vector
-* ``/topk?k=&epsilon=&delta=&slo_s=``     — async global top-k, driven to
-  completion before responding (the HTTP surface is synchronous; the
-  async path is the Python API)
+* ``/topk?k=&epsilon=&delta=&slo_s=&timeout_s=`` — async global top-k,
+  driven to completion before responding (the HTTP surface is
+  synchronous; the async path is the Python API)
 * ``/ppr?source=&k=&epsilon=&delta=``     — personalized PageRank
-* ``/healthz``                            — 200 iff no replica lost a shard
+* ``/healthz``                            — 200 iff the tier is routable
 * ``/metrics``                            — :meth:`Gateway.stats` snapshot
 
-Admission rejections map to **429** with the structured ``reason_code``
-(``infeasible_slo`` | ``capacity`` | ``shard_loss``) in the body; bad
-parameters to **400**; unknown paths to **404**. The server is a
-``ThreadingHTTPServer``; the gateway itself is single-threaded host
-state, so one lock serializes query execution per request.
+Status mapping — every failure is structured, never a hang:
+
+* **429** — replica admission refused; body carries the scheduler's
+  ``reason_code`` (``infeasible_slo`` | ``capacity`` | ``shard_loss``).
+* **503 + Retry-After** — the gateway shed the request
+  (:class:`~repro.gateway.gateway.GatewayOverloadError`: breakers all
+  open, backlog past the shed threshold, or draining); ``reason_code``
+  names which.
+* **504** — the request's ``timeout_s`` deadline (default 30 s) expired
+  before the (ε, δ) certificate was earned; ``reason_code="deadline"``.
+* **400** bad parameters; **404** unknown path; **500** anything else,
+  surfaced with its exception type.
+
+Concurrency (PR 8): there is **no per-process query lock**. Submits are
+serialized by the gateway's own brief host-state lock, and wave driving
+is serialized per replica inside the supervised pool — so a stalled or
+crashed replica cannot block ``/healthz``, ``/metrics``, or queries
+routed to healthy replicas; its own requests fail over or return 504.
 """
 from __future__ import annotations
 
@@ -27,9 +40,13 @@ from urllib.parse import parse_qs, urlparse
 
 import numpy as np
 
-from repro.gateway.gateway import Gateway
+from repro.gateway.gateway import Gateway, GatewayOverloadError
 
 __all__ = ["GatewayHTTPServer", "serve_http"]
+
+# wall-time budget for driving one HTTP request to certification; callers
+# override per request with ?timeout_s=.
+_DEFAULT_TIMEOUT_S = 30.0
 
 
 def _result_payload(handle_or_result, source: str) -> dict:
@@ -49,16 +66,17 @@ def _result_payload(handle_or_result, source: str) -> dict:
 
 class _Handler(BaseHTTPRequestHandler):
     gateway: Gateway = None          # injected by GatewayHTTPServer
-    lock: threading.Lock = None
 
     def log_message(self, fmt, *args):   # noqa: D102 — silence stderr spam
         pass
 
-    def _send(self, code: int, payload: dict) -> None:
+    def _send(self, code: int, payload: dict, headers=()) -> None:
         body = json.dumps(payload).encode()
         self.send_response(code)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(body)))
+        for name, value in headers:
+            self.send_header(name, value)
         self.end_headers()
         self.wfile.write(body)
 
@@ -74,20 +92,30 @@ class _Handler(BaseHTTPRequestHandler):
         url = urlparse(self.path)
         qs = parse_qs(url.query)
         try:
-            with self.lock:
-                self._route(url.path, qs)
+            self._route(url.path, qs)
         except ValueError as e:
             self._send(400, {"error": str(e)})
+        except GatewayOverloadError as e:
+            # structured backpressure, not failure: the tier is telling
+            # the client when to come back.
+            self._send(503, {"error": str(e),
+                             "reason_code": e.reason,
+                             "retry_after_s": e.retry_after_s},
+                       headers=[("Retry-After",
+                                 str(max(1, int(round(e.retry_after_s)))))])
+        except TimeoutError as e:
+            self._send(504, {"error": str(e), "reason_code": "deadline"})
         except Exception as e:      # surfaced, not swallowed: curl sees it
             self._send(500, {"error": f"{type(e).__name__}: {e}"})
 
     def _route(self, path: str, qs) -> None:
         gw = self.gateway
-        if path == "/healthz":
-            ok = gw.healthy()
+        if path == "/healthz":       # lock-free: must answer even when a
+            ok = gw.healthy()        # replica is stalled mid-wave
             self._send(200 if ok else 503,
                        {"healthy": ok,
                         "replicas": len(gw.pool),
+                        "routable": gw.pool.routable(),
                         "lost_shards": sorted(
                             s for r in gw.pool.replicas
                             for s in r.lost_shards)})
@@ -106,6 +134,8 @@ class _Handler(BaseHTTPRequestHandler):
             return
         if path in ("/topk", "/ppr"):
             slo_s = self._param(qs, "slo_s", float, 0.0) or None
+            timeout_s = self._param(qs, "timeout_s", float,
+                                    _DEFAULT_TIMEOUT_S)
             if path == "/ppr":
                 source = self._param(qs, "source", int, None)
                 h = gw.ppr(source, k=k, epsilon=epsilon, delta=delta,
@@ -120,7 +150,8 @@ class _Handler(BaseHTTPRequestHandler):
                     "reason_code": d.reason_code.value,
                 })
                 return
-            self._send(200, _result_payload(h.result(), h.source))
+            self._send(200, _result_payload(h.result(timeout_s=timeout_s),
+                                            h.source))
             return
         self._send(404, {"error": f"no route {path!r}",
                          "routes": ["/pagerank", "/topk", "/ppr",
@@ -138,8 +169,7 @@ class GatewayHTTPServer:
     def __init__(self, gateway: Gateway, host: str = "127.0.0.1",
                  port: int = 0):
         self.gateway = gateway
-        handler = type("BoundHandler", (_Handler,),
-                       {"gateway": gateway, "lock": threading.Lock()})
+        handler = type("BoundHandler", (_Handler,), {"gateway": gateway})
         self._httpd = ThreadingHTTPServer((host, port), handler)
         self._thread: Optional[threading.Thread] = None
 

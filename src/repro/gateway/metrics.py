@@ -5,6 +5,16 @@ each replica scheduler's :class:`~repro.query.scheduler.SchedulerStats`.
 
 Everything is plain host state (no device work): ``snapshot()`` returns a
 JSON-ready dict and is what ``/metrics`` serves.
+
+Fault-tolerance counters (PR 8): ``failovers`` (queries migrated off a
+crashed/stalled replica and replayed elsewhere), ``hedges_fired`` /
+``hedges_won`` (duplicate submissions raced against a slow primary, and
+how often the hedge certified first), ``sheds`` (submits refused with a
+structured overload error — 503 + Retry-After at the HTTP layer — instead
+of queueing into a lock convoy), and ``timeouts`` (request deadlines that
+expired, HTTP 504). Per-replica health scores, breaker states, and
+restart counts live in ``Gateway.stats()["replicas"]`` since they are
+supervision state, not counters.
 """
 from __future__ import annotations
 
@@ -33,6 +43,12 @@ class GatewayMetrics:
         self.rejected = 0            # replica admission refused
         self.downgraded = 0          # admitted with a clamped plan
         self.rejects_by_reason: Dict[str, int] = collections.Counter()
+        # --- fault-tolerance counters (PR 8) ---
+        self.failovers = 0           # queries migrated off a dead replica
+        self.hedges_fired = 0        # hedged duplicate submissions
+        self.hedges_won = 0          # … where the hedge certified first
+        self.sheds = 0               # submits refused by overload/breakers
+        self.timeouts = 0            # request deadlines expired (HTTP 504)
         # (t_done, latency_s) pairs, newest last
         self._window: Deque[Tuple[float, float]] = collections.deque(
             maxlen=_WINDOW)
@@ -79,6 +95,11 @@ class GatewayMetrics:
             "rejected": self.rejected,
             "downgraded": self.downgraded,
             "rejects_by_reason": dict(self.rejects_by_reason),
+            "failovers": self.failovers,
+            "hedges_fired": self.hedges_fired,
+            "hedges_won": self.hedges_won,
+            "sheds": self.sheds,
+            "timeouts": self.timeouts,
             "hit_rate": (self.cache_hits / self.requests
                          if self.requests else 0.0),
             "join_rate": (self.joins / self.requests

@@ -1,5 +1,6 @@
-"""Replica pool: N ``FrogWildService`` replicas over ONE shared graph and
-walk index.
+"""Supervised replica pool: N ``FrogWildService`` replicas over ONE shared
+graph and walk index, with per-replica health, circuit breakers, and
+deterministic restart.
 
 The expensive state — the CSR graph and the ``int32[n, R]`` walk-index
 slab (or its per-shard blocks) — is built or loaded exactly once and the
@@ -8,24 +9,86 @@ schedulers (host state + one compiled wave program each), not N slabs.
 Replicas are seeded identically, which keeps the cold-replica contract
 from the rest of the stack: the first query on any fresh replica is
 byte-identical to the first query on a fresh standalone service with the
-same config.
+same config — and that is also what makes **restart deterministic**: a
+crashed replica is re-opened as a new service over the *same* slab
+(object identity re-asserted, zero index rebuild) whose key stream
+starts at wave 0 like any cold replica's.
 
-Routing is queue-depth-aware: :meth:`ReplicaPool.route` picks the replica
-with the smallest EDF-charged backlog as reported by its scheduler's own
-admission accounting (:meth:`~repro.query.scheduler.QueryScheduler.stats`
-``backlog_walks`` — the demand a new request would be charged behind),
-breaking ties toward the replica that has run the fewest waves.
+Supervision (PR 8). The pool is the fault boundary between the gateway
+and its replicas:
+
+* **Wave driving** goes through :meth:`step_replica`, never
+  ``service.step()`` directly: the pool consults the replica-level fault
+  injector (``replica_crash`` / ``replica_stall`` / ``replica_slow``
+  from the shared :class:`~repro.distributed.faults.FaultPlan`), holds a
+  per-replica lock (two HTTP threads driving the same scheduler would
+  corrupt host state; different replicas drive concurrently), measures
+  wall time against the **heartbeat deadline**, and folds clean waves
+  into a per-replica wave-time EMA.
+* **Breaker states** per replica — ``closed`` (routable), ``open``
+  (quarantined out of :meth:`route`), ``half_open`` (cooldown elapsed;
+  routable as a probe — first clean wave closes the breaker, first fault
+  re-opens it). A crash or missed heartbeat opens the breaker
+  immediately; repeated :class:`~repro.distributed.faults.
+  WaveFailedError` opens it after ``breaker_failure_threshold``
+  consecutive failures.
+* **Health score** in [0, 1] per replica (:meth:`health_score`):
+  0 when open/crashed, 0.5 while half-open, else
+  ``max(0.1, 1 − 0.25·consecutive_failures) · min(1, median_ema/own_ema)``
+  — a straggler (own EMA above the pool median) scores below its peers
+  even before any fault fires, which is what the gateway's hedging keys
+  on.
+* **Restart** (:meth:`restart_replica`): a crashed replica's slot gets a
+  fresh ``FrogWildService`` opened over the same graph / config / mesh /
+  shared index — ``ensure_index() is`` the pool's slab, asserted — with
+  the breaker left ``open`` until the cooldown elapses (the restarted
+  replica re-enters rotation through the half-open probe like any other
+  recovered replica).
+
+Routing (:meth:`route`) is queue-depth-aware over **routable** replicas
+only: smallest EDF-charged ``backlog_walks`` from each scheduler's own
+admission accounting, ties toward fewest waves run. With every breaker
+open, :meth:`route` raises :class:`NoReplicaAvailable` — the gateway
+turns that into load shedding, never a hang.
 """
 from __future__ import annotations
 
 import os
-from typing import List, Optional, Union
+import threading
+import time
+from typing import Dict, List, Optional, Union
 
 from repro.config import RuntimeConfig
+from repro.distributed.faults import (FaultEvent, FaultInjector,
+                                      ReplicaCrashed, ReplicaStalled)
 from repro.graph.csr import CSRGraph
 from repro.service import FrogWildService
 
-__all__ = ["ReplicaPool"]
+__all__ = ["NoReplicaAvailable", "ReplicaPool", "ReplicaState"]
+
+
+class NoReplicaAvailable(RuntimeError):
+    """Every replica's breaker is open (or the pool is closed) — there is
+    nowhere to route. The gateway maps this to structured load shedding
+    (HTTP 503 + Retry-After), never a blocked caller."""
+
+    def __init__(self, message: str, retry_after_s: float = 1.0):
+        super().__init__(message)
+        self.retry_after_s = retry_after_s
+
+
+class ReplicaState:
+    """Mutable supervision record for one replica slot."""
+
+    def __init__(self):
+        self.breaker = "closed"          # closed | open | half_open
+        self.consecutive_failures = 0
+        self.opened_at: Optional[float] = None
+        self.last_fault = ""             # why the breaker last opened
+        self.wave_time_ema_s: Optional[float] = None
+        self.waves_driven = 0            # pool drives (fault addressing)
+        self.restarts = 0
+        self.crashed = False             # service closed, awaiting restart
 
 
 class ReplicaPool:
@@ -36,6 +99,9 @@ class ReplicaPool:
         *,
         num_replicas: int = 2,
         mesh=None,
+        heartbeat_timeout_s: Optional[float] = None,
+        breaker_failure_threshold: int = 3,
+        breaker_cooldown_s: float = 30.0,
     ):
         if num_replicas < 1:
             raise ValueError(f"num_replicas must be ≥ 1, got {num_replicas}")
@@ -43,12 +109,30 @@ class ReplicaPool:
         # one build/load; every replica serves the same slab arrays (and,
         # for a sharded layout, the same per-shard blocks) — no N-fold
         # duplication, asserted in tests via object identity.
-        index = primary.ensure_index()
+        self._index = index = primary.ensure_index()
+        self._mesh = mesh
         self.replicas: List[FrogWildService] = [primary]
         for _ in range(num_replicas - 1):
             self.replicas.append(FrogWildService.open(
                 primary.graph, primary.config, mesh=mesh, index=index))
         self._closed = False
+        # --- supervision (PR 8) ---
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.breaker_failure_threshold = breaker_failure_threshold
+        self.breaker_cooldown_s = breaker_cooldown_s
+        self.states: List[ReplicaState] = [ReplicaState()
+                                           for _ in range(num_replicas)]
+        self.fault_log: List[FaultEvent] = []
+        # replica-level faults come from the SAME FaultPlan as the
+        # scheduler-level ones, but through the pool's own injector — the
+        # per-service injectors never see pool-wave indices.
+        cfg = primary.config
+        self._injector = (FaultInjector(cfg.faults)
+                          if cfg.faults is not None else None)
+        # one step lock per replica: waves on one scheduler serialize,
+        # different replicas (and /healthz, /metrics) never contend.
+        self._step_locks = [threading.Lock() for _ in range(num_replicas)]
+        self._state_lock = threading.RLock()
 
     def __len__(self) -> int:
         return len(self.replicas)
@@ -65,17 +149,233 @@ class ReplicaPool:
     def config(self) -> RuntimeConfig:
         return self.replicas[0].config
 
+    @property
+    def index(self):
+        """The ONE shared walk-index slab every replica serves from."""
+        return self._index
+
+    # --- supervised wave driving -----------------------------------------
+
+    def step_replica(self, ridx: int) -> bool:
+        """Drives one wave on replica ``ridx`` under supervision.
+
+        The pool-boundary contract: injected replica faults fire here
+        (crash → service closed + :class:`ReplicaCrashed`; stall past the
+        heartbeat deadline → :class:`ReplicaStalled`; slow → added
+        latency, no exception), the wave's wall time is checked against
+        ``heartbeat_timeout_s`` and folded into the replica's EMA, and
+        breaker bookkeeping happens on both success and failure. Returns
+        the scheduler's "did anything run" bool.
+        """
+        self._check_open()
+        st = self.states[ridx]
+        if st.crashed:
+            raise ReplicaCrashed(
+                f"replica {ridx} is crashed (restart pending)", ridx)
+        wave_no = st.waves_driven
+        st.waves_driven += 1
+        stall_s = slow_s = 0.0
+        if self._injector is not None:
+            if self._injector.replica_crash_at(ridx, wave_no):
+                self._on_crash(ridx, f"injected crash at pool wave {wave_no}")
+                raise ReplicaCrashed(
+                    f"replica {ridx} crashed at pool wave {wave_no}", ridx)
+            stall_s = self._injector.replica_stall_s(ridx, wave_no)
+            slow_s = self._injector.replica_slow_s(ridx)
+        t0 = time.monotonic()
+        hb = self.heartbeat_timeout_s
+        if stall_s or slow_s:
+            # simulate the stall/straggler before the wave body; a stall
+            # already past the deadline means the wave never returns in
+            # time — don't run it (a real stalled worker produced nothing).
+            if hb is not None and stall_s + slow_s > hb:
+                time.sleep(min(stall_s + slow_s, hb))
+                self._on_stall(ridx, time.monotonic() - t0)
+                raise ReplicaStalled(
+                    f"replica {ridx} missed its heartbeat deadline "
+                    f"({stall_s + slow_s:.3g}s stall > {hb:.3g}s)", ridx)
+            time.sleep(stall_s + slow_s)
+        with self._step_locks[ridx]:
+            progressed = self.replicas[ridx].step()
+        dt = time.monotonic() - t0
+        # the wall-time heartbeat only arms once an EMA exists — the first
+        # timed waves include jit compilation, which must never read as a
+        # stall (injected stalls above fire regardless; they are
+        # deterministic and machine-independent).
+        if hb is not None and dt > hb and st.wave_time_ema_s is not None:
+            self._on_stall(ridx, dt)
+            raise ReplicaStalled(
+                f"replica {ridx} wave took {dt:.3g}s > heartbeat deadline "
+                f"{hb:.3g}s", ridx)
+        # one-shot stalls are faults, not throughput, and stay out of the
+        # EMA; persistent slowness IS the machine — it belongs in it (the
+        # straggler term of the health score keys on exactly that).
+        self._on_success(ridx, dt, clean=stall_s == 0.0)
+        return progressed
+
+    def record_failure(self, ridx: int, reason: str) -> None:
+        """Charges a wave-level failure (e.g. ``WaveFailedError`` out of
+        the scheduler) against the replica's breaker: past
+        ``breaker_failure_threshold`` consecutive failures it opens."""
+        with self._state_lock:
+            st = self.states[ridx]
+            st.consecutive_failures += 1
+            if (st.breaker == "half_open"
+                    or st.consecutive_failures
+                    >= self.breaker_failure_threshold):
+                self._open_breaker(ridx, reason)
+
+    def _on_success(self, ridx: int, dt: float, clean: bool) -> None:
+        with self._state_lock:
+            st = self.states[ridx]
+            st.consecutive_failures = 0
+            if st.breaker == "half_open":
+                st.breaker = "closed"       # probe succeeded
+                st.opened_at = None
+                self.fault_log.append(FaultEvent(
+                    "breaker_close", st.waves_driven,
+                    detail=f"replica={ridx} probe wave clean"))
+            # EMA over clean waves only (injected latency measures the
+            # fault, not the machine); the first wave includes jit
+            # compilation and is skipped like the scheduler's own EMA.
+            if clean and st.waves_driven > 1:
+                st.wave_time_ema_s = (
+                    dt if st.wave_time_ema_s is None
+                    else 0.5 * st.wave_time_ema_s + 0.5 * dt)
+
+    def _on_crash(self, ridx: int, reason: str) -> None:
+        with self._state_lock:
+            st = self.states[ridx]
+            st.crashed = True
+            # the crashed service is closed so its in-flight handles
+            # settle as "cancelled" (never a hang) while the gateway
+            # migrates them to a healthy replica.
+            self.replicas[ridx].close()
+            self._open_breaker(ridx, reason)
+
+    def _on_stall(self, ridx: int, dt: float) -> None:
+        with self._state_lock:
+            self.states[ridx].consecutive_failures += 1
+            self._open_breaker(
+                ridx, f"heartbeat missed ({dt:.3g}s wave)")
+
+    def _open_breaker(self, ridx: int, reason: str) -> None:
+        st = self.states[ridx]
+        if st.breaker != "open":
+            st.breaker = "open"
+            st.opened_at = time.monotonic()
+            self.fault_log.append(FaultEvent(
+                "breaker_open", st.waves_driven,
+                detail=f"replica={ridx}: {reason}"))
+        st.last_fault = reason
+
+    def restart_replica(self, ridx: int) -> FrogWildService:
+        """Deterministically restarts replica ``ridx``: a fresh
+        ``FrogWildService`` over the *same* graph / config / mesh and the
+        *same* shared slab — object identity asserted, zero index
+        rebuild. The breaker stays ``open`` until the cooldown elapses,
+        so the restarted replica re-enters rotation through the standard
+        half-open probe."""
+        with self._state_lock:
+            old = self.replicas[ridx]
+            if not old.closed:
+                old.close()
+            fresh = FrogWildService.open(self.graph, self.config,
+                                         mesh=self._mesh, index=self._index)
+            assert fresh.ensure_index() is self._index, (
+                "restarted replica must share the pool's slab")
+            self.replicas[ridx] = fresh
+            st = self.states[ridx]
+            st.crashed = False
+            st.restarts += 1
+            st.waves_driven = 0          # cold again: key stream at wave 0
+            st.wave_time_ema_s = None
+            self.fault_log.append(FaultEvent(
+                "replica_restart", 0,
+                detail=f"replica={ridx} restart #{st.restarts} over the "
+                       f"shared slab"))
+            return fresh
+
+    # --- breaker / health introspection ----------------------------------
+
+    def _tick_breakers(self) -> None:
+        """Moves cooled-down open breakers to half-open (probe-ready)."""
+        now = time.monotonic()
+        for i, st in enumerate(self.states):
+            if (st.breaker == "open" and not st.crashed
+                    and st.opened_at is not None
+                    and now - st.opened_at >= self.breaker_cooldown_s):
+                st.breaker = "half_open"
+                self.fault_log.append(FaultEvent(
+                    "breaker_half_open", st.waves_driven,
+                    detail=f"replica={i} cooldown elapsed"))
+
+    def breaker_state(self, ridx: int) -> str:
+        """``closed`` | ``open`` | ``half_open`` (cooldowns applied)."""
+        with self._state_lock:
+            self._tick_breakers()
+            return self.states[ridx].breaker
+
+    def routable(self) -> List[int]:
+        """Replica indices :meth:`route` may currently pick: closed
+        breakers plus half-open probes. Half-open replicas stay routable
+        alongside healthy peers — otherwise a recovered replica would
+        never receive the probe wave that closes its breaker — and one
+        failure in the probe re-opens immediately
+        (:meth:`record_failure`)."""
+        with self._state_lock:
+            self._tick_breakers()
+            return [i for i, st in enumerate(self.states)
+                    if st.breaker in ("closed", "half_open")
+                    and not st.crashed]
+
+    def health_score(self, ridx: int) -> float:
+        """Replica health in [0, 1] — the breaker's drive signal.
+
+        0.0 open/crashed; 0.5 half-open; else a closed replica starts at
+        1.0, loses 0.25 per consecutive wave failure (floor 0.1), and is
+        scaled by ``min(1, median_ema / own_ema)`` so a straggler scores
+        below its peers before any fault ever fires.
+        """
+        with self._state_lock:
+            self._tick_breakers()
+            st = self.states[ridx]
+            if st.crashed or st.breaker == "open":
+                return 0.0
+            if st.breaker == "half_open":
+                return 0.5
+            score = max(0.1, 1.0 - 0.25 * st.consecutive_failures)
+            emas = sorted(s.wave_time_ema_s for s in self.states
+                          if s.wave_time_ema_s is not None)
+            if emas and st.wave_time_ema_s:
+                median = emas[len(emas) // 2]
+                score *= min(1.0, median / st.wave_time_ema_s)
+            return score
+
     def route(self) -> int:
         """Index of the replica a new request should land on.
 
-        Orders by (EDF-charged backlog walks, waves run, replica index):
+        Orders the **routable** replicas (open breakers are quarantined
+        out) by (EDF-charged backlog walks, waves run, replica index):
         the backlog is the scheduler's own admission charge — queued plus
         in-flight walk demand — so routing and admission agree about what
         "loaded" means. A replica whose scheduler does not exist yet is
-        unloaded by definition (depth 0, zero waves).
+        unloaded by definition (depth 0, zero waves). With nothing
+        routable, raises :class:`NoReplicaAvailable` with the remaining
+        breaker cooldown as the suggested retry-after.
         """
         if self._closed:
             raise RuntimeError("ReplicaPool is closed")
+        candidates = self.routable()
+        if not candidates:
+            now = time.monotonic()
+            waits = [self.breaker_cooldown_s - (now - st.opened_at)
+                     for st in self.states if st.opened_at is not None]
+            retry = max(0.05, min(waits) if waits else 1.0)
+            raise NoReplicaAvailable(
+                f"all {len(self.replicas)} replicas quarantined "
+                f"(breakers open) — retry in {retry:.2g}s",
+                retry_after_s=retry)
 
         def load(i: int):
             st = self.replicas[i].serving_stats()
@@ -83,7 +383,7 @@ class ReplicaPool:
                 return (0, 0, i)
             return (st.backlog_walks, st.waves_run, i)
 
-        return min(range(len(self.replicas)), key=load)
+        return min(candidates, key=load)
 
     def total_waves_run(self) -> int:
         """Waves executed across the pool — the cache tests' "zero new
@@ -99,6 +399,10 @@ class ReplicaPool:
         for r in self.replicas:
             r.close()
         self._closed = True
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("ReplicaPool is closed")
 
     def __enter__(self) -> "ReplicaPool":
         return self

@@ -242,6 +242,10 @@ class SchedulerStats:
     lost_shards: Tuple[int, ...]
     max_walks: int
     max_queries: int
+    # heartbeat (PR 8): when the last wave retired and how long it took —
+    # the pool supervisor's stall-detection + health-scoring inputs.
+    t_last_wave: Optional[float] = None   # time.monotonic() of last wave
+    last_wave_s: Optional[float] = None   # wall time of that wave
 
 
 @dataclasses.dataclass
@@ -307,6 +311,8 @@ class QueryScheduler:
         self._waves_run = 0
         self._walks_allocated = 0    # walk slots handed out across all waves
         self._walks_executed = 0     # walks whose tallies actually landed
+        self._t_last_wave: Optional[float] = None   # heartbeat stamp
+        self._last_wave_s: Optional[float] = None   # last wave wall time
         # --- fault-tolerance state (PR 6) ---
         self._injector = fault_injector
         self.wave_timeout_s = wave_timeout_s
@@ -739,6 +745,8 @@ class QueryScheduler:
         # not the machine), and a clean outlier is clamped to a bounded
         # multiple of the current estimate.
         self._waves_run += 1
+        self._t_last_wave = time.monotonic()
+        self._last_wave_s = dt
         if self._waves_run > 1 and clean:
             if self._wave_time is not None:
                 dt = min(dt, _EMA_OUTLIER_CLAMP * self._wave_time)
@@ -990,6 +998,8 @@ class QueryScheduler:
             lost_shards=tuple(sorted(self.lost_shards)),
             max_walks=self.max_walks,
             max_queries=self.max_queries,
+            t_last_wave=self._t_last_wave,
+            last_wave_s=self._last_wave_s,
         )
 
     # --- anytime (ε, δ) refinement ---------------------------------------

@@ -48,7 +48,7 @@ from repro.config import (EngineConfig, FrogWildConfig, KernelConfig,
                           WalkIndexConfig)
 from repro.core.frogwild import (FrogWildResult, _as_tuple,
                                  _frogwild_walks)
-from repro.distributed.faults import FaultInjector
+from repro.distributed.faults import FaultInjector, WaveFailedError
 from repro.distributed.runtime import ShardRuntime
 from repro.engine import gas as _gas
 from repro.graph.csr import CSRGraph, load_graph
@@ -309,7 +309,13 @@ class JoinedQueryHandle:
         return self.parent.admitted
 
     def done(self) -> bool:
-        return self._result is not None or self._settle()
+        """True when settled — or **terminal**: a parent that was
+        cancelled or late-rejected mid-wave can never certify this join,
+        so the joiner reports done instead of polling forever (its
+        ``result()`` then raises the classified error)."""
+        if self._result is not None or self._settle():
+            return True
+        return self.parent.status() in ("cancelled", "rejected")
 
     def poll(self) -> bool:
         """Advances the parent's service by one wave unless already done."""
@@ -358,15 +364,25 @@ class JoinedQueryHandle:
         return True
 
     def result(self, max_waves: Optional[int] = None) -> QueryResult:
-        """Drives waves until this join's (ε, δ) is certified."""
+        """Drives waves until this join's (ε, δ) is certified.
+
+        A parent cancelled / late-rejected before certification surfaces
+        as a classified :class:`~repro.distributed.faults.WaveFailedError`
+        (the gateway's failover migrates joiners *before* cancelling a
+        parent, so through the tier this only fires when the caller
+        cancels a parent that still has joiners riding it).
+        """
         waves = 0
         while True:
             if self.done():
+                if self._result is None:
+                    st = self.parent.status()
+                    raise WaveFailedError(
+                        f"joined query {self.rid}: parent handle is {st} "
+                        f"before this join's (ε={self.epsilon}, "
+                        f"δ={self.delta}) was certified — resubmit")
                 return self._result
             st = self.parent.status()
-            if st in ("cancelled", "rejected"):
-                raise RuntimeError(
-                    f"joined query {self.rid}: parent handle is {st}")
             if max_waves is not None and waves >= max_waves:
                 raise TimeoutError(
                     f"joined query {self.rid} still {st} after "
@@ -711,6 +727,19 @@ class FrogWildService:
         self._next_rid += 1
         decision = self.scheduler._submit(req)
         return QueryHandle(self, req, decision)
+
+    def resubmit(self, req: QueryRequest) -> QueryHandle:
+        """Submits a fresh copy of ``req`` (new rid, new latency clock) —
+        the gateway's failover hook: a query whose replica died mid-flight
+        is replayed on a healthy replica with the *same plan parameters*.
+        On a cold (or freshly restarted) replica the scheduler's key
+        stream starts at wave 0, so the replayed answer is byte-identical
+        to a fault-free run on a cold replica (asserted in the bench
+        smoke)."""
+        return self._submit_request(
+            kind=req.kind, k=req.k, source=req.source, epsilon=req.epsilon,
+            delta=req.delta, num_walks=req.num_walks, slo_s=req.slo_s,
+            allow_downgrade=req.allow_downgrade, early_stop=req.early_stop)
 
     def step(self) -> bool:
         """Runs one device wave; False when nothing is in flight."""

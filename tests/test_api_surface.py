@@ -44,6 +44,8 @@ SURFACE = {
         "GatewayHTTPServer",
         "GatewayHandle",
         "GatewayMetrics",
+        "GatewayOverloadError",
+        "NoReplicaAvailable",
         "ReplicaPool",
         "ResultCache",
         "serve_http",
