@@ -10,9 +10,9 @@ and the same per-query walk budgets:
   continuous-batching scheduler stitching ``⌊t/L⌋`` segment gathers +
   ``t mod L`` residual steps per walk, many queries per device wave.
 * **indexed, sharded slab** — the same scheduler serving from per-shard
-  ``[shard_size, R]`` blocks with no reassembly (host loop here on one
-  device, one ``shard_map`` on a mesh) — the cost of the 4·n·R/S
-  per-device memory win.
+  ``[shard_size, R]`` blocks with no reassembly (one fused ``lax.scan``
+  wave program per AOT-ladder bucket here on one device, one ``shard_map``
+  program on a mesh) — the cost of the 4·n·R/S per-device memory win.
 * **service handle** — the same queries as **indexed** but submitted as
   :class:`~repro.service.QueryHandle` futures and driven by ``poll()`` +
   ``partial()`` (one anytime snapshot per wave) — the row pins the
@@ -33,7 +33,8 @@ and the same per-query walk budgets:
 
 Emits ``BENCH_query.json`` with queries/sec and p50/p99 latency for all
 paths, plus the index build cost. ``--smoke`` instead runs a tiny
-gathered-vs-sharded-vs-handle dispatch equivalence sweep plus two
+gathered-vs-fused-vs-legacy-loop-vs-handle dispatch equivalence sweep, an
+AOT-ladder recompile-count gate, a handle-mode overhead gate, plus two
 fault-injection sweeps — scheduler-level (zero-fault byte-identity +
 seeded shard-loss degradation) and gateway-level (crash mid-query →
 failover byte-identity + quarantine + restart over the same slab; stall
@@ -60,6 +61,7 @@ from repro.distributed.faults import FaultPlan
 from repro.gateway import GatewayOverloadError
 from repro.graph import chung_lu_powerlaw
 from repro.kernels import ops
+from repro.distributed.runtime import wave_trace_count
 from repro.query import plan_query
 from repro.query.engine import _plain_steps, sample_walk_lengths
 
@@ -85,6 +87,12 @@ def _stream(num=None):
         yield ("ppr", 17 * i + 1) if i % 3 == 2 else ("topk", None)
 
 
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
 def _submit_all(svc, num=None, early_stop=False):
     handles = []
     for kind, source in _stream(num):
@@ -100,28 +108,30 @@ def _submit_all(svc, num=None, early_stop=False):
 
 
 def smoke():
-    """Gathered vs sharded vs handle-driven serving equivalence at tiny
-    sizes. All paths share one key stream, so on the same slab their
-    answers must agree exactly — any divergence is a dispatch regression
-    and fails tier-1 (``scripts/ci_tier1.sh --bench-smoke``).
+    """Gathered vs sharded (fused and legacy-loop dispatch) vs handle-driven
+    serving equivalence at tiny sizes, plus the AOT-ladder recompile gate
+    and the handle-mode overhead gate. All dispatch paths share one key
+    stream, so on the same slab their answers must agree exactly — any
+    divergence is a dispatch regression and fails tier-1
+    (``scripts/ci_tier1.sh --bench-smoke``).
     """
     g = chung_lu_powerlaw(n=768, avg_out_deg=6, seed=0)
     serving = _serving(R=6, L=2, max_walks=512, max_queries=3, max_steps=10)
     results = {}
-    for name, shards, stitch in [
-        ("gathered", 1, "xla"),
-        ("sharded", 4, "xla"),
-        ("sharded_fused", 4, "ref"),
+    for name, shards, stitch, dispatch in [
+        ("gathered", 1, "xla", "fused"),
+        ("sharded", 4, "xla", "fused"),
+        ("sharded_loop", 4, "xla", "loop"),
+        ("sharded_kernel", 4, "ref", "fused"),
     ]:
         svc = FrogWildService.open(g, RuntimeConfig(
             kernel=KernelConfig(stitch_impl=stitch),
             runtime=ShardConfig(num_shards=shards, seed=7),
-            serving=serving))
+            serving=dataclasses.replace(serving, sharded_dispatch=dispatch)))
         handles = _submit_all(svc, num=4)
         results[name] = sorted(svc.drain(), key=lambda r: r.rid)
-        rt = svc.scheduler.runtime
         print(f"smoke query_serving {name} OK "
-              f"({'loop' if rt and not rt.is_mesh else 'dense/mesh'})")
+              f"(dispatch={svc.scheduler.dispatch})")
     # handle-driven path (poll + partial per wave) on the gathered slab
     svc = FrogWildService.open(g, RuntimeConfig(
         runtime=ShardConfig(num_shards=1, seed=7), serving=serving))
@@ -133,12 +143,60 @@ def smoke():
     results["handle"] = sorted((h.result() for h in handles),
                                key=lambda r: r.rid)
     print("smoke query_serving handle OK (poll-driven)")
-    for name in ("sharded", "sharded_fused", "handle"):
+    for name in ("sharded", "sharded_loop", "sharded_kernel", "handle"):
         for a, b in zip(results["gathered"], results[name]):
             assert (a.vertices == b.vertices).all(), (name, a.rid)
             assert np.allclose(a.scores, b.scores), (name, a.rid)
-    print("smoke OK: gathered, sharded, and handle-driven serving answers "
-          "identical")
+    print("smoke OK: gathered, fused-sharded, legacy-loop, and "
+          "handle-driven serving answers identical")
+
+    # AOT-ladder recompile gate: warm the whole bucket ladder, then a
+    # shifting topk/PPR mix with per-query walk budgets spanning every
+    # bucket must never trace another wave program.
+    svc = FrogWildService.open(g, RuntimeConfig(
+        runtime=ShardConfig(num_shards=4, seed=7),
+        serving=dataclasses.replace(serving, aot_warmup=True)))
+    svc.scheduler                              # build + warm_ladder()
+    traced = wave_trace_count()
+    for walks in (40, 90, 200, 500):
+        svc.topk(k=5, num_walks=walks)
+        svc.ppr(7, k=5, num_walks=max(walks // 2, 1))
+        svc.drain()
+    assert wave_trace_count() == traced, "query-mix change retraced a wave"
+    print("smoke OK: zero wave retraces across a mixed sweep after ladder "
+          "warmup")
+
+    # handle-mode overhead gate: poll()+partial() driving must stay within
+    # shouting distance of drain() on the same warmed service — the
+    # per-poll top-k finalize is O(n), not a full-n sort (the PR 5
+    # handle_vs_drain regression). Generous threshold: timing at smoke
+    # sizes is noisy; the real ratio is gated in BENCH_query.json.
+    svc = FrogWildService.open(g, RuntimeConfig(
+        runtime=ShardConfig(num_shards=1, seed=7), serving=serving))
+    def drain_pass():
+        _submit_all(svc, num=4)
+        out = svc.drain()
+        svc.scheduler.finished = []
+        return out
+
+    def handle_pass():
+        hs = _submit_all(svc, num=4)
+        while not all(h.poll() for h in hs):
+            for h in hs:
+                if not h.done():
+                    h.partial()
+        out = [h.result() for h in hs]
+        svc.scheduler.finished = []
+        return out
+
+    drain_pass(); handle_pass()                # warm the ladder programs
+    dt_drain = min(_timed(drain_pass) for _ in range(3))
+    dt_handle = min(_timed(handle_pass) for _ in range(3))
+    ratio = dt_drain / dt_handle
+    assert ratio > 0.25, f"handle-driven serving {1/ratio:.1f}x slower " \
+                         f"than drain at smoke size"
+    print(f"smoke OK: handle-vs-drain overhead gate "
+          f"(handle/drain qps ratio {ratio:.2f} > 0.25)")
 
     # fault-injection sweep: supervision armed with an *empty* plan must
     # stay byte-identical to the plain sharded path; a seeded shard loss
@@ -313,16 +371,6 @@ def main():
         s.scheduler.finished = []
         return out
 
-    serve(svc)                                       # warm the wave program
-    t0 = time.perf_counter()
-    results = serve(svc)
-    dt_idx = time.perf_counter() - t0
-    lat_idx = np.asarray([r.latency_s for r in results])
-    qps_idx = NUM_QUERIES / dt_idx
-    rows.append(("query/indexed_serve", dt_idx * 1e6 / NUM_QUERIES,
-                 f"qps={qps_idx:.1f} p50_ms={np.percentile(lat_idx, 50) * 1e3:.1f} "
-                 f"p99_ms={np.percentile(lat_idx, 99) * 1e3:.1f}"))
-
     # handle-driven serving: same queries, driven by poll() with one
     # partial() anytime snapshot per wave — pins the QueryHandle overhead.
     def serve_handles(s):
@@ -335,16 +383,34 @@ def main():
         s.scheduler.finished = []
         return out
 
-    serve_handles(svc)                               # warm (same program)
-    t0 = time.perf_counter()
-    results_h = serve_handles(svc)
-    dt_h = time.perf_counter() - t0
+    # Comparability (PR 9): drain-driven and handle-driven reps are
+    # interleaved over the same warmed service with the min taken, so
+    # handle_vs_drain measures the poll()/partial() overhead — not
+    # measurement-order luck on a noisy box.
+    serve(svc)                                       # warm the wave programs
+    serve_handles(svc)
+    dts_idx, dts_h = [], []
+    results = results_h = None
+    for _ in range(3):                               # interleaved reps
+        t0 = time.perf_counter()
+        results = serve(svc)
+        dts_idx.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        results_h = serve_handles(svc)
+        dts_h.append(time.perf_counter() - t0)
+    dt_idx, dt_h = min(dts_idx), min(dts_h)
+    lat_idx = np.asarray([r.latency_s for r in results])
+    qps_idx = NUM_QUERIES / dt_idx
+    rows.append(("query/indexed_serve", dt_idx * 1e6 / NUM_QUERIES,
+                 f"qps={qps_idx:.1f} p50_ms={np.percentile(lat_idx, 50) * 1e3:.1f} "
+                 f"p99_ms={np.percentile(lat_idx, 99) * 1e3:.1f}"))
+
     lat_h = np.asarray([r.latency_s for r in results_h])
     qps_h = NUM_QUERIES / dt_h
     rows.append(("query/query_service_handle", dt_h * 1e6 / NUM_QUERIES,
                  f"qps={qps_h:.1f} p50_ms={np.percentile(lat_h, 50) * 1e3:.1f} "
                  f"p99_ms={np.percentile(lat_h, 99) * 1e3:.1f} "
-                 f"vs_drain={qps_h / qps_idx:.3f}"))
+                 f"vs_drain={qps_h / qps_idx:.3f} (interleaved min-of-3)"))
 
     # gateway cache-hit serving (PR 7): the same stream through a
     # 2-replica gateway. The first pass runs live (identical concurrent
@@ -376,17 +442,40 @@ def main():
                  f"hit_rate={hit_rate:.2f} join_rate={join_rate:.2f} "
                  f"replicas=2 (dominated certs, zero walks)"))
 
-    # sharded-slab serving: per-shard blocks, no slab reassembly
-    # (host-loop dispatch on this 1-device bench; 4·n·R/S bytes of slab
-    # resident per wave call instead of 4·n·R).
+    # sharded-slab serving: per-shard blocks, no slab reassembly (the fused
+    # single-dispatch wave on this 1-device bench: one lax.scan program per
+    # ladder bucket against the stacked slab; 4·n·R/S bytes of slab
+    # resident per device on a mesh instead of 4·n·R).
+    #
+    # The zero-fault supervision arm rides the same workload with the
+    # injector attached (empty plan) and the per-wave timeout armed.
+    # Comparability (PR 9): both services serve the same warmed slab with
+    # identical wave settings apart from the armed supervisor, both are
+    # fully warmed, and the timed reps are interleaved with the min taken
+    # — so overhead_vs_sharded measures supervision, not compile state or
+    # measurement-order luck.
     svc_sh = FrogWildService.open(
         g, RuntimeConfig(runtime=ShardConfig(num_shards=NUM_SHARDS),
                          serving=serving),
         index=index)
-    serve(svc_sh)                                    # warm the wave programs
-    t0 = time.perf_counter()
-    results_sh = serve(svc_sh)
-    dt_sh = time.perf_counter() - t0
+    svc_sup = FrogWildService.open(
+        g, RuntimeConfig(runtime=ShardConfig(num_shards=NUM_SHARDS),
+                         serving=dataclasses.replace(serving,
+                                                     wave_timeout_s=60.0),
+                         faults=FaultPlan()),
+        index=index)
+    serve(svc_sh)                                    # warm both program sets
+    serve(svc_sup)
+    dts_sh, dts_sup = [], []
+    results_sh = results_sup = None
+    for _ in range(3):                               # interleaved reps
+        t0 = time.perf_counter()
+        results_sh = serve(svc_sh)
+        dts_sh.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        results_sup = serve(svc_sup)
+        dts_sup.append(time.perf_counter() - t0)
+    dt_sh, dt_sup = min(dts_sh), min(dts_sup)
     lat_sh = np.asarray([r.latency_s for r in results_sh])
     qps_sh = NUM_QUERIES / dt_sh
     slab_mb = index.endpoints.nbytes / 1e6
@@ -395,30 +484,16 @@ def main():
                  f"p99_ms={np.percentile(lat_sh, 99) * 1e3:.1f} "
                  f"shards={NUM_SHARDS} slab_mb_per_shard="
                  f"{slab_mb / NUM_SHARDS:.2f} dispatch="
-                 f"{'mesh' if svc_sh.scheduler.runtime.is_mesh else 'host_loop'}"))
+                 f"{svc_sh.scheduler.dispatch}"))
 
-    # fault supervision, zero faults: the overhead arm. Same sharded
-    # workload with the injector attached (empty plan) and the per-wave
-    # timeout armed — answers stay byte-identical; the row records what
-    # the supervision machinery costs when nothing goes wrong (<5% is the
-    # acceptance target).
-    svc_sup = FrogWildService.open(
-        g, RuntimeConfig(runtime=ShardConfig(num_shards=NUM_SHARDS),
-                         serving=dataclasses.replace(serving,
-                                                     wave_timeout_s=60.0),
-                         faults=FaultPlan()),
-        index=index)
-    serve(svc_sup)                                   # warm
-    t0 = time.perf_counter()
-    results_sup = serve(svc_sup)
-    dt_sup = time.perf_counter() - t0
     qps_sup = NUM_QUERIES / dt_sup
     for a, b in zip(results_sh, results_sup):        # still byte-identical
         assert (a.vertices == b.vertices).all() and not b.degraded
     overhead = dt_sup / dt_sh - 1.0
     rows.append(("query/query_serving_supervised", dt_sup * 1e6 / NUM_QUERIES,
                  f"qps={qps_sup:.1f} overhead_vs_sharded="
-                 f"{overhead * 100:+.1f}% (zero faults, timeout armed)"))
+                 f"{overhead * 100:+.1f}% (zero faults, timeout armed, "
+                 f"interleaved min-of-3)"))
 
     # fault supervision, one shard lost mid-stream: degraded serving.
     svc_flt = FrogWildService.open(

@@ -8,7 +8,11 @@
 # replica routing, structured rejection) — and (2) the dispatch equivalence
 # sweeps (benchmarks/bench_kernels.py --smoke: every kernel impl= path
 # incl. the stitch/local-stitch variants; benchmarks/bench_query.py
-# --smoke: gathered vs sharded-slab vs handle-driven serving, the
+# --smoke: the fused-dispatch equivalence gate — gathered vs fused
+# single-dispatch sharded vs legacy host-loop sharded vs handle-driven
+# serving, byte-identical answers at tiny sizes — the AOT-ladder
+# recompile-count gate (zero wave retraces across a mixed topk/PPR
+# sweep after warm_ladder), the handle-mode overhead gate, the
 # fault-injection sweep — supervised zero-fault byte-identity and seeded
 # shard-loss degradation with the Theorem-1-widened bound — and the
 # 2-replica gateway sweeps: cold-miss byte-equivalence to a direct

@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import TYPE_CHECKING, Optional
+from typing import TYPE_CHECKING, Optional, Tuple
 
 if TYPE_CHECKING:  # stdlib-only module; safe for type checkers, but not
     # imported at runtime — this module stays jax- and repro-free.
@@ -90,9 +90,22 @@ class ServingConfig:
     The fault-supervision knobs govern the scheduler's wave supervisor
     (``query/scheduler.py``): a wave that raises a transient fault or
     exceeds ``wave_timeout_s`` is retried up to ``max_retries`` times with
-    exponential backoff + jitter before failing over (mesh → host loop) or
-    raising; a permanent shard fault instead evicts the shard and serves
-    degraded waves with a widened ``epsilon_bound``.
+    exponential backoff + jitter before failing over (mesh → fused
+    single-device dispatch) or raising; a permanent shard fault instead
+    evicts the shard and serves degraded waves with a widened
+    ``epsilon_bound``.
+
+    The wave-program knobs govern dispatch and compilation:
+    ``sharded_dispatch`` picks the single-device sharded wave — ``"fused"``
+    (one compiled program: ``lax.scan`` over stitch rounds against the
+    stacked slab) or ``"loop"`` (the legacy S × rounds host loop, kept as
+    the byte-identity reference). ``walk_buckets`` / ``query_buckets``
+    override the AOT wave-program ladder (each wave runs at the smallest
+    bucket ≥ its allocation; ``None`` = the cap and its halvings), and
+    ``aot_warmup`` pre-compiles every ladder bucket at scheduler build so
+    serving never traces mid-wave. ``donate_wave_buffers`` donates the
+    per-wave walk-state operands to the executable (buffer reuse instead
+    of fresh allocations every wave).
     """
 
     segments_per_vertex: int = 16    # R — endpoints stored per vertex
@@ -107,6 +120,11 @@ class ServingConfig:
     max_retries: int = 2             # bounded retry of a faulted wave
     backoff_base_s: float = 0.02     # exponential backoff: base · 2^(a−1)
     backoff_max_s: float = 0.5       # … clamped here (± jitter)
+    sharded_dispatch: str = "fused"  # single-device sharded wave: fused | loop
+    donate_wave_buffers: bool = True  # donate walk-state operands to XLA
+    walk_buckets: Optional[Tuple[int, ...]] = None   # AOT ladder override
+    query_buckets: Optional[Tuple[int, ...]] = None  # AOT ladder override
+    aot_warmup: bool = False         # pre-compile the ladder at build time
 
 
 _KERNEL = KernelConfig()

@@ -25,6 +25,15 @@ helpers own the fourth. ``engine/gas.py`` (superstep execution),
 ``query/index.py`` (sharded slab build + persistence) and
 ``query/scheduler.py`` (serving from per-shard slab blocks) are all built
 on it — one execution layer, three workloads.
+
+The runtime additionally owns the **AOT wave-program ladder cache**
+(:class:`WaveProgramCache`, reached via :meth:`ShardRuntime.wave_cache`):
+compiled wave programs keyed by their static geometry
+(:class:`repro.query.engine.WaveSpec`), shared process-wide so every
+scheduler/replica serving the same slab geometry reuses one executable —
+and a trace counter (:func:`record_wave_trace` / :func:`wave_trace_count`)
+incremented from *inside* the traced wave bodies, which is what lets tests
+and the bench smoke assert "zero retraces after ladder warmup" directly.
 """
 from __future__ import annotations
 
@@ -42,6 +51,70 @@ from repro.checkpoint import (CheckpointCorruptError, latest_step,
                               restore_checkpoint, save_checkpoint)
 
 DEFAULT_AXIS = "vertex"
+
+
+# --- AOT wave-program ladder cache ------------------------------------------
+
+
+class WaveProgramCache:
+    """Process-wide cache of compiled wave programs, keyed by static
+    geometry (a hashable spec — :class:`repro.query.engine.WaveSpec`).
+
+    One entry per (walk-slots, query-slots, shards, …) bucket shape: the
+    scheduler pads each wave's operands up to the nearest ladder bucket, so
+    an admission-driven change in the query mix resolves to a spec already
+    in the cache instead of retracing mid-serving. Programs close over no
+    per-scheduler state (slab and graph arrays are operands), so replicas
+    with identical geometry share executables.
+    """
+
+    def __init__(self):
+        self._programs: Dict[Any, Callable] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_build(self, spec, builder: Callable) -> Callable:
+        try:
+            fn = self._programs[spec]
+            self.hits += 1
+            return fn
+        except KeyError:
+            self.misses += 1
+            fn = self._programs[spec] = builder(spec)
+            return fn
+
+    def __len__(self) -> int:
+        return len(self._programs)
+
+    def clear(self) -> None:
+        self._programs.clear()
+
+
+_WAVE_CACHE = WaveProgramCache()
+
+# Traces of wave bodies, counted from inside the traced function (tracing
+# executes the Python body; steady-state executions do not) — the direct
+# "did serving retrace?" signal the recompile-count test and the bench
+# smoke gate assert on.
+_WAVE_TRACES = 0
+
+
+def record_wave_trace(spec: Any = None) -> None:
+    """Called at the top of every wave-program body; increments only while
+    jax is *tracing* the body (compile), never on a steady-state call."""
+    global _WAVE_TRACES
+    _WAVE_TRACES += 1
+
+
+def wave_trace_count() -> int:
+    return _WAVE_TRACES
+
+
+def reset_wave_trace_count() -> int:
+    """Resets the counter and returns the value it had."""
+    global _WAVE_TRACES
+    prev, _WAVE_TRACES = _WAVE_TRACES, 0
+    return prev
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,11 +227,17 @@ class ShardRuntime:
 
     def sharded_call(self, body: Callable, num_sharded: int,
                      num_replicated: int = 0, num_outputs: int = 1,
-                     check_vma: bool = True) -> Callable:
-        """Jitted :meth:`shard_map_fn` — the common execution entry."""
+                     check_vma: bool = True,
+                     donate_argnums: Sequence[int] = ()) -> Callable:
+        """Jitted :meth:`shard_map_fn` — the common execution entry.
+
+        ``donate_argnums`` forwards to ``jax.jit``: callers donate operands
+        that are dead after the body's prologue (e.g. the wave scheduler's
+        per-wave walk state) so XLA can reuse their buffers instead of
+        allocating fresh ones every dispatch."""
         return jax.jit(self.shard_map_fn(
             body, num_sharded, num_replicated, num_outputs,
-            check_vma=check_vma))
+            check_vma=check_vma), donate_argnums=tuple(donate_argnums))
 
     def map_shards(self, program: Callable, *args, **kwargs) -> list:
         """Single-device dispatch: runs ``program(shard_id, *args)`` for
@@ -181,6 +260,16 @@ class ShardRuntime:
     @staticmethod
     def key_data(key: jax.Array) -> jnp.ndarray:
         return jax.random.key_data(key)
+
+    # --- AOT wave-program ladder ----------------------------------------
+
+    @staticmethod
+    def wave_cache() -> WaveProgramCache:
+        """The process-wide :class:`WaveProgramCache`. A staticmethod on the
+        (frozen, hashable) runtime rather than a field: the cache is shared
+        across runtimes by design — two schedulers over the same slab
+        geometry must hit the same compiled program."""
+        return _WAVE_CACHE
 
 
 # --- per-shard checkpoint round-trip ----------------------------------------

@@ -22,6 +22,8 @@ from repro.kernels.frog_step import frog_step as _frog_step
 from repro.kernels.frog_step_stream import (BlockedCSR, block_csr,
                                             frog_step_stream_sorted)
 from repro.kernels.spmv_ell import spmv_ell_slab
+from repro.kernels.stitch import stitch_gather as _stitch_gather
+from repro.kernels.stitch import stitch_gather_local as _stitch_gather_local
 from repro.kernels.stitch import stitch_step as _stitch_step
 from repro.kernels.stitch import stitch_step_local as _stitch_step_local
 
@@ -290,6 +292,7 @@ def stitch_step(
     walk_block: int = 1024,
     rng: str = "caller",
     seed: Optional[int] = None,
+    tally: bool = True,
 ):
     """Fused query stitch round → ``(next_pos[W], stop_counts[n])``.
 
@@ -300,6 +303,13 @@ def stitch_step(
     ``rng="device"`` (compiled TPU only) draws the slot bits in-kernel from
     ``seed`` instead of the caller's ``bits`` stream. Padding is handled
     here so callers pass natural shapes.
+
+    ``tally=False`` runs the gather-only variant and returns
+    ``(next_pos[W], None)`` — for callers that defer the histogram to one
+    pass over the wave's final positions (the scheduler's fused
+    ``lax.scan`` wave, where a per-round counts output would just fatten
+    the scan carry to be thrown away). ``next_pos`` is byte-identical to
+    the tallying kernel's.
     """
     stop = stop.astype(jnp.int32)
     use_device_rng, seed_arr = _rng_mode(rng, interpret, seed)
@@ -308,11 +318,22 @@ def stitch_step(
     if impl == "ref":
         if use_device_rng:
             raise ValueError('rng="device" has no jnp oracle (impl="ref")')
+        if not tally:
+            R = endpoints.shape[1]
+            return endpoints[pos, bits % R].astype(jnp.int32), None
         return kref.stitch_step_ref(pos, stop, bits, endpoints, n)
     if impl != "pallas":
         raise ValueError(f"unknown impl {impl!r}")
     W = pos.shape[0]
     R = endpoints.shape[1]
+    if not tally:
+        wb = min(walk_block, max(8, W))
+        pos_p = _pad_to(pos, wb)
+        bits_p = seed_arr if use_device_rng else _pad_to(bits, wb)
+        nxt = _stitch_gather(pos_p, bits_p, endpoints.reshape(-1), R,
+                             walk_block=wb, interpret=interpret,
+                             use_device_rng=use_device_rng)
+        return nxt[:W], None
     vertex_block = min(vertex_block, max(8, n))
     n_pad = ((n + vertex_block - 1) // vertex_block) * vertex_block
     walk_block = min(walk_block, max(8, W))
@@ -341,6 +362,7 @@ def stitch_step_local(
     walk_block: int = 1024,
     rng: str = "caller",
     seed: Optional[int] = None,
+    tally: bool = True,
 ):
     """Per-shard stitch round against a local ``[shard_size, R]`` slab block.
 
@@ -350,6 +372,10 @@ def stitch_step_local(
     contribute 0 — so summing the outputs over shards (``psum`` on a mesh,
     host sum on one device) reproduces :func:`stitch_step` exactly, while
     every device holds only ``4·n·R/S`` bytes of slab.
+
+    ``tally=False`` → ``(next_contrib[W], None)``, the gather-only variant
+    (see :func:`stitch_step`): byte-identical contributions, no per-round
+    counts — the wave histograms once over its final positions.
     """
     stop = stop.astype(jnp.int32)
     use_device_rng, seed_arr = _rng_mode(rng, interpret, seed)
@@ -359,11 +385,27 @@ def stitch_step_local(
     if impl == "ref":
         if use_device_rng:
             raise ValueError('rng="device" has no jnp oracle (impl="ref")')
+        if not tally:
+            sz, R = block.shape
+            local = pos - base_arr[0]
+            owned = (local >= 0) & (local < sz)
+            li = jnp.clip(local, 0, sz - 1)
+            nxt = jnp.where(owned, block[li, bits % R], 0)
+            return nxt.astype(jnp.int32), None
         return kref.stitch_step_local_ref(pos, stop, bits, block, base_arr)
     if impl != "pallas":
         raise ValueError(f"unknown impl {impl!r}")
     W = pos.shape[0]
     sz, R = block.shape
+    if not tally:
+        wb = min(walk_block, max(8, W))
+        pos_p = _pad_to(pos, wb)
+        bits_p = seed_arr if use_device_rng else _pad_to(bits, wb)
+        nxt = _stitch_gather_local(pos_p, bits_p, base_arr,
+                                   block.reshape(-1), R, sz, walk_block=wb,
+                                   interpret=interpret,
+                                   use_device_rng=use_device_rng)
+        return nxt[:W], None
     vertex_block = min(vertex_block, max(8, sz))
     sz_pad = ((sz + vertex_block - 1) // vertex_block) * vertex_block
     walk_block = min(walk_block, max(8, W))

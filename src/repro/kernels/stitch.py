@@ -143,6 +143,62 @@ def stitch_step(
     return nxt, counts
 
 
+def _stitch_gather_kernel(
+    pos_ref, bits_ref, endpoints_ref, next_ref, *, R: int,
+    use_device_rng: bool,
+):
+    jw = pl.program_id(0)
+    pos = pos_ref[...]
+    slot = _slot_bits(bits_ref, jw, pos.shape, use_device_rng) % R
+    nxt = jnp.take(endpoints_ref[...], pos * R + slot, axis=0)
+    next_ref[...] = nxt.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("R", "walk_block", "interpret", "use_device_rng"),
+)
+def stitch_gather(
+    pos: jnp.ndarray,        # int32[W] — current vertex per walk
+    bits: jnp.ndarray,       # int32[W] — slot bits; int32[1] seed in device-rng mode
+    endpoints: jnp.ndarray,  # int32[n · R] — flat walk-segment endpoint slab
+    R: int,
+    walk_block: int = DEFAULT_WALK_BLOCK,
+    interpret: bool = True,
+    use_device_rng: bool = False,
+):
+    """Gather-only stitch round → ``next_pos int32[W]``.
+
+    The tally-free twin of :func:`stitch_step` for callers that defer the
+    histogram to one final pass over the wave's end positions (the
+    scheduler's fused ``lax.scan`` wave): no per-round counts output means
+    a lean scan carry and a 1-D grid (walk blocks only). The slot draw is
+    identical to :func:`stitch_step`'s (same ``_slot_bits`` per walk
+    block), so the gathered positions are byte-identical.
+    """
+    (W,) = pos.shape
+    if W % walk_block != 0:
+        raise ValueError(f"W={W} not a multiple of {walk_block}")
+    nR = endpoints.shape[0]
+    grid = (W // walk_block,)
+    kernel = functools.partial(
+        _stitch_gather_kernel, R=R, use_device_rng=use_device_rng)
+    bits_spec = (pl.BlockSpec((1,), lambda jw: (0,)) if use_device_rng
+                 else pl.BlockSpec((walk_block,), lambda jw: (jw,)))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((walk_block,), lambda jw: (jw,)),        # pos
+            bits_spec,                                            # bits | seed
+            pl.BlockSpec((nR,), lambda jw: (0,)),                 # endpoints
+        ],
+        out_specs=pl.BlockSpec((walk_block,), lambda jw: (jw,)),
+        out_shape=jax.ShapeDtypeStruct((W,), jnp.int32),
+        interpret=interpret,
+    )(pos, bits, endpoints)
+
+
 def _stitch_local_kernel(
     pos_ref, stop_ref, bits_ref, base_ref, block_ref,
     counts_ref, next_ref, *, vertex_block: int, R: int, shard_size: int,
@@ -172,6 +228,68 @@ def _stitch_local_kernel(
     lb = jnp.where((stop > 0) & owned, local - v0, -1)
     onehot = lb[:, None] == jnp.arange(vertex_block)[None, :]   # [BW, BV]
     counts_ref[...] += onehot.sum(axis=0).astype(jnp.int32)
+
+
+def _stitch_gather_local_kernel(
+    pos_ref, bits_ref, base_ref, block_ref, next_ref, *, R: int,
+    shard_size: int, use_device_rng: bool,
+):
+    jw = pl.program_id(0)
+    pos = pos_ref[...]
+    local = pos - base_ref[0]
+    owned = (local >= 0) & (local < shard_size)
+    slot = _slot_bits(bits_ref, jw, pos.shape, use_device_rng) % R
+    li = jnp.clip(local, 0, shard_size - 1)
+    nxt = jnp.take(block_ref[...], li * R + slot, axis=0)
+    next_ref[...] = jnp.where(owned, nxt, 0).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("R", "shard_size", "walk_block", "interpret",
+                     "use_device_rng"),
+)
+def stitch_gather_local(
+    pos: jnp.ndarray,        # int32[W] — current *global* vertex per walk
+    bits: jnp.ndarray,       # int32[W] — slot bits; int32[1] seed in device-rng mode
+    base: jnp.ndarray,       # int32[1] — first global vertex this shard owns
+    block: jnp.ndarray,      # int32[shard_size · R] — this shard's flat slab block
+    R: int,
+    shard_size: int,
+    walk_block: int = DEFAULT_WALK_BLOCK,
+    interpret: bool = True,
+    use_device_rng: bool = False,
+):
+    """Gather-only per-shard stitch round → ``next_contrib int32[W]``.
+
+    The tally-free twin of :func:`stitch_step_local` (see
+    :func:`stitch_gather`): owned walks gather from the local block, the
+    rest contribute the additive identity 0, and the per-round tally is
+    simply not computed — the wave histograms once over final positions.
+    """
+    (W,) = pos.shape
+    if W % walk_block != 0:
+        raise ValueError(f"W={W} not a multiple of {walk_block}")
+    szR = block.shape[0]
+    grid = (W // walk_block,)
+    kernel = functools.partial(
+        _stitch_gather_local_kernel, R=R, shard_size=shard_size,
+        use_device_rng=use_device_rng)
+    bits_spec = (pl.BlockSpec((1,), lambda jw: (0,)) if use_device_rng
+                 else pl.BlockSpec((walk_block,), lambda jw: (jw,)))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((walk_block,), lambda jw: (jw,)),        # pos
+            bits_spec,                                            # bits | seed
+            pl.BlockSpec((1,), lambda jw: (0,)),                  # base
+            pl.BlockSpec((szR,), lambda jw: (0,)),                # slab block
+        ],
+        out_specs=pl.BlockSpec((walk_block,), lambda jw: (jw,)),
+        out_shape=jax.ShapeDtypeStruct((W,), jnp.int32),
+        interpret=interpret,
+    )(pos, bits, base, block)
 
 
 @functools.partial(

@@ -39,9 +39,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import theory
+from repro.distributed.runtime import record_wave_trace
 from repro.graph.csr import CSRGraph, uniform_successor
 from repro.kernels import ops
 from repro.query.index import WalkIndex
+
+# Donating the walk-state operands lets XLA write wave outputs into the
+# dead input buffers; when a buffer's shape/layout doesn't match any output
+# jax emits a UserWarning per compile. That mismatch is expected here (the
+# tally output is [Q+1, n], the donated operands are [W]) and harmless —
+# silence exactly that message, nothing else.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,6 +183,138 @@ def _plain_steps(
     (pos, _), _ = jax.lax.scan(
         step, (pos, jnp.int32(0)), jax.random.split(key, num_steps))
     return pos
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveSpec:
+    """Static geometry of one compiled scheduler wave program — the AOT
+    ladder cache key (:class:`repro.distributed.runtime.WaveProgramCache`).
+
+    ``(W, Q)`` are the *bucket* shapes (walk slots / query slots the
+    operands are padded to), ``(S, sz)`` the shard granularity of the
+    eviction mask (``S=1, sz=n`` for a dense slab — the mask never flips),
+    and ``q_max`` the static stitch-round budget the ``lax.scan`` runs.
+    Everything that changes the traced Python body is in here; arrays
+    (slab, graph, walk state) are operands, so two schedulers with equal
+    specs share one executable.
+    """
+
+    n: int               # graph vertices (tally bins per query row)
+    R: int               # segments per vertex
+    L: int               # segment length
+    q_max: int           # stitch rounds (lax.scan length)
+    S: int               # shards (eviction-mask entries)
+    sz: int              # shard size (n for dense)
+    W: int               # walk-slot bucket
+    Q: int               # query-slot bucket
+    p_T: float           # geometric stop probability (baked into lengths)
+    impl: str            # stitch backend: xla | pallas | ref
+    tally_impl: str      # histogram backend: ref | sort | pallas | auto
+    donate: bool         # donate walk-state operands to the executable
+
+
+def wave_prep(
+    row_ptr: jnp.ndarray,
+    col_idx: jnp.ndarray,
+    deg: jnp.ndarray,
+    start: jnp.ndarray,          # int32[W] — pinned start vertex (PPR)
+    uniform: jnp.ndarray,        # bool[W]  — True → uniform random start
+    t_cap: jnp.ndarray,          # int32[W] — per-walk truncation cap
+    key: jax.Array,
+    *,
+    n: int,
+    L: int,
+    p_T: float,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Shared wave prologue: starts, lengths, residual steps, slot offsets.
+
+    One definition so every dispatch path (fused, mesh, legacy host loop)
+    consumes the *same* key stream — the byte-identity contract across
+    paths reduces to "same prologue, same rounds".
+    Returns ``(pos int32[W], q int32[W], s0 int32[W])``.
+    """
+    W = start.shape[0]
+    k_start, k_tau, k_walk = jax.random.split(key, 3)
+    pos0 = jnp.where(
+        uniform,
+        jax.random.randint(k_start, (W,), 0, n, dtype=jnp.int32),
+        start,
+    )
+    tau = sample_walk_lengths(k_tau, W, p_T, t_cap)
+    k_res, k_slot = jax.random.split(k_walk)
+    q = tau // L
+    pos = _plain_steps(row_ptr, col_idx, deg, pos0, tau % L, k_res, L)
+    s0 = jax.random.randint(k_slot, pos.shape, 0, 1 << 30, jnp.int32)
+    return pos, q, s0
+
+
+def build_wave_program(spec: WaveSpec):
+    """One fused, jitted wave program for ``spec``: prologue + ``lax.scan``
+    over stitch rounds + one final histogram — a single device dispatch
+    where the legacy sharded host loop paid ``S × q_max`` of them.
+
+    Signature of the returned program::
+
+        wave(slab_flat, row_ptr, col_idx, deg,
+             start, uniform, qid, t_cap, key_data, lost) -> int32[Q, n]
+
+    ``slab_flat`` is the flat endpoint slab — the dense ``[n, R]`` slab, or
+    the sharded index's stacked blocks ``[S·sz, R]`` flattened (row-padded;
+    walk positions are graph vertices < n ≤ S·sz, so padding rows are never
+    gathered). Because every walk is owned by exactly one shard and the
+    other shards contribute the additive identity, gathering from the
+    stacked slab is *bit-identical* to the per-shard masked-gather-and-sum
+    the host loop runs — which is what lets one program serve both the
+    gathered and the sharded single-device paths.
+
+    ``lost`` is the bool[S] eviction mask: a walk that still needs a gather
+    while sitting in a lost shard's endpoint range — or whose final vertex
+    lands in one — dies (position frozen, routed to the ``Q`` discard row).
+    All-False masks leave the program bit-identical to an unmasked one.
+
+    With ``spec.donate`` the walk-state operands (start / uniform / qid /
+    t_cap / lost) are donated — they are dead after the prologue, so XLA
+    may reuse their buffers instead of round-tripping fresh allocations
+    every wave. ``key_data`` is never donated (callers re-derive it from a
+    live key across fault-supervision retries).
+    """
+    n, R, L, Q, S, sz = spec.n, spec.R, spec.L, spec.Q, spec.S, spec.sz
+
+    def wave(slab_flat, row_ptr, col_idx, deg,
+             start, uniform, qid, t_cap, key_data, lost):
+        record_wave_trace(spec)   # executes while tracing, not per call
+        key = jax.random.wrap_key_data(key_data, impl="threefry2x32")
+        pos, q, s0 = wave_prep(row_ptr, col_idx, deg, start, uniform,
+                               t_cap, key, n=n, L=L, p_T=spec.p_T)
+        alive = jnp.ones(pos.shape, bool)
+
+        def round_fn(carry, j):
+            pos, alive = carry
+            alive = alive & ~(lost[jnp.clip(pos // sz, 0, S - 1)] & (j < q))
+            if spec.impl == "xla":
+                nxt = jnp.take(slab_flat, pos * R + (s0 + j) % R, axis=0)
+            else:
+                # gather-only stitch kernel: the per-round tally is not
+                # computed at all (the wave histograms once, below).
+                nxt, _ = ops.stitch_step(
+                    pos, (q == j).astype(jnp.int32), s0 + j,
+                    slab_flat.reshape(-1, R), n, impl=spec.impl,
+                    tally=False)
+            pos = jnp.where((j < q) & alive, nxt, pos)
+            return (pos, alive), None
+
+        if spec.q_max > 0:
+            (pos, alive), _ = jax.lax.scan(
+                round_fn, (pos, alive),
+                jnp.arange(spec.q_max, dtype=jnp.int32))
+        alive = alive & ~lost[jnp.clip(pos // sz, 0, S - 1)]
+        qid_eff = jnp.where(alive, qid, Q)   # dead walks → discard bin
+        counts = ops.frog_count(pos + qid_eff * n, (Q + 1) * n,
+                                impl=spec.tally_impl)
+        return counts.reshape(Q + 1, n)[:Q]
+
+    donate = (4, 5, 6, 7, 9) if spec.donate else ()
+    return jax.jit(wave, donate_argnums=donate)
 
 
 def walk_wave(

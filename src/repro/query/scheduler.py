@@ -104,16 +104,51 @@ from repro.config import warn_deprecated
 from repro.core import theory
 from repro.distributed.faults import (FaultEvent, FaultInjector, ShardFault,
                                       WaveFailedError, WaveTimeout)
-from repro.distributed.runtime import ShardRuntime
+from repro.distributed.runtime import ShardRuntime, record_wave_trace
 from repro.graph.csr import CSRGraph
 from repro.kernels import ops
-from repro.query.engine import (QueryPlan, _plain_steps, plan_query,
-                                sample_walk_lengths)
+from repro.query.engine import (QueryPlan, WaveSpec, build_wave_program,
+                                plan_query, wave_prep)
 from repro.query.index import ShardedWalkIndex, WalkIndex
 
 # A "clean" wave more than this factor above the EMA is clamped before the
 # fold — one GC pause or page-fault storm must not trip SLO rejections.
 _EMA_OUTLIER_CLAMP = 4.0
+
+
+def _topk_stable(scores: np.ndarray, k: int) -> np.ndarray:
+    """First ``k`` indices of ``np.argsort(-scores, kind="stable")`` without
+    sorting all ``n`` scores.
+
+    This is the per-``poll()`` hot path: every anytime :meth:`partial`
+    snapshot ranks the accumulated stop counts, and the full n-element
+    argsort was the serving-handle overhead. Two strategies:
+
+    * **sparse** — serving count vectors have support bounded by the
+      walks executed (≪ n in the paper's regime), so when every nonzero
+      entry is positive and the support is small, a stable sort of just
+      the support reproduces the full sort's head; entries outside the
+      support are exact zeros, whose tie order under the full stable
+      argsort is ascending index — the pad.
+    * **dense** — ``np.partition`` finds the k-th largest in O(n); the
+      candidate set ``scores >= kth`` is a superset of the stable top-k
+      (it includes every boundary tie), and a stable descending sort of
+      just the candidates reproduces the full sort's relative order.
+    """
+    n = scores.shape[0]
+    if k >= n:
+        return np.argsort(-scores, kind="stable")[:k]
+    nz = np.flatnonzero(scores)
+    if nz.size <= n >> 2 and (nz.size == 0 or scores[nz].min() > 0):
+        top = nz[np.argsort(-scores[nz], kind="stable")][:k]
+        if top.size == k:
+            return top
+        pad = np.setdiff1d(np.arange(min(n, k + nz.size)),
+                           nz)[:k - top.size]
+        return np.concatenate([top, pad])
+    kth = np.partition(scores, n - k)[n - k]
+    cand = np.flatnonzero(scores >= kth)
+    return cand[np.argsort(-scores[cand], kind="stable")][:k]
 
 
 @dataclasses.dataclass
@@ -292,7 +327,16 @@ class QueryScheduler:
         max_retries: int = 2,
         backoff_base_s: float = 0.02,
         backoff_max_s: float = 0.5,
+        sharded_dispatch: str = "fused",
+        donate_wave_buffers: bool = True,
+        walk_buckets: Optional[Tuple[int, ...]] = None,
+        query_buckets: Optional[Tuple[int, ...]] = None,
+        aot_warmup: bool = False,
     ):
+        if sharded_dispatch not in ("fused", "loop"):
+            raise ValueError(
+                f"sharded_dispatch must be 'fused' or 'loop', got "
+                f"{sharded_dispatch!r}")
         self.g = g
         self.index = index
         self.max_walks = max_walks
@@ -301,6 +345,18 @@ class QueryScheduler:
         self.p_T = p_T
         self.impl = impl
         self.tally_impl = tally_impl
+        self.donate_wave_buffers = donate_wave_buffers
+        # AOT wave-program ladder: waves run at the smallest bucket shape
+        # ≥ the allocation, so the set of compiled programs is fixed up
+        # front (hyadmin-style per-batch-size wrappers) — a shifting query
+        # mix re-buckets instead of retracing. The top bucket is always
+        # the full (max_walks, max_queries) shape.
+        self._walk_ladder = self._normalize_buckets(
+            walk_buckets, max_walks, "walk_buckets",
+            floor=max(1, max_walks // 8))
+        self._query_ladder = self._normalize_buckets(
+            query_buckets, max_queries, "query_buckets", floor=1)
+        self._wave_fns: Dict[Tuple[int, int], object] = {}
         self.queue: List[_Queued] = []
         self.active: Dict[int, _Active] = {}
         self.finished: List[QueryResult] = []
@@ -329,6 +385,7 @@ class QueryScheduler:
         self._lost = np.zeros(
             index.num_shards if isinstance(index, ShardedWalkIndex) else 1,
             bool)
+        self._placed_blocks = None
         if isinstance(index, ShardedWalkIndex):
             self.runtime = (runtime if runtime is not None
                             else ShardRuntime.acquire(index.num_shards))
@@ -336,87 +393,132 @@ class QueryScheduler:
                 raise ValueError(
                     f"runtime has {self.runtime.num_shards} shards, index "
                     f"has {index.num_shards}")
+            self._S = index.num_shards
+            self._sz = index.shard_size
+            # stacked blocks flattened = the row-padded dense slab. Walk
+            # positions are graph vertices < n ≤ S·sz, so the fused wave's
+            # gathers never touch the padding rows — which is what makes
+            # one program byte-identical to the per-shard host loop.
+            self._slab_flat = jnp.asarray(
+                index.blocks.reshape(self._S * self._sz, -1)).reshape(-1)
             if self.runtime.is_mesh:
-                self._wave = self._build_mesh_wave()
+                self.dispatch = "mesh"
+                # kept as an attribute so tests can assert the per-device
+                # placement (each device holds exactly one [shard_size, R]
+                # block — 4nR/S bytes of slab, never the whole thing).
+                self._placed_blocks = self.runtime.place_sharded(
+                    jnp.asarray(index.blocks))
             else:
-                self._wave = self._build_loop_wave()
+                self.dispatch = sharded_dispatch   # "fused" | legacy "loop"
         else:
             self.runtime = runtime
-            self._wave = self._build_gathered_wave()
+            self.dispatch = "gathered"   # the fused program at S=1
+            self._S, self._sz = 1, g.n
+            self._slab_flat = jnp.asarray(index.endpoints).reshape(-1)
+        if aot_warmup:
+            self.warm_ladder()
 
-    # --- device programs (each compiled once) ----------------------------
+    # --- device programs (one per ladder bucket, compiled AOT or lazily) --
 
     @property
     def _q_max(self) -> int:
         return self.max_steps // self.index.segment_len
 
-    def _wave_prep(self, start, uniform, t_cap, key):
-        """Shared wave prologue: starts, lengths, residual steps, slot
-        offsets — one definition so the gathered, mesh, and host-loop waves
-        consume the *same* key stream and agree byte-for-byte."""
-        g, W = self.g, self.max_walks
-        L = self.index.segment_len
-        k_start, k_tau, k_walk = jax.random.split(key, 3)
-        pos0 = jnp.where(
-            uniform,
-            jax.random.randint(k_start, (W,), 0, g.n, dtype=jnp.int32),
-            start,
-        )
-        tau = sample_walk_lengths(k_tau, W, self.p_T, t_cap)
-        k_res, k_slot = jax.random.split(k_walk)
-        q = tau // L
-        pos = _plain_steps(g.row_ptr, g.col_idx, g.out_deg, pos0, tau % L,
-                           k_res, L)
-        s0 = jax.random.randint(k_slot, pos.shape, 0, 1 << 30, jnp.int32)
-        return pos, q, s0
+    @staticmethod
+    def _normalize_buckets(buckets: Optional[Tuple[int, ...]], cap: int,
+                           name: str, floor: int) -> Tuple[int, ...]:
+        """Validates a user ladder (or derives the default: ``cap`` and its
+        halvings down to ``floor``). The full shape ``cap`` is always a
+        member — the top bucket must fit a fully-allocated wave."""
+        if buckets is None:
+            out = {cap}
+            b = cap
+            while b // 2 >= floor:
+                b //= 2
+                out.add(b)
+            return tuple(sorted(out))
+        ladder = sorted(set(int(b) for b in buckets))
+        if not ladder or ladder[0] < 1 or ladder[-1] > cap:
+            raise ValueError(
+                f"{name} must be within [1, {cap}], got {buckets!r}")
+        if ladder[-1] != cap:
+            ladder.append(cap)
+        return tuple(ladder)
 
-    def _build_gathered_wave(self):
-        """Single-device wave against the dense slab.
+    @staticmethod
+    def _bucket(ladder: Tuple[int, ...], demand: int) -> int:
+        """Smallest ladder bucket ≥ demand (the ladder top bounds demand)."""
+        for b in ladder:
+            if b >= demand:
+                return b
+        return ladder[-1]
 
-        Structurally the one-shard case of the sharded waves: the same
-        :meth:`_wave_prep` prologue and :meth:`_stitch_rounds` loop, with
-        the whole slab as the (only) shard's block — which is what makes
-        the byte-identical gathered-vs-sharded contract hold by
-        construction rather than by parallel-edit discipline.
-        """
-        index = self.index
-        n, Q = self.g.n, self.max_queries
-        R, impl = index.segments_per_vertex, self.impl
-        endpoints_flat = index.endpoints.reshape(-1)
+    def _spec(self, W_b: int, Q_b: int) -> WaveSpec:
+        return WaveSpec(
+            n=self.g.n, R=self.index.segments_per_vertex,
+            L=self.index.segment_len, q_max=self._q_max,
+            S=self._S, sz=self._sz, W=W_b, Q=Q_b, p_T=self.p_T,
+            impl=self.impl, tally_impl=self.tally_impl,
+            donate=self.donate_wave_buffers)
 
-        def wave(start, uniform, qid, t_cap, key):
-            pos, q, s0 = self._wave_prep(start, uniform, t_cap, key)
+    def _wave_for(self, W_b: int, Q_b: int):
+        """The wave callable for one ladder bucket, built on first use and
+        cached — ``wave(start, uniform, qid, t_cap, key, lost) ->
+        int32[Q_b, n]`` with every operand at bucket shape."""
+        fn = self._wave_fns.get((W_b, Q_b))
+        if fn is None:
+            if self.dispatch == "mesh":
+                fn = self._build_mesh_wave(W_b, Q_b)
+            elif self.dispatch == "loop":
+                fn = self._build_loop_wave(W_b, Q_b)
+            else:
+                fn = self._build_fused_wave(W_b, Q_b)
+            self._wave_fns[(W_b, Q_b)] = fn
+        return fn
 
-            def round_fn(pos, j):
-                if impl == "xla":
-                    return jnp.take(endpoints_flat,
-                                    pos * R + (s0 + j) % R, axis=0)
-                # fused stitch kernel; its per-round tally is discarded —
-                # the wave tallies once over final positions below.
-                nxt, _ = ops.stitch_step(
-                    pos, (q == j).astype(jnp.int32), s0 + j,
-                    index.endpoints, n, impl=impl)
-                return nxt
+    def warm_ladder(self) -> int:
+        """AOT-compiles the whole ladder: one dummy wave per (walk-bucket,
+        query-bucket) pair, so serving never traces mid-wave — an
+        admission-driven change of query mix re-buckets into a warm
+        executable. Scheduler state (key stream, EMA, counters) is
+        untouched. Returns the number of programs warmed."""
+        key = jax.random.PRNGKey(0)   # shapes drive compilation, not bits
+        count = 0
+        for W_b in self._walk_ladder:
+            for Q_b in self._query_ladder:
+                wave = self._wave_for(W_b, Q_b)
+                wave(jnp.zeros(W_b, jnp.int32), jnp.zeros(W_b, bool),
+                     jnp.full(W_b, Q_b, jnp.int32),
+                     jnp.zeros(W_b, jnp.int32), key,
+                     jnp.asarray(self._lost))
+                count += 1
+        return count
 
-            pos, _ = self._stitch_rounds(pos, q, round_fn)
-            # one histogram for the whole wave: vertex id offset by the
-            # walk's query slot; row Q is the idle-slot discard bin.
-            # ``tally_impl``: "ref" (XLA scatter-add — fastest on CPU) or
-            # "sort" (segment counts — the TPU-friendly scatter-free path).
-            counts = ops.frog_count(pos + qid * n, (Q + 1) * n,
-                                    impl=self.tally_impl)
-            return counts.reshape(Q + 1, n)[:Q]
+    def _build_fused_wave(self, W_b: int, Q_b: int):
+        """The fused single-dispatch wave (gathered and sharded host-side
+        serving): prologue + ``lax.scan`` over stitch rounds + one
+        histogram, compiled once per :class:`WaveSpec` in the process-wide
+        :meth:`ShardRuntime.wave_cache` — replicas over the same slab
+        geometry share the executable (slab and graph arrays are
+        operands, not closures)."""
+        prog = ShardRuntime.wave_cache().get_or_build(
+            self._spec(W_b, Q_b), build_wave_program)
+        g = self.g
 
-        fn = jax.jit(wave)
-        # a dense slab has no shard granularity, so the eviction mask is
-        # accepted (uniform wave signature) and ignored.
-        return lambda start, uniform, qid, t_cap, key, lost: np.asarray(
-            fn(start, uniform, qid, t_cap, key))
+        def wave(start, uniform, qid, t_cap, key, lost):
+            return np.asarray(prog(
+                self._slab_flat, g.row_ptr, g.col_idx, g.out_deg,
+                start, uniform, qid, t_cap,
+                ShardRuntime.key_data(key), lost))
+
+        return wave
 
     def _shard_round(self, block_flat, base, pos, q, s0, j):
         """One stitch round against one shard's slab block: owned walks
         gather their next endpoint, everyone else contributes the additive
-        identity — results sum across shards (psum / host sum)."""
+        identity — results sum across shards (psum / host sum). Fully
+        traced-``j`` compatible, so it runs under the mesh wave's
+        ``lax.scan`` as well as the legacy unrolled host loop."""
         R = self.index.segments_per_vertex
         sz = self.index.shard_size
         if self.impl == "xla":
@@ -426,19 +528,20 @@ class QueryScheduler:
             li = jnp.clip(local, 0, sz - 1)
             nxt = jnp.take(block_flat, li * R + slot, axis=0)
             return jnp.where(mine & (j < q), nxt, 0)
-        # fused local-index stitch kernel ("pallas" | "ref"): same masked
-        # gather + shard-local tally in one pass; the per-round tally is
-        # discarded here (the wave tallies once over final positions).
+        # gather-only local-index stitch kernel ("pallas" | "ref"): the
+        # wave tallies once over final positions, so the per-round tally
+        # is not computed at all (tally=False).
         nxt, _ = ops.stitch_step_local(
             pos, (q == j).astype(jnp.int32), s0 + j,
-            block_flat.reshape(sz, R), base, impl=self.impl)
+            block_flat.reshape(sz, R), base, impl=self.impl, tally=False)
         return jnp.where(j < q, nxt, 0)
 
-    def _shard_tally(self, pos, qid, base):
+    def _shard_tally(self, pos, qid, base, Q):
         """Shard-local per-query-slot histogram: walks whose final vertex
         this shard owns land in its ``[Q, shard_size]`` bins; the rest
-        (other shards' walks + idle slots via ``qid == Q``) are discarded."""
-        Q = self.max_queries
+        (other shards' walks + idle slots via ``qid == Q``) are discarded.
+        ``Q`` is the wave's *query-slot bucket* (row count), not
+        ``max_queries`` — ladder waves tally at bucket shape."""
         sz = self.index.shard_size
         local = pos - base
         mine = (local >= 0) & (local < sz)
@@ -450,7 +553,9 @@ class QueryScheduler:
     def _stitch_rounds(self, pos, q, round_fn, lost_of=None):
         """Applies ``q_max`` stitch rounds where ``round_fn(pos, j)`` sums
         per-shard contributions; stopped walks (``j ≥ q``) keep their
-        position. Shared by the gathered, mesh, and host-loop waves.
+        position. This is the legacy *unrolled* round loop, kept under the
+        ``sharded_dispatch="loop"`` path as the reference the fused
+        ``lax.scan`` waves are byte-compared against.
 
         ``lost_of(pos) -> bool[W]`` marks walks sitting in an evicted
         shard's endpoint range. A walk that still needs a gather from a
@@ -473,50 +578,66 @@ class QueryScheduler:
             alive = alive & ~lost_of(pos)
         return pos, alive
 
-    def _build_mesh_wave(self):
+    def _build_mesh_wave(self, W_b: int, Q_b: int):
         """Sharded wave: one ``shard_map`` over the runtime's vertex axis.
 
         Device ``s`` holds only slab block ``s`` (``in_specs=P(axis)``) and
         its ``[Q, shard_size]`` tally rows (``out_specs=P(axis)``); walk
         state is replicated and advanced identically on every device, with
-        the per-round gather contribution reduced by ``psum``.
+        the per-round gather contribution reduced by ``psum`` inside one
+        ``lax.scan`` over the stitch rounds — one dispatch per wave, same
+        as the fused single-device program. Walk-state operands are
+        donated. Mesh programs close over the (unhashable) mesh, so they
+        cache per-scheduler in ``_wave_fns``, not in the process-wide
+        ladder cache.
         """
-        rt, index = self.runtime, self.index
-        Q = self.max_queries
+        rt, index, g = self.runtime, self.index, self.g
+        Q = Q_b
         S = rt.num_shards
         sz = index.shard_size
         ax = rt.axis_name
+        spec = self._spec(W_b, Q_b)
 
         def body(blocks, start, uniform, qid, t_cap, key_data, lost):
+            record_wave_trace(spec)
             block_flat = blocks[0].reshape(-1)
             base = jax.lax.axis_index(ax) * sz
             key = jax.random.wrap_key_data(key_data, impl="threefry2x32")
-            pos, q, s0 = self._wave_prep(start, uniform, t_cap, key)
+            pos, q, s0 = wave_prep(
+                g.row_ptr, g.col_idx, g.out_deg, start, uniform, t_cap,
+                key, n=g.n, L=index.segment_len, p_T=self.p_T)
+            alive = jnp.ones(pos.shape, bool)
 
-            def round_fn(pos, j):
+            def round_fn(carry, j):
+                pos, alive = carry
+                # an evicted shard's range is masked identically on every
+                # device (``lost`` is replicated) — the mesh simulates
+                # loss; real device loss fails over to the fused path.
+                alive = alive & ~(lost[jnp.clip(pos // sz, 0, S - 1)]
+                                  & (j < q))
                 contrib = self._shard_round(block_flat, base, pos, q, s0, j)
                 # every walk is owned by exactly one shard; stopped walks
-                # contribute 0 everywhere and are restored by the caller.
-                return jax.lax.psum(contrib, ax)
+                # contribute 0 everywhere and keep their position.
+                nxt = jax.lax.psum(contrib, ax)
+                pos = jnp.where((j < q) & alive, nxt, pos)
+                return (pos, alive), None
 
-            # an evicted shard's range is masked identically on every
-            # device (``lost`` is replicated) — the mesh simulates loss;
-            # real device loss is handled by failover to the host loop.
-            lost_of = lambda p: lost[jnp.clip(p // sz, 0, S - 1)]
-            pos, alive = self._stitch_rounds(pos, q, round_fn, lost_of)
+            if self._q_max > 0:
+                (pos, alive), _ = jax.lax.scan(
+                    round_fn, (pos, alive),
+                    jnp.arange(self._q_max, dtype=jnp.int32))
+            alive = alive & ~lost[jnp.clip(pos // sz, 0, S - 1)]
             qid_eff = jnp.where(alive, qid, Q)   # dead walks → discard bin
-            return self._shard_tally(pos, qid_eff, base)[None]
+            return self._shard_tally(pos, qid_eff, base, Q)[None]
 
         # check_vma=False: the fused stitch backends lower through
         # pallas_call (no replication rule), and the body mixes replicated
-        # walk state with per-shard slab blocks by construction.
+        # walk state with per-shard slab blocks by construction. Donation
+        # skips the blocks (operand 0, reused every wave) and key_data.
+        donate = (1, 2, 3, 4, 6) if self.donate_wave_buffers else ()
         fn = rt.sharded_call(body, num_sharded=1, num_replicated=6,
-                             check_vma=False)
-        # kept as an attribute so tests can assert the per-device placement
-        # (each device holds exactly one [shard_size, R] block — 4nR/S
-        # bytes of slab, never the whole thing).
-        self._placed_blocks = blocks = rt.place_sharded(
-            jnp.asarray(self.index.blocks))
+                             check_vma=False, donate_argnums=donate)
+        blocks = self._placed_blocks
 
         def wave(start, uniform, qid, t_cap, key, lost):
             out = np.asarray(fn(blocks, start, uniform, qid, t_cap,
@@ -526,19 +647,26 @@ class QueryScheduler:
 
         return wave
 
-    def _build_loop_wave(self):
-        """Sharded wave on a single device: the runtime's host-loop
-        dispatch of the identical per-shard program — one ``[shard_size,
-        R]`` block resident per call, cross-shard sums on the host."""
-        rt, index = self.runtime, self.index
-        Q = self.max_queries
+    def _build_loop_wave(self, W_b: int, Q_b: int):
+        """Legacy sharded wave on a single device: the host-loop dispatch
+        of the per-shard program — S × q_max separate device calls per
+        wave, cross-shard sums on the host. Superseded as the default by
+        the fused single-dispatch program (``sharded_dispatch="fused"``);
+        kept selectable because it is the structural reference the fused
+        wave is byte-compared against in tests and the bench smoke."""
+        rt, index, g = self.runtime, self.index, self.g
+        Q = Q_b
         S = rt.num_shards
         sz = index.shard_size
 
-        prep = jax.jit(lambda start, uniform, t_cap, key:
-                       self._wave_prep(start, uniform, t_cap, key))
+        def _prep(start, uniform, t_cap, key):
+            return wave_prep(g.row_ptr, g.col_idx, g.out_deg, start,
+                             uniform, t_cap, key, n=g.n,
+                             L=index.segment_len, p_T=self.p_T)
+
+        prep = jax.jit(_prep)
         round_s = jax.jit(self._shard_round)
-        tally_s = jax.jit(self._shard_tally)
+        tally_s = jax.jit(self._shard_tally, static_argnums=3)
         blocks = [jnp.asarray(index.blocks[s].reshape(-1))
                   for s in range(rt.num_shards)]
 
@@ -561,7 +689,7 @@ class QueryScheduler:
             qid_eff = jnp.where(alive, qid, Q)   # dead walks → discard bin
             out = np.stack([
                 np.zeros((Q, sz), np.int32) if lost_host[s]
-                else np.asarray(tally_s(pos, qid_eff, jnp.int32(s * sz)))
+                else np.asarray(tally_s(pos, qid_eff, jnp.int32(s * sz), Q))
                 for s in range(S)])
             return out.transpose(1, 0, 2).reshape(Q, -1)[:, : self.g.n]
 
@@ -711,21 +839,33 @@ class QueryScheduler:
         return {s: w for s, w in slots.items() if w > 0}
 
     def step_wave(self) -> bool:
-        """Runs one device wave; returns False when nothing is in flight."""
+        """Runs one device wave; returns False when nothing is in flight.
+
+        The wave runs at the smallest ladder bucket that fits the
+        allocation — walk slots padded to ``W_b``, query slots *compacted*
+        (EDF allocation order) into ``[0, Q_b)`` rows and scattered back to
+        their slots on the host. Bucket choice is a pure function of
+        host-side scheduler state, so every dispatch path and replica picks
+        the same bucket — the cross-path byte-identity contract holds
+        bucket by bucket.
+        """
         self._admit()
         if not self.active:
             return False
         alloc = self._allocate()
-        W, Q = self.max_walks, self.max_queries
-        start = np.zeros(W, np.int32)
-        uniform = np.zeros(W, bool)
-        qid = np.full(W, Q, np.int32)        # default: discard bin
-        t_cap = np.zeros(W, np.int32)
+        W_b = self._bucket(self._walk_ladder, sum(alloc.values()))
+        Q_b = self._bucket(self._query_ladder, len(alloc))
+        start = np.zeros(W_b, np.int32)
+        uniform = np.zeros(W_b, bool)
+        qid = np.full(W_b, Q_b, np.int32)    # default: discard bin
+        t_cap = np.zeros(W_b, np.int32)
         cursor = 0
-        for s, w in alloc.items():
+        # ``alloc`` preserves EDF order, so compact row ci is deterministic
+        # from (deadlines, slots) alone — identical across dispatch paths.
+        for ci, (s, w) in enumerate(alloc.items()):
             a = self.active[s]
             sl = slice(cursor, cursor + w)
-            qid[sl] = s
+            qid[sl] = ci
             t_cap[sl] = a.plan.num_steps
             if a.req.kind == "ppr":
                 start[sl] = a.req.source
@@ -734,7 +874,8 @@ class QueryScheduler:
             cursor += w
 
         self._key, k_wave = jax.random.split(self._key)
-        counts, clean, dt = self._run_wave(start, uniform, qid, t_cap, k_wave)
+        counts, clean, dt = self._run_wave(start, uniform, qid, t_cap,
+                                           k_wave, W_b, Q_b)
         now = time.perf_counter()
         self._walks_allocated += sum(alloc.values())
         # EMA of measured wave time — feeds the admission budget check. The
@@ -753,11 +894,11 @@ class QueryScheduler:
             self._wave_time = (dt if self._wave_time is None
                                else 0.5 * self._wave_time + 0.5 * dt)
 
-        for s, w in alloc.items():
+        for ci, (s, w) in enumerate(alloc.items()):
             if s not in self.active:         # evicted mid-wave? impossible
                 continue                     # today, but stay defensive
             a = self.active[s]
-            row = counts[s]
+            row = counts[ci]                 # compact row → query slot
             # every surviving walk lands in exactly one tally bin, so the
             # slot's landed count is the row sum — lost walks need no extra
             # program output.
@@ -781,13 +922,20 @@ class QueryScheduler:
 
     # --- wave supervision (fault tolerance) -------------------------------
 
-    def _run_wave(self, start, uniform, qid, t_cap, k_wave):
+    def _run_wave(self, start, uniform, qid, t_cap, k_wave, W_b, Q_b):
         """Runs one wave under supervision: injector hooks fire first, the
         dispatch is retried (same key — a successful retry is byte-identical)
         on transient faults / timeouts with exponential backoff, permanent
         shard faults evict the shard and re-run degraded, and a mesh that
-        keeps failing fails over once to the host-loop dispatch. Exhausting
-        every option raises :class:`WaveFailedError` with nothing tallied.
+        keeps failing fails over once to the fused single-device dispatch.
+        Exhausting every option raises :class:`WaveFailedError` with
+        nothing tallied.
+
+        The wave callable is re-fetched per attempt (``_wave_for(W_b,
+        Q_b)``) — a failover mid-retry picks up the new dispatch path for
+        the *same* bucket — and every attempt converts the host operands
+        to fresh device buffers, so donation (the executable consumes its
+        inputs) can never poison a retry.
 
         Returns ``(counts, clean, dt)`` — ``clean`` is False for any wave
         that saw a fault, stall, retry, or eviction (the EMA skips those).
@@ -816,7 +964,8 @@ class QueryScheduler:
                         raise ShardFault(
                             f"injected transient fault (wave {wave_no}, "
                             f"attempt {attempt})", transient=True)
-                counts = self._wave(
+                wave = self._wave_for(W_b, Q_b)
+                counts = wave(
                     jnp.asarray(start), jnp.asarray(uniform),
                     jnp.asarray(qid), jnp.asarray(t_cap), k_wave,
                     jnp.asarray(self._lost))
@@ -891,10 +1040,10 @@ class QueryScheduler:
         self._readmit_queued(wave_no)
 
     def _failover_to_loop(self, wave_no: int, reason: str) -> bool:
-        """Mesh→host-loop failover: rebuilds the wave as the runtime's
-        host-loop dispatch of the identical per-shard program (byte-identical
-        answers — the PR-4 contract). One shot: a host loop has nothing
-        further to fail over to."""
+        """Mesh→single-device failover: rebuilds the wave as the fused
+        single-dispatch program over the stacked slab — byte-identical
+        answers (the PR-4 contract, now via the fused path). One shot: a
+        single-device dispatch has nothing further to fail over to."""
         if (self._failed_over
                 or not isinstance(self.index, ShardedWalkIndex)
                 or self.runtime is None or not self.runtime.is_mesh):
@@ -903,10 +1052,13 @@ class QueryScheduler:
         self.runtime = ShardRuntime(num_shards=self.runtime.num_shards,
                                     axis_name=self.runtime.axis_name,
                                     mesh=None)
-        self._wave = self._build_loop_wave()
+        self.dispatch = "fused"
+        self._wave_fns.clear()      # drop the mesh programs
+        self._placed_blocks = None
         self.fault_log.append(FaultEvent(
             kind="failover", wave=wave_no,
-            detail=f"mesh dispatch abandoned for host loop: {reason}"))
+            detail=f"mesh dispatch abandoned for single-device fused "
+                   f"dispatch: {reason}"))
         return True
 
     def _effective_walks(self) -> int:
@@ -1020,9 +1172,12 @@ class QueryScheduler:
         # walks shrink the denominator rather than biasing the estimate
         # (max() only guards the all-walks-lost corner: counts are all
         # zero there and the bound below is already inf).
-        scores = a.counts / float(max(1, a.executed))
+        # rank the integer counts (same order as the renormalized scores
+        # — a positive scalar divide preserves ranks and ties exactly)
+        # and divide only the selected head.
         k = min(a.req.k, self.g.n)
-        top = np.argsort(-scores, kind="stable")[:k]
+        top = _topk_stable(a.counts, k)
+        scores_top = a.counts[top] / float(max(1, a.executed))
         latency = now - a.t_submit
         # Early-stopped (anytime) queries carry the bound their executed
         # walks actually certify; budget-drained queries keep the plan's
@@ -1037,7 +1192,7 @@ class QueryScheduler:
                  else a.plan.epsilon_bound)
         return QueryResult(
             rid=a.req.rid, kind=a.req.kind, vertices=top,
-            scores=scores[top], num_walks=a.executed,
+            scores=scores_top, num_walks=a.executed,
             num_steps=a.plan.num_steps, waves=a.waves,
             latency_s=latency,
             epsilon_bound=bound,
@@ -1091,9 +1246,9 @@ class QueryScheduler:
                 continue
             k = min(a.req.k, self.g.n)
             if a.executed:
-                scores = a.counts / float(a.executed)
-                top = np.argsort(-scores, kind="stable")[:k]
-                vertices, top_scores = top, scores[top]
+                top = _topk_stable(a.counts, k)
+                vertices = top
+                top_scores = a.counts[top] / float(a.executed)
             else:
                 vertices = np.zeros(0, np.int64)
                 top_scores = np.zeros(0, np.float64)

@@ -654,7 +654,12 @@ class FrogWildService:
                 wave_timeout_s=scfg.wave_timeout_s,
                 max_retries=scfg.max_retries,
                 backoff_base_s=scfg.backoff_base_s,
-                backoff_max_s=scfg.backoff_max_s)
+                backoff_max_s=scfg.backoff_max_s,
+                sharded_dispatch=scfg.sharded_dispatch,
+                donate_wave_buffers=scfg.donate_wave_buffers,
+                walk_buckets=scfg.walk_buckets,
+                query_buckets=scfg.query_buckets,
+                aot_warmup=scfg.aot_warmup)
         return self._scheduler
 
     @property
