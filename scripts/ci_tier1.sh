@@ -20,10 +20,14 @@
 # gateway fault sweep — replica crash mid-query -> failover answer
 # byte-identical to the fault-free run with the sick replica
 # quarantined then restarted over the same shared slab, stall ->
-# quarantine + reroute, overload -> structured shed with Retry-After;
-# tiny sizes, no BENCH json rewrite) so a broken dispatch, surface,
-# cache, degradation, or failover change fails tier-1 instead of only
-# bench runs.
+# quarantine + reroute, overload -> structured shed with Retry-After —
+# and the incremental-refresh gate (PR 10): a 1%-window mutation
+# invalidates only a small fraction of segments, the refreshed slab is
+# byte-identical to a full rebuild at the new epoch, and an in-flight
+# query spanning the epoch commit finishes byte-identically to a
+# never-mutated service; tiny sizes, no BENCH json rewrite) so a broken
+# dispatch, surface, cache, degradation, failover, or refresh change
+# fails tier-1 instead of only bench runs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

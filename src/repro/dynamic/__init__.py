@@ -1,0 +1,62 @@
+"""Dynamic graphs: streaming edge mutations, epoch-versioned slabs, and
+incremental walk-index refresh.
+
+The frozen-graph walk index (``repro.query.index``) meets mutating graphs
+through three pieces:
+
+* :mod:`repro.dynamic.mutations` — batched edge inserts/deletes compacted
+  into a brand-new CSR per epoch (``CSRGraph.epoch``/``mutation_offset``
+  are the provenance every graph and slab manifest carries);
+* :mod:`repro.dynamic.refresh` — per-segment invalidation from the
+  build-time ``visited_blocks`` trajectory masks (intermediate hops
+  only; the start's consumption is covered exactly by the per-vertex
+  source rule), plus an incremental re-walk of the stale rows, writing
+  back exactly the stale cells, through the builders' process-cached
+  row program — graph buffers are jit operands, so successive epochs
+  re-dispatch instead of re-tracing;
+* the serving tiers (``FrogWildService.apply_mutations`` /
+  ``Gateway.apply_mutations``) — the two-epoch commit that swaps slabs
+  without stopping admission.
+
+**The staleness/epoch contract.**
+
+1. *Epochs are immutable snapshots.* Applying a :class:`MutationBatch`
+   never modifies an existing ``CSRGraph`` or slab; it produces new
+   objects at ``epoch + 1``. A slab is valid for exactly one graph epoch
+   (``WalkIndex.graph_epoch``), and loaders refuse mismatched pairs.
+2. *Invalidation is sound, possibly conservative.* A segment not marked
+   stale is **byte-identical** under the new graph: its random bits
+   depend only on ``(seed, vertex, step)``, and every vertex whose
+   out-edges it consumed kept its successor list verbatim (order
+   included). Block granularity (``segment_mask_block_size``) can only
+   over-invalidate, never under-invalidate.
+3. *Refresh equals rebuild.* ``refresh_walk_index`` walks only the rows
+   holding stale segments (writing back only the stale cells) yet
+   returns a slab byte-identical — endpoints and masks — to a
+   from-scratch build at the new epoch (tier-1 gates this).
+4. *Serving never stops.* In-flight queries pin the epoch (scheduler +
+   slab) they were admitted on and finish byte-identically to a run where
+   no mutation ever happened; new admissions land on the committed
+   ``e + 1``; the old epoch's scheduler is released when its last pinned
+   query settles.
+"""
+from repro.dynamic.mutations import (MutationBatch, MutationLog,
+                                     apply_mutations)
+from repro.dynamic.refresh import (RefreshReport, dirty_block_mask,
+                                   epoch_dir, invalidate_segments,
+                                   list_epochs, load_epoch_index,
+                                   refresh_walk_index, save_epoch_index)
+
+__all__ = [
+    "MutationBatch",
+    "MutationLog",
+    "RefreshReport",
+    "apply_mutations",
+    "dirty_block_mask",
+    "epoch_dir",
+    "invalidate_segments",
+    "list_epochs",
+    "load_epoch_index",
+    "refresh_walk_index",
+    "save_epoch_index",
+]

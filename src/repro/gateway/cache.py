@@ -65,6 +65,7 @@ class ResultCache:
         self.misses = 0
         self.insertions = 0
         self.rejected_inserts = 0    # degraded / uncertified answers refused
+        self.epoch_evictions = 0     # certificates dropped by epoch bumps
 
     @staticmethod
     def key(kind: str, k: int, source: int, epoch: int) -> CacheKey:
@@ -127,10 +128,12 @@ class ResultCache:
 
     def drop_epochs_before(self, epoch: int) -> int:
         """Evicts every key from an older graph epoch (they can never hit
-        again once the gateway's epoch moved on); returns the count."""
+        again once the gateway's epoch moved on); returns the count, also
+        accumulated in ``epoch_evictions`` (surfaced via ``stats()``)."""
         stale = [k for k in self._entries if k[3] < epoch]
         for k in stale:
             del self._entries[k]
+        self.epoch_evictions += len(stale)
         return len(stale)
 
     def clear(self) -> None:
@@ -149,5 +152,6 @@ class ResultCache:
             "misses": self.misses,
             "insertions": self.insertions,
             "rejected_inserts": self.rejected_inserts,
+            "epoch_evictions": self.epoch_evictions,
             "hit_rate": (self.hits / looked) if looked else 0.0,
         }

@@ -238,7 +238,10 @@ class Gateway:
         self.pool = pool
         self.cache = cache
         self.metrics = metrics if metrics is not None else GatewayMetrics()
-        self.epoch = 0
+        # cache/join keys carry the graph's mutation epoch: a gateway
+        # opened over an already-mutated graph starts there, and
+        # apply_mutations() keeps the two in lock-step.
+        self.epoch = int(getattr(pool.graph, "epoch", 0))
         self.hedge_after_s = hedge_after_s
         # shed when the total backlog across routable replicas exceeds
         # this many walks (default: 8 full waves per replica — deep enough
@@ -347,13 +350,41 @@ class Gateway:
         refresh hook — ROADMAP item 4 pins the epoch at query start).
         Queries already in flight keep running, but their certificates are
         refused at insert time (``min_epoch`` guard in the cache) — a
-        stale-epoch answer can never land after the epoch moved on."""
+        stale-epoch answer can never land after the epoch moved on.
+        Orphaned certificates are counted in ``metrics.epoch_orphaned``."""
         with self._lock:
             self.epoch += 1
             self._inflight.clear()
             if self.cache is not None:
-                self.cache.drop_epochs_before(self.epoch)
+                self.metrics.epoch_orphaned += (
+                    self.cache.drop_epochs_before(self.epoch))
             return self.epoch
+
+    def apply_mutations(self, batch, *, chunk: int = 1024):
+        """One mutation batch through the whole tier: compact the CSR at
+        the next epoch, incrementally refresh exactly the invalidated walk
+        segments, persist the slab under its epoch directory (when a
+        checkpoint dir is configured), commit the two-epoch swap on every
+        replica, and bump the gateway epoch so stale cached certificates
+        are orphaned (counted in ``metrics.epoch_orphaned``). In-flight
+        queries finish on their pinned old-epoch slabs, byte-identical to
+        a never-mutated run. Returns the :class:`repro.dynamic.
+        RefreshReport`.
+        """
+        from repro.dynamic import (apply_mutations as _apply,
+                                   refresh_walk_index, save_epoch_index)
+
+        self._check_open()
+        new_graph, changed = _apply(self.pool.graph, batch)
+        new_index, report = refresh_walk_index(
+            self.pool.index, new_graph, changed,
+            step_impl=self.pool.config.walk_index().step_impl, chunk=chunk)
+        directory = self.pool.config.serving.checkpoint_dir
+        if directory is not None:
+            save_epoch_index(directory, new_index)
+        self.pool.commit_epoch(new_graph, new_index)
+        self.bump_epoch()
+        return report
 
     def _check_open(self) -> None:
         if self._closed:
@@ -759,6 +790,10 @@ class Gateway:
         supervision** state + cache."""
         snap = self.metrics.snapshot()
         snap["epoch"] = self.epoch
+        snap["graph_epoch"] = int(getattr(self.pool.graph, "epoch", 0))
+        snap["retiring_epochs"] = sorted({
+            e for r in self.pool.replicas if not r.closed
+            for e in getattr(r, "retiring_epochs", [])})
         snap["inflight_keys"] = len(self._inflight)
         snap["closed"] = self._closed
         snap["draining"] = self._draining

@@ -49,6 +49,9 @@ class GatewayMetrics:
         self.hedges_won = 0          # … where the hedge certified first
         self.sheds = 0               # submits refused by overload/breakers
         self.timeouts = 0            # request deadlines expired (HTTP 504)
+        # --- dynamic-graph counter (PR 10) ---
+        self.epoch_orphaned = 0      # cached certificates dropped by epoch
+                                     # bumps (mutation commits)
         # (t_done, latency_s) pairs, newest last
         self._window: Deque[Tuple[float, float]] = collections.deque(
             maxlen=_WINDOW)
@@ -100,6 +103,7 @@ class GatewayMetrics:
             "hedges_won": self.hedges_won,
             "sheds": self.sheds,
             "timeouts": self.timeouts,
+            "epoch_orphaned": self.epoch_orphaned,
             "hit_rate": (self.cache_hits / self.requests
                          if self.requests else 0.0),
             "join_rate": (self.joins / self.requests

@@ -110,6 +110,7 @@ class ReplicaPool:
         # for a sharded layout, the same per-shard blocks) — no N-fold
         # duplication, asserted in tests via object identity.
         self._index = index = primary.ensure_index()
+        self._graph = primary.graph
         self._mesh = mesh
         self.replicas: List[FrogWildService] = [primary]
         for _ in range(num_replicas - 1):
@@ -143,7 +144,7 @@ class ReplicaPool:
 
     @property
     def graph(self) -> CSRGraph:
-        return self.replicas[0].graph
+        return self._graph
 
     @property
     def config(self) -> RuntimeConfig:
@@ -153,6 +154,27 @@ class ReplicaPool:
     def index(self):
         """The ONE shared walk-index slab every replica serves from."""
         return self._index
+
+    def commit_epoch(self, graph: CSRGraph, index) -> int:
+        """Commits a new (graph, slab) epoch to every live replica.
+
+        Replica 0 commits first and its ``ensure_index()`` result — the
+        slab normalized to the serving layout (re-sharded at most once) —
+        is what every other replica receives, so all replicas keep sharing
+        ONE set of slab arrays and :meth:`restart_replica`'s object-
+        identity assertion stays true across epochs. In-flight queries on
+        any replica keep draining on their pinned old-epoch schedulers.
+        """
+        self._check_open()
+        with self._state_lock:
+            epoch = self.replicas[0].commit_epoch(graph, index)
+            shared = self.replicas[0].ensure_index()
+            for r in self.replicas[1:]:
+                if not r.closed:
+                    r.commit_epoch(graph, shared)
+            self._index = shared
+            self._graph = graph
+            return epoch
 
     # --- supervised wave driving -----------------------------------------
 

@@ -31,6 +31,12 @@ class CSRGraph:
       row_ptr:  int32[n + 1]  — CSR offsets into ``col_idx``.
       col_idx:  int32[nnz]    — destination vertex of each out-edge.
       out_deg:  int32[n]      — ``row_ptr[1:] - row_ptr[:-1]`` (cached).
+      epoch:    mutation epoch this CSR compacts (0 = never mutated; each
+                applied :class:`~repro.dynamic.MutationBatch` produces a
+                new CSR at ``epoch + 1``).
+      mutation_offset: total edge mutations folded into this CSR across
+                all epochs — the mutation-log offset checkpoint manifests
+                carry so a loaded (graph, slab) pair can be cross-checked.
 
     Derived per-edge arrays (``edge_src``, ``edge_dst_shard``) are computed
     lazily and memoized on the instance: every ``frogwild_run`` / engine
@@ -45,6 +51,8 @@ class CSRGraph:
     _derived: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False
     )
+    epoch: int = 0
+    mutation_offset: int = 0
 
     @property
     def nnz(self) -> int:
@@ -129,6 +137,8 @@ class CSRGraph:
             row_ptr=np.asarray(self.row_ptr),
             col_idx=np.asarray(self.col_idx),
             out_deg=np.asarray(self.out_deg),
+            epoch=self.epoch,
+            mutation_offset=self.mutation_offset,
         )
 
 
@@ -188,19 +198,32 @@ def build_csr(
 
 def save_graph(path: str, g: CSRGraph) -> str:
     """Persists a graph as a single ``.npz`` (the service-facade ingestion
-    format — ``FrogWildService.open`` accepts this path directly)."""
+    format — ``FrogWildService.open`` accepts this path directly).
+
+    The manifest carries the graph's mutation ``epoch`` and
+    ``mutation_offset`` so a loaded (graph, walk-index) pair can be
+    epoch-checked — a slab built at a different epoch fails loudly at
+    ``ensure_index`` instead of silently serving stale answers.
+    """
     gn = g.to_numpy()
     np.savez_compressed(path, n=np.int64(g.n), row_ptr=gn.row_ptr,
-                        col_idx=gn.col_idx)
+                        col_idx=gn.col_idx, epoch=np.int64(g.epoch),
+                        mutation_offset=np.int64(g.mutation_offset))
     return path if path.endswith(".npz") else path + ".npz"
 
 
 def load_graph(path: str) -> CSRGraph:
-    """Restores a :func:`save_graph` ``.npz`` (degrees are re-derived)."""
+    """Restores a :func:`save_graph` ``.npz`` (degrees are re-derived).
+
+    Files written before epochs existed load at ``epoch = 0`` /
+    ``mutation_offset = 0`` — the never-mutated provenance.
+    """
     with np.load(path) as z:
         n = int(z["n"])
         row_ptr = np.asarray(z["row_ptr"], dtype=np.int64)
         col_idx = np.asarray(z["col_idx"], dtype=np.int64)
+        epoch = int(z["epoch"]) if "epoch" in z else 0
+        offset = int(z["mutation_offset"]) if "mutation_offset" in z else 0
     if row_ptr.shape != (n + 1,):
         raise ValueError(
             f"{path!r}: row_ptr has shape {row_ptr.shape}, wanted ({n + 1},)")
@@ -210,6 +233,8 @@ def load_graph(path: str) -> CSRGraph:
         row_ptr=jnp.asarray(row_ptr, dtype=jnp.int32),
         col_idx=jnp.asarray(col_idx, dtype=jnp.int32),
         out_deg=jnp.asarray(deg, dtype=jnp.int32),
+        epoch=epoch,
+        mutation_offset=offset,
     )
 
 

@@ -35,6 +35,19 @@ through the fused Pallas kernels (``step_impl="pallas"`` for the
 VMEM-resident kernel, ``"stream"`` for the HBM-streaming sorted-frog
 kernel, ``"auto"`` to pick by VMEM budget).
 
+**Per-vertex key streams (dynamic-graph contract).** A segment's
+randomness is derived per *(vertex, step)* — ``fold_in(fold_in(key, v),
+l)`` drawing ``R`` slot bits at shape ``(R,)`` — never per batch shape,
+so a row's endpoints are byte-identical whether walked in a full-shard
+build, a ``shard_map`` build, or an arbitrary row/slot subset. This is
+what lets ``repro.dynamic.refresh_walk_index`` rebuild exactly the
+invalidated segments of a mutated graph and still produce a slab
+byte-identical to a from-scratch build at the new epoch. The build scan
+additionally records, per segment, a bitmask over ``32·_MASK_WORDS``
+vertex-id blocks of every vertex whose out-edge the segment consumed —
+stored as ``visited_blocks`` (uint32[n, R, W]) — so staleness under a
+mutation batch is one vectorized bitwise check, not a re-walk.
+
 Persistence goes through ``checkpoint/`` atomic step directories, so index
 builds inherit the crash-safety and GC story of model checkpoints. A
 sharded build writes one checkpoint dir per shard (``<dir>/shard_<s>/
@@ -48,6 +61,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import os
 from typing import Dict, List, Optional, Union
 
@@ -69,6 +83,20 @@ from repro.graph.partition import partition_graph
 # WalkIndexConfig is defined in repro/config.py (the layered-config module —
 # single definition per flag) and re-exported here for back-compat.
 
+# Per-segment visited-block bitmask geometry: ``32 · _MASK_WORDS`` vertex-id
+# blocks of ``segment_mask_block_size(n)`` consecutive ids each. For
+# n ≤ 256 the blocks are single vertices (invalidation is exact); larger
+# graphs trade one conservative bit per
+# ``ceil(n / 256)`` ids for a fixed 32-byte-per-segment footprint.
+_MASK_WORDS = 8
+
+
+def segment_mask_block_size(n: int) -> int:
+    """Vertex ids per visited-block bit for an n-vertex graph (the one
+    formula shared by the index build and ``repro.dynamic`` invalidation —
+    they must agree or staleness checks would be unsound)."""
+    return max(1, -(-n // (32 * _MASK_WORDS)))
+
 
 @dataclasses.dataclass(frozen=True)
 class WalkIndex:
@@ -78,11 +106,21 @@ class WalkIndex:
       endpoints:   int32[n, R] — ``endpoints[v, r] ~ P^L(· | v)`` i.i.d.
       segment_len: L, the number of steps each stored segment advanced.
       seed:        build seed (provenance; queries use their own keys).
+      visited_blocks: uint32[n, R, _MASK_WORDS] — per-segment bitmask of
+                   the vertex-id blocks whose out-edges the segment
+                   consumed (the dynamic-graph invalidation input; None
+                   on indexes loaded from pre-epoch checkpoints).
+      graph_epoch: mutation epoch of the graph this slab was walked on.
+      mutation_offset: that graph's mutation-log offset (manifest cross-
+                   check against ``CSRGraph.mutation_offset``).
     """
 
     endpoints: jnp.ndarray
     segment_len: int
     seed: int
+    visited_blocks: Optional[np.ndarray] = None
+    graph_epoch: int = 0
+    mutation_offset: int = 0
 
     @property
     def n(self) -> int:
@@ -109,12 +147,19 @@ class ShardedWalkIndex:
                    are never gathered — walk positions are graph vertices).
       segment_len: L, steps per precomputed segment.
       seed:        build seed (provenance).
+      visited_blocks: uint32[S, shard_size, R, _MASK_WORDS] per-segment
+                   visited-block bitmasks (None for pre-epoch checkpoints).
+      graph_epoch / mutation_offset: epoch provenance of the graph this
+                   slab was walked on (see :class:`WalkIndex`).
     """
 
     blocks: np.ndarray
     n: int
     segment_len: int
     seed: int
+    visited_blocks: Optional[np.ndarray] = None
+    graph_epoch: int = 0
+    mutation_offset: int = 0
 
     @property
     def num_shards(self) -> int:
@@ -132,11 +177,17 @@ class ShardedWalkIndex:
         """Dense slab (tests / the legacy gathered serving path) — this is
         exactly the concatenation the sharded scheduler avoids."""
         S, sz, R = self.blocks.shape
+        vb = self.visited_blocks
+        if vb is not None:
+            vb = np.asarray(vb).reshape(S * sz, R, _MASK_WORDS)[: self.n]
         return WalkIndex(
             endpoints=jnp.asarray(
                 self.blocks.reshape(S * sz, R)[: self.n], jnp.int32),
             segment_len=self.segment_len,
             seed=self.seed,
+            visited_blocks=vb,
+            graph_epoch=self.graph_epoch,
+            mutation_offset=self.mutation_offset,
         )
 
 
@@ -150,21 +201,28 @@ def shard_walk_index(index: WalkIndex, num_shards: int) -> ShardedWalkIndex:
     sz = -(-n // num_shards)
     ep = np.zeros((num_shards * sz, R), np.int32)
     ep[:n] = np.asarray(index.endpoints)
+    vb = None
+    if index.visited_blocks is not None:
+        vb = np.zeros((num_shards * sz, R, _MASK_WORDS), np.uint32)
+        vb[:n] = np.asarray(index.visited_blocks)
+        vb = vb.reshape(num_shards, sz, R, _MASK_WORDS)
     return ShardedWalkIndex(
         blocks=ep.reshape(num_shards, sz, R), n=n,
         segment_len=index.segment_len, seed=index.seed,
+        visited_blocks=vb, graph_epoch=index.graph_epoch,
+        mutation_offset=index.mutation_offset,
     )
 
 
-def _segment_step(row_ptr, col_idx, deg, n, step_impl, pos, key):
+def _segment_step(row_ptr, col_idx, deg, n, step_impl, pos, bits):
     """One no-death plain walker move for a batch of segment walks.
 
     The segment walk is the p_T = 0, p_s = 1 corner of the walker
     superstep: with ``step_impl != "xla"`` it routes through the fused
     Pallas kernels (resident or HBM-streaming — the death tally is all
-    zeros and discarded).
+    zeros and discarded). ``bits`` are the callers' per-walker slot draws
+    (per-vertex key streams — see the module docstring).
     """
-    bits = jax.random.randint(key, pos.shape, 0, 1 << 30, jnp.int32)
     if step_impl == "xla":
         return uniform_successor(row_ptr, col_idx, deg, pos, bits)
     from repro.kernels import ops
@@ -176,9 +234,89 @@ def _segment_step(row_ptr, col_idx, deg, n, step_impl, pos, key):
     return nxt
 
 
+def _block_one_hot(pos, block_size, num_words):
+    """uint32[len(pos), num_words] — the visited-block bit of each walker's
+    current vertex (out-of-range blocks, i.e. graph-padding rows, contribute
+    no bit)."""
+    blk = (pos // block_size).astype(jnp.uint32)
+    word = blk >> 5
+    bit = (blk & jnp.uint32(31))[:, None]
+    eq = jnp.arange(num_words, dtype=jnp.uint32)[None, :] == word[:, None]
+    return eq.astype(jnp.uint32) << bit
+
+
+def _segment_walk_rows(row_ptr, col_idx, deg, n, step_impl, R, L,
+                       block_size, vertices, key):
+    """The one segment-walk program under every build and refresh path.
+
+    Walks the L-step segments of ``vertices`` — all ``R`` slots per row.
+    Randomness is per ``(vertex, step)``:
+    ``fold_in(fold_in(key, v), l)`` drawing the row's ``R`` slot bits at
+    shape ``(R,)``, so a row's stream is independent of the batch it is
+    walked in — full-shard builds, ``shard_map`` builds, and arbitrary
+    stale-row subsets all produce byte-identical cells.
+
+    Returns ``(endpoints[C, R], visited_masks[C, R, W])``. The mask ORs the
+    block bit of the *intermediate* vertices only (``p_1..p_{L-1}``): the
+    start's out-edge consumption is covered exactly — per vertex, not per
+    block — by the invalidator's source rule, so recording its block here
+    would only drag every block-mate of a mutated vertex stale, and the
+    endpoint consumes no edge at all.
+    """
+    C = vertices.shape[0]
+    row_keys = jax.vmap(lambda v: jax.random.fold_in(key, v))(vertices)
+    pos0 = jnp.repeat(vertices.astype(jnp.int32), R,
+                      total_repeat_length=C * R)
+    mask0 = jnp.zeros((pos0.shape[0], _MASK_WORDS), jnp.uint32)
+
+    def step(carry, l):
+        pos, mask = carry
+        ks = jax.vmap(lambda kk: jax.random.fold_in(kk, l))(row_keys)
+        bits = jax.vmap(
+            lambda kk: jax.random.randint(kk, (R,), 0, 1 << 30, jnp.int32)
+        )(ks)
+        nxt = _segment_step(row_ptr, col_idx, deg, n, step_impl, pos,
+                            bits.reshape(-1))
+        oh = _block_one_hot(nxt, block_size, _MASK_WORDS)
+        mask = jnp.where(l < L - 1, mask | oh, mask)
+        return (nxt, mask), None
+
+    (pos, mask), _ = jax.lax.scan(step, (pos0, mask0),
+                                  jnp.arange(L, dtype=jnp.int32))
+    return pos.reshape(C, R), mask.reshape(C, R, _MASK_WORDS)
+
+
+@functools.lru_cache(maxsize=None)
+def _row_walk_program(n, step_impl, R, L, block_size):
+    """The process-wide compiled row walker for one geometry.
+
+    Graph buffers are *traced operands*, not closure constants, so every
+    build, shard repair, and incremental refresh at the same geometry
+    shares one compile — a mutated graph at a new epoch re-dispatches the
+    cached program instead of re-tracing (only a changed ``col_idx``
+    length, i.e. a net edge-count change, costs a new trace). Wrapping
+    this in another ``jax.jit`` at a call site would inline and re-trace
+    it per wrapper; call it directly.
+    """
+
+    def run(row_ptr, col_idx, deg, vertices, key):
+        return _segment_walk_rows(row_ptr, col_idx, deg, n, step_impl,
+                                  R, L, block_size, vertices, key)
+
+    return jax.jit(run)
+
+
 @dataclasses.dataclass(frozen=True)
 class _ShardWalker:
-    """One fixed-shape compiled program reused for every shard's build."""
+    """Per-shard front-end over the cached :func:`_row_walk_program`.
+
+    ``block_size`` is ``segment_mask_block_size`` of the *real* vertex
+    count (``n`` here is the padded graph's, used only for kernel bounds);
+    padded rows' walks stay on their self-loops ≥ real n and fall outside
+    the mask range, contributing no bits. Call it directly — the row
+    program inside is already jitted and shared process-wide; wrapping the
+    call in ``jax.jit`` again would re-trace it per wrapper.
+    """
 
     row_ptr: jnp.ndarray
     col_idx: jnp.ndarray
@@ -186,21 +324,14 @@ class _ShardWalker:
     n: int
     shard_size: int
     cfg: WalkIndexConfig
+    block_size: int
 
-    def __call__(self, lo: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
-        R, L = self.cfg.segments_per_vertex, self.cfg.segment_len
-        pos0 = lo + jnp.repeat(
-            jnp.arange(self.shard_size, dtype=jnp.int32), R,
-            total_repeat_length=self.shard_size * R,
-        )
-
-        def step(pos, k):
-            nxt = _segment_step(self.row_ptr, self.col_idx, self.deg,
-                                self.n, self.cfg.step_impl, pos, k)
-            return nxt, None
-
-        pos, _ = jax.lax.scan(step, pos0, jax.random.split(key, L))
-        return pos.reshape(self.shard_size, R)
+    def __call__(self, lo: jnp.ndarray, key: jax.Array):
+        vs = lo + jnp.arange(self.shard_size, dtype=jnp.int32)
+        run = _row_walk_program(
+            self.n, self.cfg.step_impl, self.cfg.segments_per_vertex,
+            self.cfg.segment_len, self.block_size)
+        return run(self.row_ptr, self.col_idx, self.deg, vs, key)
 
 
 def build_walk_index(
@@ -228,17 +359,23 @@ def _build_walk_index(
     walker = _ShardWalker(
         row_ptr=gp.row_ptr, col_idx=gp.col_idx, deg=gp.out_deg, n=gp.n,
         shard_size=part.shard_size, cfg=cfg,
+        block_size=segment_mask_block_size(g.n),
     )
-    run = jax.jit(walker.__call__)
     rt = ShardRuntime(num_shards=cfg.num_shards, mesh=None)
-    blocks = rt.map_shards(
-        lambda s: np.asarray(
-            run(jnp.int32(part.bounds(s)[0]), jax.random.fold_in(key, s))))
-    endpoints = np.concatenate(blocks, axis=0)[: g.n]
+    # per-vertex key streams: every shard gets the same base key — the
+    # vertex id folded inside the walk program is the only stream selector.
+    pairs = rt.map_shards(
+        lambda s: jax.tree_util.tree_map(
+            np.asarray, walker(jnp.int32(part.bounds(s)[0]), key)))
+    endpoints = np.concatenate([p[0] for p in pairs], axis=0)[: g.n]
+    masks = np.concatenate([p[1] for p in pairs], axis=0)[: g.n]
     return WalkIndex(
         endpoints=jnp.asarray(endpoints, dtype=jnp.int32),
         segment_len=cfg.segment_len,
         seed=cfg.seed,
+        visited_blocks=masks.astype(np.uint32),
+        graph_epoch=int(getattr(g, "epoch", 0)),
+        mutation_offset=int(getattr(g, "mutation_offset", 0)),
     )
 
 
@@ -278,10 +415,11 @@ def _build_walk_index_sharded(
     Each device walks its own range shard's ``shard_size · R`` segment
     frogs and materializes only its ``[shard_size, R]`` slab block
     (``out_specs=P(axis_name)`` — device memory holds ``4nR/S`` bytes of
-    slab). The graph CSR is closed over (replicated); per-shard randomness
-    is ``fold_in(key, shard)`` via the runtime's :meth:`ShardRuntime.
-    shard_key`, so a shard's block is reproducible independent of mesh
-    shape.
+    slab). The graph CSR is closed over (replicated); randomness is the
+    per-vertex key stream (``fold_in(key, v)`` inside the shared walk
+    program — see the module docstring), so a shard's block is
+    byte-identical to the host loop's and to any row-subset rebuild,
+    independent of mesh shape.
 
     With ``directory`` set, every shard's block is persisted as its own
     atomic checkpoint (``save_walk_index_shard``) before the function
@@ -298,34 +436,37 @@ def _build_walk_index_sharded(
     gp, part = partition_graph(g, S)
     sz = part.shard_size
     R, L = cfg.segments_per_vertex, cfg.segment_len
+    bs = segment_mask_block_size(g.n)
     row_ptr, col_idx, deg = gp.row_ptr, gp.col_idx, gp.out_deg
 
     def body(key_data):
-        k = ShardRuntime.shard_key(key_data, axis_name)
+        k = jax.random.wrap_key_data(key_data, impl="threefry2x32")
         me = jax.lax.axis_index(axis_name)
-        pos0 = me * sz + jnp.repeat(
-            jnp.arange(sz, dtype=jnp.int32), R, total_repeat_length=sz * R)
-
-        def walk(pos, kk):
-            return _segment_step(row_ptr, col_idx, deg, gp.n,
-                                 cfg.step_impl, pos, kk), None
-
-        pos, _ = jax.lax.scan(walk, pos0, jax.random.split(k, L))
-        return pos.reshape(1, sz, R)
+        vs = me * sz + jnp.arange(sz, dtype=jnp.int32)
+        ep, mk = _segment_walk_rows(row_ptr, col_idx, deg, gp.n,
+                                    cfg.step_impl, R, L, bs, vs, k)
+        return ep.reshape(1, sz, R), mk.reshape(1, sz, R, _MASK_WORDS)
 
     # check_vma=False: jax has no replication rule for pallas_call, and the
     # fused step backends lower through one (the body is trivially
     # per-shard — nothing cross-device to check).
     fn = rt.sharded_call(body, num_sharded=0, num_replicated=1,
-                         check_vma=False)
-    blocks = np.asarray(fn(ShardRuntime.key_data(key)))      # [S, sz, R]
+                         num_outputs=2, check_vma=False)
+    ep, mk = fn(ShardRuntime.key_data(key))
+    blocks = np.asarray(ep)                       # [S, sz, R]
+    masks = np.asarray(mk).astype(np.uint32)      # [S, sz, R, W]
+    g_epoch = int(getattr(g, "epoch", 0))
+    g_offset = int(getattr(g, "mutation_offset", 0))
     if directory is not None:
         for s in range(S):
             save_walk_index_shard(
                 directory, s, S, g.n, blocks[s], cfg.segment_len, cfg.seed,
-                step=step)
+                step=step, visited_blocks=masks[s], graph_epoch=g_epoch,
+                mutation_offset=g_offset)
     sharded = ShardedWalkIndex(blocks=blocks, n=g.n,
-                               segment_len=cfg.segment_len, seed=cfg.seed)
+                               segment_len=cfg.segment_len, seed=cfg.seed,
+                               visited_blocks=masks, graph_epoch=g_epoch,
+                               mutation_offset=g_offset)
     return sharded.reassemble() if reassemble else sharded
 
 
@@ -333,11 +474,17 @@ def _build_walk_index_sharded(
 
 
 def _index_tree(index: WalkIndex) -> dict:
-    return {
+    tree = {
         "endpoints": index.endpoints,
         "segment_len": jnp.int32(index.segment_len),
         "seed": jnp.int32(index.seed),
+        "graph_epoch": jnp.int32(index.graph_epoch),
+        "mutation_offset": jnp.int32(index.mutation_offset),
     }
+    if index.visited_blocks is not None:
+        tree["visited_blocks"] = jnp.asarray(index.visited_blocks,
+                                             jnp.uint32)
+    return tree
 
 
 def save_walk_index_shard(
@@ -349,14 +496,20 @@ def save_walk_index_shard(
     segment_len: int,
     seed: int,
     step: int = 0,
+    *,
+    visited_blocks: Optional[np.ndarray] = None,
+    graph_epoch: int = 0,
+    mutation_offset: int = 0,
 ) -> str:
     """Atomic save of one shard's slab block through the runtime's
     per-shard checkpoint layout (``<directory>/shard_<s>/step_<k>/``) —
     each shard is an independent checkpoint dir, so a sharded build can
     persist (and crash/retry) one shard at a time without ever exposing a
-    torn slab."""
+    torn slab. ``graph_epoch`` / ``mutation_offset`` stamp the manifest
+    with the source graph's mutation provenance; ``visited_blocks`` rides
+    along when the build recorded per-segment masks."""
     block = jnp.asarray(block, dtype=jnp.int32)
-    return save_shard_checkpoint(directory, shard, {
+    tree = {
         "endpoints": block,
         "segment_len": jnp.int32(segment_len),
         "seed": jnp.int32(seed),
@@ -364,7 +517,12 @@ def save_walk_index_shard(
         "num_shards": jnp.int32(num_shards),
         "n": jnp.int32(n),
         "segments_per_vertex": jnp.int32(block.shape[1]),
-    }, step=step)
+        "graph_epoch": jnp.int32(graph_epoch),
+        "mutation_offset": jnp.int32(mutation_offset),
+    }
+    if visited_blocks is not None:
+        tree["visited_blocks"] = jnp.asarray(visited_blocks, jnp.uint32)
+    return save_shard_checkpoint(directory, shard, tree, step=step)
 
 
 def save_walk_index(directory: str, index: WalkIndex, step: int = 0) -> str:
@@ -393,10 +551,15 @@ def load_walk_index(
             if step is None:
                 raise FileNotFoundError(f"no walk index under {directory!r}")
         tree = load_checkpoint_tree(directory, step)
+        vb = tree.get("visited_blocks")
         index = WalkIndex(
             endpoints=jnp.asarray(tree["endpoints"], jnp.int32),
             segment_len=int(tree["segment_len"]),
             seed=int(tree["seed"]),
+            visited_blocks=(None if vb is None
+                            else np.asarray(vb, np.uint32)),
+            graph_epoch=int(tree.get("graph_epoch", 0)),
+            mutation_offset=int(tree.get("mutation_offset", 0)),
         )
         return index if reassemble else shard_walk_index(index, 1)
 
@@ -422,7 +585,8 @@ def load_walk_index(
 
 
 _ShardMeta = collections.namedtuple(
-    "_ShardMeta", ["num_shards", "n", "L", "seed", "R"])
+    "_ShardMeta",
+    ["num_shards", "n", "L", "seed", "R", "graph_epoch", "mutation_offset"])
 
 
 def _split_shard_trees(directory, trees):
@@ -456,7 +620,9 @@ def _shard_meta_consensus(directory, good, bad):
     metas = {
         s: _ShardMeta(int(t["num_shards"]), int(t["n"]),
                       int(t["segment_len"]), int(t["seed"]),
-                      int(t["segments_per_vertex"]))
+                      int(t["segments_per_vertex"]),
+                      int(t.get("graph_epoch", 0)),
+                      int(t.get("mutation_offset", 0)))
         for s, t in good.items()
     }
     if not metas:
@@ -472,34 +638,42 @@ def _shard_meta_consensus(directory, good, bad):
 
 
 def _assemble_sharded(good, meta, reassemble):
+    vb = None
+    if all("visited_blocks" in good[s] for s in range(meta.num_shards)):
+        vb = np.stack([np.asarray(good[s]["visited_blocks"])
+                       for s in range(meta.num_shards)]).astype(np.uint32)
     sharded = ShardedWalkIndex(
         blocks=np.stack([np.asarray(good[s]["endpoints"])
                          for s in range(meta.num_shards)]).astype(np.int32),
         n=meta.n, segment_len=meta.L, seed=meta.seed,
+        visited_blocks=vb, graph_epoch=meta.graph_epoch,
+        mutation_offset=meta.mutation_offset,
     )
     return sharded.reassemble() if reassemble else sharded
 
 
 def rebuild_shard_blocks(
     g: CSRGraph, cfg: WalkIndexConfig, shards: List[int]
-) -> Dict[int, np.ndarray]:
+) -> Dict[int, tuple]:
     """Rebuilds just the named shards' slab blocks with the build's exact
-    key stream (``fold_in(PRNGKey(cfg.seed), shard)`` over the
+    per-vertex key stream (``fold_in(PRNGKey(cfg.seed), v)`` over the
     ``partition_graph(g, cfg.num_shards)`` ranges) — byte-identical to the
     blocks the original host-loop *or* ``shard_map`` build produced, so a
-    quarantined shard can be regenerated without touching the others."""
+    quarantined shard can be regenerated without touching the others.
+    Returns ``{shard: (endpoints int32[sz, R], visited uint32[sz, R, W])}``.
+    """
     gp, part = partition_graph(g, cfg.num_shards)
     walker = _ShardWalker(
         row_ptr=gp.row_ptr, col_idx=gp.col_idx, deg=gp.out_deg, n=gp.n,
         shard_size=part.shard_size, cfg=cfg,
+        block_size=segment_mask_block_size(g.n),
     )
-    run = jax.jit(walker.__call__)
     key = jax.random.PRNGKey(cfg.seed)
-    return {
-        s: np.asarray(run(jnp.int32(part.bounds(s)[0]),
-                          jax.random.fold_in(key, s)))
-        for s in shards
-    }
+    out = {}
+    for s in shards:
+        ep, mk = walker(jnp.int32(part.bounds(s)[0]), key)
+        out[s] = (np.asarray(ep), np.asarray(mk).astype(np.uint32))
+    return out
 
 
 def load_or_repair_walk_index(
@@ -529,12 +703,21 @@ def load_or_repair_walk_index(
     if meta is None:
         # every shard is broken: fall back to the caller's config geometry
         meta = _ShardMeta(cfg.num_shards, g.n, cfg.segment_len, cfg.seed,
-                          cfg.segments_per_vertex)
+                          cfg.segments_per_vertex,
+                          int(getattr(g, "epoch", 0)),
+                          int(getattr(g, "mutation_offset", 0)))
     if meta.n != g.n:
         raise ValueError(
             f"walk index under {directory!r} was built for n={meta.n} but "
             f"the service graph has n={g.n}; refusing to repair across "
             f"graphs — point checkpoint_dir elsewhere or rebuild")
+    if meta.graph_epoch != int(getattr(g, "epoch", 0)):
+        raise ValueError(
+            f"walk index under {directory!r} was built at graph epoch "
+            f"{meta.graph_epoch} but the service graph is at epoch "
+            f"{int(getattr(g, 'epoch', 0))}; a repair would mix epochs — "
+            f"refresh the slab (repro.dynamic.refresh_walk_index) or "
+            f"rebuild at the current epoch")
     missing = sorted(set(range(meta.num_shards)) - set(good))
     broken = sorted(set(bad) | set(missing))
     if not broken:
@@ -551,8 +734,11 @@ def load_or_repair_walk_index(
     for s in broken:
         if os.path.isdir(shard_dir(directory, s)):
             quarantine_shard_dir(directory, s)
+        ep, mk = rebuilt[s]
         save_walk_index_shard(
-            directory, s, meta.num_shards, g.n, rebuilt[s], meta.L,
-            meta.seed, step=healthy_step)
-        good[s] = {"endpoints": rebuilt[s]}
+            directory, s, meta.num_shards, g.n, ep, meta.L,
+            meta.seed, step=healthy_step, visited_blocks=mk,
+            graph_epoch=meta.graph_epoch,
+            mutation_offset=meta.mutation_offset)
+        good[s] = {"endpoints": ep, "visited_blocks": mk}
     return _assemble_sharded(good, meta, reassemble)

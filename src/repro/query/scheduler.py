@@ -227,6 +227,7 @@ class QueryResult:
     degraded: bool = False           # some walks died on evicted shards
     shards_lost: Tuple[int, ...] = ()  # shards evicted while this query ran
     walks_lost: int = 0              # allocated walks that never tallied
+    epoch: int = 0                   # graph epoch this query was served on
 
 
 @dataclasses.dataclass(frozen=True)
@@ -281,6 +282,7 @@ class SchedulerStats:
     # the pool supervisor's stall-detection + health-scoring inputs.
     t_last_wave: Optional[float] = None   # time.monotonic() of last wave
     last_wave_s: Optional[float] = None   # wall time of that wave
+    epoch: int = 0                   # graph epoch this scheduler serves
 
 
 @dataclasses.dataclass
@@ -339,6 +341,10 @@ class QueryScheduler:
                 f"{sharded_dispatch!r}")
         self.g = g
         self.index = index
+        # the epoch this scheduler serves, pinned at construction: a
+        # mutation commit builds a *new* scheduler for e+1 and retires
+        # this one once its pinned queries settle (two-epoch serving).
+        self.epoch = int(getattr(g, "epoch", 0))
         self.max_walks = max_walks
         self.max_queries = max_queries
         self.max_steps = max_steps
@@ -1152,6 +1158,7 @@ class QueryScheduler:
             max_queries=self.max_queries,
             t_last_wave=self._t_last_wave,
             last_wave_s=self._last_wave_s,
+            epoch=self.epoch,
         )
 
     # --- anytime (ε, δ) refinement ---------------------------------------
@@ -1203,6 +1210,7 @@ class QueryScheduler:
             degraded=degraded,
             shards_lost=a.shards_lost,
             walks_lost=a.lost,
+            epoch=self.epoch,
         )
 
     # --- anytime introspection (the QueryHandle surface) ------------------

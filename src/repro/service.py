@@ -173,11 +173,19 @@ class QueryHandle:
     Handles are cooperative: any handle's ``poll()`` / ``result()``
     advances the shared scheduler, so all in-flight queries make progress
     together (continuous batching).
+
+    A handle pins the scheduler — and therefore the graph epoch and slab
+    — it was admitted on: a mutation commit (``apply_mutations``) swaps
+    the service's current scheduler for the new epoch's, but this handle
+    keeps finishing on its own, byte-identical to a run where no mutation
+    ever happened (the two-epoch serving contract).
     """
 
     def __init__(self, service: "FrogWildService", request: QueryRequest,
-                 decision):
+                 decision, scheduler: Optional[QueryScheduler] = None):
         self._service = service
+        self._sched = (scheduler if scheduler is not None
+                       else service.scheduler)
         self.request = request
         self.decision = decision
 
@@ -198,7 +206,7 @@ class QueryHandle:
             # close() cancels in-flight work; a handle outliving its
             # service reports that instead of resurrecting a scheduler.
             return "cancelled"
-        return self._service.scheduler.query_state(self.rid)
+        return self._sched.query_state(self.rid)
 
     def done(self) -> bool:
         return self.status() in ("finished", "cancelled", "rejected")
@@ -216,7 +224,7 @@ class QueryHandle:
             raise RuntimeError(
                 f"query {self.rid} is {st}"
                 + (f": {self.decision.reason}" if st == "rejected" else ""))
-        return self._service.scheduler.partial(self.rid)
+        return self._sched.partial(self.rid)
 
     def result(self, max_waves: Optional[int] = None) -> QueryResult:
         """Drives waves until this query finishes and returns its result."""
@@ -228,14 +236,14 @@ class QueryHandle:
         while True:
             st = self.status()
             if st == "finished":
-                return self._service.scheduler.result_for(self.rid)
+                return self._sched.result_for(self.rid)
             if st == "cancelled":
                 raise RuntimeError(f"query {self.rid} was cancelled")
             if st == "rejected":
                 # shard loss can shrink capacity after admission: the
                 # re-admission pass moves infeasible queued work here.
                 reason = next(
-                    (d.reason for d in self._service.scheduler.rejected
+                    (d.reason for d in self._sched.rejected
                      if d.rid == self.rid), "")
                 raise RuntimeError(
                     f"query {self.rid} rejected after admission: {reason}")
@@ -251,7 +259,7 @@ class QueryHandle:
         """Drops the query; False when it already finished (or never ran)."""
         if not self.admitted or self._service.closed:
             return False
-        return self._service.scheduler.cancel(self.rid)
+        return self._sched.cancel(self.rid)
 
     def join(self, epsilon: Optional[float] = None,
              delta: Optional[float] = None) -> "JoinedQueryHandle":
@@ -335,7 +343,7 @@ class JoinedQueryHandle:
             # the parent's certificate was issued at (ε_p ≤ ε, δ_p ≤ δ), so
             # it dominates the joiner's target: hand back the parent's
             # result object itself — byte-identical by construction.
-            self._result = parent._service.scheduler.result_for(parent.rid)
+            self._result = parent._sched.result_for(parent.rid)
             return True
         if st != "active":
             return False             # queued: no walks yet; cancelled /
@@ -343,7 +351,7 @@ class JoinedQueryHandle:
         if (self.epsilon, self.delta) == (parent.request.epsilon,
                                           parent.request.delta):
             return False             # identical target: settle with parent
-        sched = parent._service.scheduler
+        sched = parent._sched
         p = sched.partial(self.rid)
         if not p.walks_done:
             return False
@@ -360,7 +368,8 @@ class JoinedQueryHandle:
             num_steps=parent.decision.plan.num_steps, waves=p.waves,
             latency_s=time.perf_counter() - self._t_join,
             epsilon_bound=bound, early_stopped=True, degraded=p.degraded,
-            shards_lost=p.shards_lost, walks_lost=p.walks_lost)
+            shards_lost=p.shards_lost, walks_lost=p.walks_lost,
+            epoch=sched.epoch)
         return True
 
     def result(self, max_waves: Optional[int] = None) -> QueryResult:
@@ -422,6 +431,9 @@ class FrogWildService:
             self.runtime = None
         self._index = index
         self._scheduler: Optional[QueryScheduler] = None
+        # retired epochs' schedulers, kept alive until their last pinned
+        # query settles (two-epoch serving — see commit_epoch / step).
+        self._retiring: List[QueryScheduler] = []
         self._dg = None                  # cached DistributedGraph
         self._dg_key = None
         self._next_rid = 0
@@ -483,11 +495,12 @@ class FrogWildService:
         """
         if self._closed:
             return
-        sched = self._scheduler
-        if sched is not None:
-            for rid in ([e.req.rid for e in sched.queue]
-                        + [a.req.rid for a in sched.active.values()]):
-                sched.cancel(rid)
+        for sched in [self._scheduler] + self._retiring:
+            if sched is not None:
+                for rid in ([e.req.rid for e in sched.queue]
+                            + [a.req.rid for a in sched.active.values()]):
+                    sched.cancel(rid)
+        self._retiring = []
         self._scheduler = None
         self._index = None
         self._dg = None
@@ -567,6 +580,16 @@ class FrogWildService:
                         f"but the config wants "
                         f"({icfg.segments_per_vertex}, {icfg.segment_len});"
                         f" rebuild or point checkpoint_dir elsewhere")
+                if int(getattr(idx, "graph_epoch", 0)) != int(
+                        getattr(self.graph, "epoch", 0)):
+                    raise ValueError(
+                        f"walk index under {directory!r} was built at "
+                        f"graph epoch {idx.graph_epoch} but the service "
+                        f"graph is at epoch "
+                        f"{int(getattr(self.graph, 'epoch', 0))} — a stale "
+                        f"slab would serve wrong answers silently; refresh "
+                        f"it (repro.dynamic.refresh_walk_index / "
+                        f"load_epoch_index) or rebuild")
                 return idx
         if (S > 1 and self.runtime is not None and self.runtime.is_mesh
                 and self.runtime.num_shards == S):
@@ -730,8 +753,11 @@ class FrogWildService:
     def _submit_request(self, **kw) -> QueryHandle:
         req = QueryRequest(rid=self._next_rid, **kw)
         self._next_rid += 1
-        decision = self.scheduler._submit(req)
-        return QueryHandle(self, req, decision)
+        sched = self.scheduler
+        decision = sched._submit(req)
+        # the handle pins the scheduler (and so the epoch/slab) it was
+        # admitted on — an epoch commit never disturbs in-flight queries.
+        return QueryHandle(self, req, decision, scheduler=sched)
 
     def resubmit(self, req: QueryRequest) -> QueryHandle:
         """Submits a fresh copy of ``req`` (new rid, new latency clock) —
@@ -747,10 +773,95 @@ class FrogWildService:
             allow_downgrade=req.allow_downgrade, early_stop=req.early_stop)
 
     def step(self) -> bool:
-        """Runs one device wave; False when nothing is in flight."""
-        return self.scheduler.step_wave()
+        """Runs one device wave; False when nothing is in flight.
+
+        Drives the current epoch's scheduler first, then any retiring
+        epochs still carrying pinned queries; a retiring scheduler whose
+        last pinned query has settled is released here (its handles keep
+        their own references for ``result_for``).
+        """
+        progressed = self.scheduler.step_wave()
+        for sched in list(self._retiring):
+            if sched.queue or sched.active:
+                progressed = sched.step_wave() or progressed
+            if not sched.queue and not sched.active:
+                self._retiring.remove(sched)
+        return progressed
 
     def drain(self) -> List[QueryResult]:
         """Drives waves until queue + slots are empty; returns all results
         finished so far (in finish order)."""
+        while self._retiring and self.step():
+            pass
         return self.scheduler._drain()
+
+    # --- dynamic graphs (epoch lifecycle) ---------------------------------
+
+    @property
+    def graph_epoch(self) -> int:
+        """The mutation epoch new admissions land on."""
+        return int(getattr(self.graph, "epoch", 0))
+
+    @property
+    def retiring_epochs(self) -> List[int]:
+        """Epochs still draining pinned queries (oldest first)."""
+        return [s.epoch for s in self._retiring]
+
+    def commit_epoch(self, graph: CSRGraph, index) -> int:
+        """Swaps serving to ``(graph, index)`` at the next epoch.
+
+        The current scheduler — if it still carries queued or active
+        queries — moves to the retiring list and keeps draining through
+        :meth:`step`; its handles finish byte-identically to a
+        never-mutated run (each scheduler owns its key stream, seeded
+        identically). New admissions land on the new epoch immediately.
+        Returns the committed epoch.
+        """
+        self._check_open()
+        if graph.n != self.graph.n:
+            raise ValueError(
+                f"epoch commit cannot change the vertex count "
+                f"({self.graph.n} → {graph.n})")
+        if int(getattr(index, "graph_epoch", 0)) != int(graph.epoch):
+            raise ValueError(
+                f"slab epoch {getattr(index, 'graph_epoch', 0)} does not "
+                f"match graph epoch {graph.epoch} — refusing a mismatched "
+                f"commit")
+        icfg = self.config.walk_index()
+        if (index.segments_per_vertex != icfg.segments_per_vertex
+                or index.segment_len != icfg.segment_len):
+            raise ValueError(
+                f"slab geometry (R, L) = ({index.segments_per_vertex}, "
+                f"{index.segment_len}) does not match the service config "
+                f"({icfg.segments_per_vertex}, {icfg.segment_len})")
+        old = self._scheduler
+        if old is not None and (old.queue or old.active):
+            self._retiring.append(old)
+        self._scheduler = None
+        self.graph = graph
+        self._index = index
+        self._dg = None
+        self._dg_key = None
+        return int(graph.epoch)
+
+    def apply_mutations(self, batch, *, chunk: int = 1024):
+        """Applies one mutation batch end-to-end: compact the CSR at
+        ``epoch + 1``, incrementally refresh exactly the invalidated walk
+        segments, persist the new slab under its epoch directory (when a
+        checkpoint dir is configured), and commit the two-epoch swap.
+        Returns the :class:`repro.dynamic.RefreshReport`.
+        """
+        from repro.dynamic import (apply_mutations as _apply,
+                                   refresh_walk_index, save_epoch_index)
+
+        self._check_open()
+        index = self.ensure_index()
+        new_graph, changed = _apply(self.graph, batch)
+        new_index, report = refresh_walk_index(
+            index, new_graph, changed,
+            step_impl=self.config.walk_index().step_impl, chunk=chunk)
+        directory = self.config.serving.checkpoint_dir
+        if directory is not None:
+            save_epoch_index(directory, new_index)
+        self.commit_epoch(new_graph, new_index)
+        return report

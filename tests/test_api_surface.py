@@ -11,6 +11,7 @@ import pytest
 
 import repro
 import repro.configs
+import repro.dynamic
 import repro.gateway
 import repro.query
 import repro.service
@@ -74,6 +75,19 @@ SURFACE = {
         "save_walk_index_shard",
         "shard_walk_index",
         "walk_wave",
+    ],
+    repro.dynamic: [
+        "MutationBatch",
+        "MutationLog",
+        "RefreshReport",
+        "apply_mutations",
+        "dirty_block_mask",
+        "epoch_dir",
+        "invalidate_segments",
+        "list_epochs",
+        "load_epoch_index",
+        "refresh_walk_index",
+        "save_epoch_index",
     ],
     repro.configs: [
         "GRAPHS",

@@ -1,0 +1,312 @@
+"""Dynamic graphs: mutation semantics, invalidation soundness, incremental
+refresh byte-identity, epoch'd checkpoints, and two-epoch serving."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (RuntimeConfig, ServingConfig, ShardConfig,
+                          WalkIndexConfig)
+from repro.dynamic import (MutationBatch, MutationLog, apply_mutations,
+                           invalidate_segments, list_epochs,
+                           load_epoch_index, refresh_walk_index,
+                           save_epoch_index)
+from repro.graph.csr import CSRGraph, load_graph, save_graph
+from repro.graph.generators import uniform_random
+from repro.query.index import (_build_walk_index, load_or_repair_walk_index,
+                               save_walk_index, segment_mask_block_size,
+                               shard_walk_index)
+from repro.service import FrogWildService
+
+
+def _cfg(R=4, L=3, S=2):
+    return WalkIndexConfig(segments_per_vertex=R, segment_len=L,
+                           num_shards=S)
+
+
+# --- mutation application ----------------------------------------------------
+
+
+def test_apply_mutations_semantics():
+    g = uniform_random(64, 4.0, seed=1)
+    v = 5
+    succ = list(g.successors(v))
+    batch = MutationBatch.edges(insert=[(7, 30), (v, 11)],
+                                delete=[(v, succ[0])])
+    g2, changed = apply_mutations(g, batch)
+    assert g2.epoch == g.epoch + 1
+    assert g2.mutation_offset == g.mutation_offset + 3
+    assert set(changed) == {5, 7}
+    # delete removes the FIRST occurrence; insert appends at the end
+    assert list(g2.successors(v)) == succ[1:] + [11]
+    assert list(g2.successors(7)) == list(g.successors(7)) + [30]
+    # untouched vertices keep their successor lists verbatim (order incl.)
+    for u in range(g.n):
+        if u not in (5, 7):
+            assert np.array_equal(g.successors(u), g2.successors(u))
+    # the original graph object is untouched (epochs are immutable)
+    assert list(g.successors(v)) == succ and g.epoch == 0
+
+
+def test_apply_mutations_loud_errors_and_dangling():
+    g = uniform_random(32, 3.0, seed=2)
+    absent = next(d for d in range(g.n)
+                  if d not in set(int(x) for x in g.successors(0)))
+    with pytest.raises(ValueError, match="absent edge"):
+        apply_mutations(g, MutationBatch.edges(delete=[(0, absent)]))
+    with pytest.raises(ValueError, match="outside"):
+        apply_mutations(g, MutationBatch.edges(insert=[(0, g.n)]))
+    # deleting every out-edge triggers the build_csr dangling repair
+    v = 3
+    batch = MutationBatch.edges(delete=[(v, int(d)) for d in g.successors(v)])
+    g2, changed = apply_mutations(g, batch)
+    assert v in changed
+    t = (v * 2654435761 + 12345) % g.n
+    if t == v:
+        t = (t + 1) % g.n
+    assert list(g2.successors(v)) == [t]
+    assert int(np.asarray(g2.out_deg).min()) > 0
+
+
+def test_mutation_log_replay():
+    g = uniform_random(48, 4.0, seed=3)
+    b1 = MutationBatch.edges(insert=[(1, 2)])
+    b2 = MutationBatch.edges(insert=[(9, 9)], delete=[(1, 2)])
+    log = MutationLog()
+    assert log.append(b1) == 1 and log.append(b2) == 2
+    assert log.offset == 3
+    g2, changed = log.replay(g)
+    assert g2.epoch == 2 and g2.mutation_offset == 3
+    assert {1, 9} <= set(changed)
+    # resume mid-log: a graph already at epoch 1 replays only batch 2
+    g1, _ = apply_mutations(g, b1)
+    g2b, _ = log.replay(g1)
+    assert np.array_equal(np.asarray(g2b.col_idx), np.asarray(g2.col_idx))
+    with pytest.raises(ValueError, match="outside log range"):
+        log.replay(CSRGraph(n=g.n, row_ptr=g.row_ptr, col_idx=g.col_idx,
+                            out_deg=g.out_deg, epoch=7))
+
+
+# --- invalidation soundness + refresh byte-identity (property-checked) -------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_invalidation_sound_and_refresh_equals_rebuild(seed):
+    """The acceptance property: segments NOT marked stale are byte-identical
+    under the new graph, and the refreshed slab equals a from-scratch build
+    at the new epoch — endpoints and visited masks both."""
+    rng = np.random.default_rng(seed)
+    g = uniform_random(96, 4.0, seed=seed)
+    cfg = _cfg()
+    idx = _build_walk_index(g, cfg)
+    k = int(rng.integers(1, 4))
+    ins = [(int(rng.integers(g.n)), int(rng.integers(g.n)))
+           for _ in range(k)]
+    dels = []
+    for _ in range(k):
+        v = int(rng.integers(g.n))
+        succ = g.successors(v)
+        dels.append((v, int(succ[rng.integers(len(succ))])))
+    # a delete can name an edge twice; keep the batch consistent
+    batch = MutationBatch.edges(insert=ins, delete=list(dict.fromkeys(dels)))
+    g2, changed = apply_mutations(g, batch)
+    stale = invalidate_segments(idx, changed)
+    full = _build_walk_index(g2, cfg)
+    old_ep, new_ep = np.asarray(idx.endpoints), np.asarray(full.endpoints)
+    assert np.array_equal(old_ep[~stale], new_ep[~stale]), (
+        "unsound invalidation: a non-stale segment changed")
+    new_idx, report = refresh_walk_index(idx, g2, changed, chunk=17)
+    assert np.array_equal(np.asarray(new_idx.endpoints), new_ep)
+    assert np.array_equal(new_idx.visited_blocks, full.visited_blocks)
+    assert new_idx.graph_epoch == 1
+    assert report.segments_rebuilt == int(stale.sum())
+    assert report.stale_rows == len(np.unique(np.nonzero(stale)[0]))
+
+
+def test_refresh_sharded_roundtrip_and_sparsity():
+    """A sharded slab refreshes in place (same shard count) and a localized
+    mutation invalidates far fewer segments than the slab holds."""
+    g = uniform_random(256, 4.0, seed=5)
+    cfg = _cfg(R=4, L=2, S=4)
+    sharded = shard_walk_index(_build_walk_index(g, cfg), 4)
+    # n = 256 ⇒ one vertex per mask block: invalidation is exact
+    assert segment_mask_block_size(g.n) == 1
+    v = 17
+    batch = MutationBatch.edges(insert=[(v, 200)])
+    g2, changed = apply_mutations(g, batch)
+    new_idx, report = refresh_walk_index(sharded, g2, changed)
+    assert new_idx.num_shards == 4
+    full = shard_walk_index(_build_walk_index(g2, cfg), 4)
+    assert np.array_equal(new_idx.blocks, full.blocks)
+    assert np.array_equal(new_idx.visited_blocks, full.visited_blocks)
+    # exactly the segments that sourced at — or walked through — v
+    assert report.segments_rebuilt < report.total_segments // 4
+
+
+def test_refresh_refuses_mismatched_pairs():
+    g = uniform_random(64, 4.0, seed=6)
+    idx = _build_walk_index(g, _cfg())
+    with pytest.raises(ValueError, match="not ahead"):
+        refresh_walk_index(idx, g, np.array([1]))
+    legacy = _build_walk_index(g, _cfg())
+    legacy = type(legacy)(endpoints=legacy.endpoints,
+                          segment_len=legacy.segment_len, seed=legacy.seed,
+                          visited_blocks=None)
+    g2, changed = apply_mutations(g, MutationBatch.edges(insert=[(0, 1)]))
+    with pytest.raises(ValueError, match="visited_blocks"):
+        refresh_walk_index(legacy, g2, changed)
+
+
+# --- epoch provenance: graph npz + walk-index checkpoints --------------------
+
+
+def test_graph_npz_epoch_roundtrip(tmp_path):
+    g = uniform_random(32, 3.0, seed=7)
+    g2, _ = apply_mutations(g, MutationBatch.edges(insert=[(0, 5)]))
+    p = save_graph(str(tmp_path / "g.npz"), g2)
+    loaded = load_graph(p)
+    assert loaded.epoch == 1 and loaded.mutation_offset == 1
+    assert np.array_equal(np.asarray(loaded.col_idx), np.asarray(g2.col_idx))
+    # pre-epoch files (no epoch leaf) load at the never-mutated provenance
+    gn = g.to_numpy()
+    np.savez_compressed(str(tmp_path / "legacy.npz"), n=np.int64(g.n),
+                        row_ptr=gn.row_ptr, col_idx=gn.col_idx)
+    legacy = load_graph(str(tmp_path / "legacy.npz"))
+    assert legacy.epoch == 0 and legacy.mutation_offset == 0
+
+
+def test_epoch_checkpoint_roundtrip_and_loud_mismatch(tmp_path):
+    g = uniform_random(64, 4.0, seed=8)
+    idx = _build_walk_index(g, _cfg())
+    g2, changed = apply_mutations(g, MutationBatch.edges(insert=[(3, 4)]))
+    idx2, _ = refresh_walk_index(idx, g2, changed)
+    d = str(tmp_path / "ckpt")
+    save_epoch_index(d, idx)
+    save_epoch_index(d, idx2)
+    assert list_epochs(d) == [0, 1]
+    for epoch, want in ((0, idx), (1, idx2)):
+        got = load_epoch_index(d, epoch)
+        assert got.graph_epoch == epoch
+        assert np.array_equal(np.asarray(got.endpoints),
+                              np.asarray(want.endpoints))
+        assert np.array_equal(got.visited_blocks, want.visited_blocks)
+        assert got.mutation_offset == want.mutation_offset
+    # sharded layout round-trips too
+    sh = shard_walk_index(idx2, 2)
+    d2 = str(tmp_path / "ckpt_sharded")
+    save_epoch_index(d2, sh)
+    got = load_epoch_index(d2, 1, reassemble=False)
+    assert got.num_shards == 2 and got.graph_epoch == 1
+    assert np.array_equal(got.blocks, sh.blocks)
+    with pytest.raises(FileNotFoundError):
+        load_epoch_index(d, 5)
+    # a slab whose manifest claims a different epoch fails loudly
+    from repro.dynamic import epoch_dir
+    os.rename(epoch_dir(d, 1), epoch_dir(d, 3))
+    with pytest.raises(ValueError, match="claims graph_epoch"):
+        load_epoch_index(d, 3)
+
+
+def test_load_or_repair_refuses_stale_epoch(tmp_path):
+    g = uniform_random(64, 4.0, seed=9)
+    cfg = _cfg(S=2)
+    d = str(tmp_path / "shards")
+    sh = shard_walk_index(_build_walk_index(g, cfg), 2)
+    save_epoch_index(d, sh)          # epoch_000000/shard_*/...
+    g2, _ = apply_mutations(g, MutationBatch.edges(insert=[(0, 1)]))
+    from repro.dynamic import epoch_dir
+    with pytest.raises(ValueError, match="graph epoch"):
+        load_or_repair_walk_index(epoch_dir(d, 0), g2, cfg)
+
+
+def test_service_refuses_stale_checkpoint(tmp_path):
+    g = uniform_random(64, 4.0, seed=10)
+    cfg = _cfg(S=1)
+    d = str(tmp_path / "ckpt")
+    save_walk_index(d, _build_walk_index(g, cfg))
+    g2, _ = apply_mutations(g, MutationBatch.edges(insert=[(0, 1)]))
+    rc = RuntimeConfig(
+        runtime=ShardConfig(num_shards=1),
+        serving=ServingConfig(segments_per_vertex=4, segment_len=3,
+                              build_shards=1, checkpoint_dir=d))
+    svc = FrogWildService.open(g2, rc)
+    with pytest.raises(ValueError, match="stale slab|graph epoch"):
+        svc.ensure_index()
+
+
+# --- two-epoch serving (epoch pinning under concurrency) ---------------------
+
+
+def _service(g, S=2, **serving_kw):
+    rc = RuntimeConfig(
+        runtime=ShardConfig(num_shards=S),
+        serving=ServingConfig(segments_per_vertex=6, segment_len=3,
+                              build_shards=S, max_walks=256, max_queries=2,
+                              max_steps=32, **serving_kw))
+    return FrogWildService.open(g, rc)
+
+
+def test_epoch_pinning_under_concurrency():
+    """A query in flight across an epoch commit finishes byte-identically
+    to a run where no mutation ever happened, while new admissions land on
+    the new epoch."""
+    g = uniform_random(128, 4.0, seed=11)
+    batch = MutationBatch.edges(insert=[(2, 100), (70, 3)])
+
+    # control: same query on a never-mutated service
+    ctrl = _service(g)
+    hc = ctrl.topk(k=8, epsilon=0.5, delta=0.2, num_walks=4 * 256,
+                   early_stop=False)
+    rc_ = hc.result()
+
+    svc = _service(g)
+    h1 = svc.topk(k=8, epsilon=0.5, delta=0.2, num_walks=4 * 256,
+                  early_stop=False)
+    h1.poll()                         # in flight (spans multiple waves)
+    assert h1.status() in ("active", "queued")
+    report = svc.apply_mutations(batch)
+    assert report.epoch == 1
+    assert svc.graph_epoch == 1
+    assert svc.retiring_epochs == [0]
+    h2 = svc.topk(k=8, epsilon=0.5, delta=0.2)
+    r1 = h1.result()
+    r2 = h2.result()
+    assert r1.epoch == 0 and r2.epoch == 1
+    # byte-identical to the never-mutated control
+    assert np.array_equal(r1.vertices, rc_.vertices)
+    assert np.array_equal(r1.scores, rc_.scores)
+    assert r1.num_walks == rc_.num_walks
+    # the retired epoch is released once its last pinned query settled
+    svc.step()
+    assert svc.retiring_epochs == []
+    assert svc.serving_stats().epoch == 1
+    svc.close()
+    ctrl.close()
+
+
+def test_service_apply_mutations_persists_epoch(tmp_path):
+    g = uniform_random(96, 4.0, seed=12)
+    d = str(tmp_path / "ckpt")
+    svc = _service(g, checkpoint_dir=d)
+    svc.ensure_index()
+    report = svc.apply_mutations(MutationBatch.edges(insert=[(1, 2)]))
+    assert report.epoch == 1
+    assert list_epochs(d) == [1]
+    got = load_epoch_index(d, 1, reassemble=False)
+    assert np.array_equal(got.blocks, svc.ensure_index().blocks)
+    svc.close()
+
+
+def test_commit_epoch_refuses_mismatches():
+    g = uniform_random(64, 4.0, seed=13)
+    svc = _service(g)
+    idx = svc.ensure_index()
+    g2, changed = apply_mutations(g, MutationBatch.edges(insert=[(0, 1)]))
+    with pytest.raises(ValueError, match="does not match graph epoch"):
+        svc.commit_epoch(g2, idx)     # stale slab at epoch 0
+    small = uniform_random(32, 3.0, seed=13)
+    with pytest.raises(ValueError, match="vertex count"):
+        svc.commit_epoch(small, idx)
+    svc.close()

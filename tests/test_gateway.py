@@ -338,3 +338,57 @@ def test_http_front_end_serves_queries_health_and_metrics(gw):
         with pytest.raises(urllib.error.HTTPError) as e:
             _get(srv.url + "/nope")
         assert e.value.code == 404
+
+
+# --- dynamic graphs through the tier (PR 10) ---------------------------------
+
+
+def test_mutation_stream_orphans_certificates_and_refreshes_replicas():
+    """apply_mutations through the gateway: the cache's old-epoch
+    certificates are orphaned (counted twice — gateway metric and cache
+    stat), replicas serve the new epoch, and a repeat of a previously
+    cached query goes live."""
+    from repro.dynamic import MutationBatch
+
+    g = _graph(n=128, seed=7)
+    with Gateway.open(g, _rc(), replicas=2) as gw2:
+        r1 = gw2.topk(k=8, epsilon=EPS_OK, delta=0.1).result()
+        assert gw2.topk(k=8, epsilon=EPS_OK, delta=0.1).source == "cache"
+        report = gw2.apply_mutations(MutationBatch.edges(insert=[(1, 100)]))
+        assert report.epoch == 1
+        assert report.segments_rebuilt == report.stale_segments
+        assert gw2.epoch == 1
+        assert gw2.metrics.epoch_orphaned >= 1
+        assert gw2.cache.stats()["epoch_evictions"] >= 1
+        s = gw2.stats()
+        assert s["graph_epoch"] == 1
+        assert s["epoch_orphaned"] >= 1
+        h = gw2.topk(k=8, epsilon=EPS_OK, delta=0.1)
+        assert h.source == "live"                 # stale cert orphaned
+        r2 = h.result()
+        assert r1.epoch == 0 and r2.epoch == 1
+
+
+def test_inflight_gateway_query_spans_epoch_commit():
+    """A live query admitted before the mutation finishes on its pinned
+    epoch-0 slab, byte-identical to a gateway that never mutated — and
+    its stale certificate is refused at cache-insert time."""
+    from repro.dynamic import MutationBatch
+
+    g = _graph(n=128, seed=8)
+    with Gateway.open(g, _rc(), replicas=1) as ctrl:
+        rc_ = ctrl.topk(k=8, epsilon=EPS_OK, delta=0.1).result()
+    with Gateway.open(g, _rc(), replicas=1) as gw2:
+        h = gw2.topk(k=8, epsilon=EPS_OK, delta=0.1)
+        assert h.source == "live"
+        gw2.apply_mutations(
+            MutationBatch.edges(insert=[(3, 90), (60, 5)]))
+        r = h.result()
+        assert r.epoch == 0
+        assert np.array_equal(r.vertices, rc_.vertices)
+        assert np.array_equal(r.scores, rc_.scores)
+        assert r.num_walks == rc_.num_walks
+        # the old-epoch certificate never entered the cache: the same
+        # query at the new epoch must go live, not hit
+        assert gw2.cache.stats()["rejected_inserts"] >= 1
+        assert gw2.topk(k=8, epsilon=EPS_OK, delta=0.1).source == "live"

@@ -146,11 +146,12 @@ def test_stitched_distribution_matches_direct():
         row_ptr=g.row_ptr, col_idx=g.col_idx, deg=g.out_deg, n=n,
         shard_size=n,
         cfg=WalkIndexConfig(segments_per_vertex=R, segment_len=L,
-                            num_shards=1))
+                            num_shards=1),
+        block_size=1)
 
     def stitched(k, pos, impl):
         k_build, k_walk = jax.random.split(k)
-        endpoints = walker(jnp.int32(0), k_build)
+        endpoints, _ = walker(jnp.int32(0), k_build)
         out, _ = walk_wave(g.row_ptr, g.col_idx, g.out_deg, endpoints,
                            pos, tau, k_walk, L, t_max // L, impl=impl)
         return out

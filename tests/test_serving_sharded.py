@@ -108,7 +108,13 @@ def test_sharded_vs_gathered_statistical_equivalence():
         df = max(int(support.sum()) - 1, 1)
         assert x2 < df + 4.0 * np.sqrt(2 * df), (kind, x2, df)
         tv = 0.5 * np.abs(a / a.sum() - b / b.sum()).sum()
-        assert tv < 0.05, (kind, tv)
+        # sample-size-aware bound: for two independent multinomial samples
+        # of size A ≈ B over these cells, E[TV] ≈ Σ√(pᵢ(1−pᵢ)) / √(πA) —
+        # a fixed 0.05 sits right at that noise floor and flips on the
+        # realized seeds, not on any distributional difference.
+        p = (a + b) / (a + b).sum()
+        e_tv = float(np.sqrt(p * (1 - p)).sum() / np.sqrt(np.pi * a.sum()))
+        assert tv < 1.5 * e_tv, (kind, tv, e_tv)
 
 
 def test_sharded_index_checkpoint_roundtrip_no_reassembly(tmp_path):
